@@ -1,0 +1,27 @@
+"""Paper Fig. 6: per-sample latency vs bandwidth at B=8 (crossover study)."""
+from repro.core.costmodel import EdgeCostModel
+
+
+def run():
+    m = EdgeCostModel()
+    B = 8
+    local = m.local(B)["per_sample_ms"]
+    print("# Fig. 6 — per-sample latency vs bandwidth at B=8")
+    print(f"{'BW Mbps':>8} {'prism':>8} {'voltage':>8} {'local':>8} {'win':>6}")
+    out = []
+    crossover = None
+    for bw in (200, 250, 300, 340, 400, 500, 600, 700, 800, 900):
+        pr = m.distributed(B, bw, 2, 10)["per_sample_ms"]
+        vo = m.distributed(B, bw, 2, None)["per_sample_ms"]
+        win = "dist" if pr < local else "local"
+        if crossover is None and pr < local:
+            crossover = bw
+        print(f"{bw:>8} {pr:8.1f} {vo:8.1f} {local:8.1f} {win:>6}")
+        out.append({"bw": bw, "prism_ms": round(pr, 1),
+                    "voltage_ms": round(vo, 1), "local_ms": round(local, 1)})
+    print(f"bandwidth crossover: {crossover} Mbps (paper: ≈340, Fig. 6)")
+    return {"rows": out, "crossover_mbps": crossover}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,25 @@
+"""Paper §3.3 / §5.5: the one-time profiling sweep cost and the resulting
+performance map + derived crossovers."""
+from repro.core.policy import AdaptivePolicy
+from repro.core.profiler import SweepSpec, profile_simulated, sweep_cost
+
+
+def run():
+    spec = SweepSpec()
+    pm = profile_simulated(spec=spec)
+    pol = AdaptivePolicy(pm)
+    print("# Profiling sweep (paper §3.3)")
+    print(f"grid: |B|={len(spec.batches)} × |CR|={len(spec.crs)} × "
+          f"|BW|={len(spec.bandwidths_mbps)} × T={spec.warmup_runs} "
+          f"= {sweep_cost(spec)} passes")
+    print(f"performance-map entries: {len(pm)}")
+    bc = pol.batch_crossover(400.0)
+    bwc = pol.bandwidth_crossover(8)
+    print(f"batch crossover @400 Mbps: {bc} (paper: 8)")
+    print(f"bandwidth crossover @B=8: {bwc} Mbps (paper: ≈340)")
+    return {"sweep_passes": sweep_cost(spec), "entries": len(pm),
+            "batch_crossover": bc, "bandwidth_crossover_mbps": bwc}
+
+
+if __name__ == "__main__":
+    run()

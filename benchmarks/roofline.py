@@ -1,0 +1,67 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/<mesh>/*.json and prints, per (arch × shape × mesh):
+the three terms, the dominant bottleneck, MODEL_FLOPS / HLO_FLOPs, and the
+HBM fit.
+"""
+import glob
+import json
+import os
+
+from repro.core.costmodel import TPU_HBM_GB
+
+
+def load_records(root="artifacts/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(root, "*", "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def dominant(roof):
+    terms = {"compute": roof["compute_s"], "memory": roof["memory_s"],
+             "collective": roof["collective_s"]}
+    return max(terms, key=terms.get)
+
+
+def run(root="artifacts/dryrun", mesh_filter=None):
+    recs = load_records(root)
+    if mesh_filter:
+        recs = [r for r in recs if r["mesh"] == mesh_filter]
+    if not recs:
+        print("no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all --both-meshes` first")
+        return []
+    print("# Roofline terms per (arch × shape × mesh) — seconds per step")
+    print(f"{'arch':>21} {'shape':<12} {'mesh':<8} {'mode':<8} "
+          f"{'compute_s':>10} {'memory_s':>10} {'collect_s':>10} "
+          f"{'bound':>10} {'useful':>7} {'mem/dev':>8} {'fits':>5}")
+    out = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        roof = r["roofline"]
+        dom = dominant(roof)
+        mem_gb = r["memory"]["per_device_total_bytes"] / 1e9
+        print(f"{r['arch']:>21} {r['shape']:<12} {r['mesh']:<8} "
+              f"{r['mode']:<8} {roof['compute_s']:10.4f} "
+              f"{roof['memory_s']:10.4f} {roof['collective_s']:10.4f} "
+              f"{dom:>10} {r['useful_flops_ratio']:7.3f} {mem_gb:8.2f} "
+              f"{str(r['memory']['fits_16gb'])[:1]:>5}")
+        out.append({"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                    "mode": r["mode"], "dominant": dom,
+                    "compute_s": roof["compute_s"],
+                    "memory_s": roof["memory_s"],
+                    "collective_s": roof["collective_s"],
+                    "useful_ratio": r["useful_flops_ratio"],
+                    "mem_gb": mem_gb,
+                    "fits": bool(r["memory"]["fits_16gb"])})
+    n_fit = sum(1 for o in out if o["fits"])
+    print(f"\n{len(out)} cells; {n_fit} fit in {TPU_HBM_GB:.0f} GB; "
+          f"bottlenecks: " + ", ".join(
+              f"{b}={sum(1 for o in out if o['dominant'] == b)}"
+              for b in ("compute", "memory", "collective")))
+    return out
+
+
+if __name__ == "__main__":
+    run()

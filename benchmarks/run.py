@@ -1,0 +1,59 @@
+"""Benchmark runner: one section per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the ViT accuracy training experiment")
+    ap.add_argument("--out", default="artifacts/bench")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    results = {}
+
+    from benchmarks import (fig6_bandwidth, profiling_cost, roofline,
+                            table2_breakdown, table3_efficiency, table4_gains)
+
+    sections = [
+        ("table2_breakdown", table2_breakdown.run),
+        ("table3_efficiency", table3_efficiency.run),
+        ("table4_gains", table4_gains.run),
+        ("fig6_bandwidth", fig6_bandwidth.run),
+        ("profiling_cost", profiling_cost.run),
+        ("roofline", roofline.run),
+    ]
+    if not args.fast:
+        from benchmarks import accuracy_prism
+        sections.append(("accuracy_prism", accuracy_prism.run))
+
+    for name, fn in sections:
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            results[name] = fn()
+            print(f"[{name}: {time.time() - t0:.1f}s]")
+        except Exception as e:     # keep the suite going; record the failure
+            import traceback
+            traceback.print_exc()
+            results[name] = {"error": repr(e)}
+
+    with open(os.path.join(args.out, "results.json"), "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"\nwrote {os.path.join(args.out, 'results.json')}")
+    failed = [k for k, v in results.items()
+              if isinstance(v, dict) and "error" in v]
+    if failed:
+        print("FAILED sections:", failed)
+        sys.exit(1)
+    print("ALL BENCHMARK SECTIONS COMPLETED")
+
+
+if __name__ == "__main__":
+    main()

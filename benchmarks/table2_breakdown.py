@@ -1,0 +1,40 @@
+"""Paper Table 2: latency breakdown across execution modes (edge simulator,
+Jetson/GLOO/WiFi constants — DESIGN.md §6)."""
+from repro.core.costmodel import EdgeCostModel
+
+PAPER = {
+    "local": {1: 80.6, 2: 141.3, 4: 249.8, 8: 485.0, 16: 946.0, 32: 1864.8},
+    "prism": {1: 168.1, 2: 196.4, 4: 252.9, 8: 414.7, 16: 704.7, 32: 1339.8},
+    "voltage": {1: 351.0, 2: 497.5, 4: 806.0, 8: 1288.0, 16: 2274.5,
+                32: 3843.0},
+}
+
+
+def run():
+    m = EdgeCostModel()
+    rows = []
+    for B in (1, 2, 4, 8, 16, 32):
+        rows.append(("local", B, m.local(B), PAPER["local"][B]))
+    for B in (1, 2, 4, 8, 16, 32):
+        rows.append(("prism", B, m.distributed(B, 400, 2, 10),
+                     PAPER["prism"][B]))
+    for B in (1, 2, 4, 8, 16, 32):
+        rows.append(("voltage", B, m.distributed(B, 400, 2, None),
+                     PAPER["voltage"][B]))
+    print("# Table 2 — latency breakdown (ms), simulator vs paper")
+    print(f"{'mode':>8} {'B':>3} {'comp':>8} {'staging':>8} {'comm':>8} "
+          f"{'total':>8} {'paper':>8} {'err%':>6}")
+    out = []
+    for mode, B, r, paper in rows:
+        err = 100 * (r["total_ms"] - paper) / paper
+        print(f"{mode:>8} {B:>3} {r['compute_ms']:8.1f} {r['staging_ms']:8.1f}"
+              f" {r['comm_ms']:8.1f} {r['total_ms']:8.1f} {paper:8.1f}"
+              f" {err:+6.1f}")
+        out.append({"mode": mode, "batch": B, **{k: round(v, 2)
+                    for k, v in r.items()}, "paper_total_ms": paper,
+                    "err_pct": round(err, 1)})
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Paper Table 3: computation & communication efficiency (analytic — the
+FLOP and comm-volume formulas the paper derives; accuracy column comes from
+the synthetic-task experiment in benchmarks/accuracy_prism.py)."""
+from repro.core.costmodel import EdgeCostModel, vit_flops_per_sample
+from repro.core.segment_means import (comm_elements_prism,
+                                      comm_elements_voltage, cr_to_L)
+
+PAPER = [
+    # strategy, P, GFLOPs/dev, comp SU %, CR, comm SU %
+    ("no-partition", 1, 35.15, None, None, None),
+    ("voltage", 2, 20.37, 42.05, None, None),
+    ("prism", 2, 17.54, 50.11, 9.90, 89.90),
+    ("prism", 2, 17.86, 49.20, 4.95, 79.80),
+    ("prism", 2, 18.18, 48.29, 3.30, 69.70),
+]
+
+
+def run():
+    w = EdgeCostModel().w
+    full = vit_flops_per_sample(w)
+    N, P, D = w.n_tokens, 2, w.d_model
+    Np = 99
+    print("# Table 3 — computation & communication efficiency (ViT)")
+    print(f"{'strategy':>13} {'P':>2} {'GF/dev':>7} {'pGF':>6} {'compSU%':>8} "
+          f"{'CR':>5} {'commSU%':>8} {'paper':>7}")
+    out = []
+    for strat, p, pgf, psu, cr, pcsu in PAPER:
+        if strat == "no-partition":
+            gf = full / 1e9
+            su = csu = None
+        elif strat == "voltage":
+            gf = (vit_flops_per_sample(w, Np, N)
+                  + w.n_layers * 2 * (N - Np) * D * 2 * D) / 1e9
+            su = (1 - gf * 1e9 / full) * 100
+            csu = None
+        else:
+            L = cr_to_L(N, P, cr)
+            gf = vit_flops_per_sample(w, Np, Np + (P - 1) * L) / 1e9
+            su = (1 - gf * 1e9 / full) * 100
+            csu = (1 - comm_elements_prism(P, L, D)
+                   / comm_elements_voltage(P, N, D)) * 100
+        print(f"{strat:>13} {p:>2} {gf:7.2f} {pgf:6.2f} "
+              f"{su if su else 0:8.2f} {cr or 0:5.2f} {csu if csu else 0:8.2f}"
+              f" {pcsu or 0:7.2f}")
+        out.append({"strategy": strat, "P": p, "gflops_dev": round(gf, 2),
+                    "paper_gflops": pgf, "comp_su_pct":
+                    round(su, 2) if su else None,
+                    "cr": cr, "comm_su_pct": round(csu, 2) if csu else None,
+                    "paper_comm_su": pcsu})
+    return out
+
+
+if __name__ == "__main__":
+    run()

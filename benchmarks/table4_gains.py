@@ -1,0 +1,31 @@
+"""Paper Table 4: PRISM (adaptive) vs Voltage — latency & energy gains."""
+from repro.core.costmodel import EdgeCostModel
+
+PAPER = {1: (77.0, 51.8), 2: (71.6, 39.6), 4: (69.0, 36.2),
+         8: (67.8, 34.1), 16: (69.0, 38.8), 32: (65.1, 34.8)}
+
+
+def run():
+    m = EdgeCostModel()
+    print("# Table 4 — adaptive PRISM vs Voltage gains (400 Mbps, CR=9.9)")
+    print(f"{'B':>3} {'latG%':>7} {'paper':>6} {'enG%':>7} {'paper':>6} "
+          f"{'picked':>7}")
+    out = []
+    for B, (plat, pen) in PAPER.items():
+        local = m.local(B)
+        prism = m.distributed(B, 400, 2, 10)
+        volt = m.distributed(B, 400, 2, None)
+        pick = prism if prism["total_ms"] < local["total_ms"] else local
+        mode = "dist" if pick is prism else "local"
+        g_lat = 100 * (1 - pick["total_ms"] / volt["total_ms"])
+        g_en = 100 * (1 - pick["per_sample_j"] / volt["per_sample_j"])
+        print(f"{B:>3} {g_lat:7.1f} {plat:6.1f} {g_en:7.1f} {pen:6.1f} "
+              f"{mode:>7}")
+        out.append({"batch": B, "lat_gain_pct": round(g_lat, 1),
+                    "paper_lat_gain": plat, "energy_gain_pct": round(g_en, 1),
+                    "paper_energy_gain": pen, "picked": mode})
+    return out
+
+
+if __name__ == "__main__":
+    run()

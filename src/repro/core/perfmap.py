@@ -1,0 +1,102 @@
+"""Performance map — the paper's profiling artifact (§3.3).
+
+A lightweight JSON store keyed by (mode, batch, CR, bandwidth) holding the
+profiled totals and the three-way latency decomposition (computation,
+communication, CPU–GPU staging — on TPU: compute / wire / staging-or-DCN).
+The runtime policy queries it with nearest-neighbour bandwidth matching.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Iterable, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfKey:
+    mode: str            # "local" | "voltage" | "prism"
+    batch: int
+    cr: float            # 0.0 for local / voltage
+    bandwidth_mbps: float
+
+    def encode(self) -> str:
+        return f"{self.mode}|{self.batch}|{self.cr:g}|{self.bandwidth_mbps:g}"
+
+    @staticmethod
+    def decode(s: str) -> "PerfKey":
+        m, b, c, w = s.split("|")
+        return PerfKey(m, int(b), float(c), float(w))
+
+
+@dataclasses.dataclass
+class PerfEntry:
+    total_ms: float
+    per_sample_ms: float
+    per_sample_j: float
+    compute_ms: float
+    staging_ms: float        # "Other" column of paper Table 2
+    comm_ms: float           # wire time
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d) -> "PerfEntry":
+        return PerfEntry(**d)
+
+
+class PerfMap:
+    """The on-terminal-device JSON performance map."""
+
+    def __init__(self):
+        self._d: Dict[str, PerfEntry] = {}
+
+    def put(self, key: PerfKey, entry: PerfEntry) -> None:
+        self._d[key.encode()] = entry
+
+    def get(self, key: PerfKey) -> Optional[PerfEntry]:
+        return self._d.get(key.encode())
+
+    def entries(self) -> Iterable[Tuple[PerfKey, PerfEntry]]:
+        for k, v in self._d.items():
+            yield PerfKey.decode(k), v
+
+    # --- runtime queries -----------------------------------------------
+
+    def candidates(self, batch: int, bandwidth_mbps: float
+                   ) -> List[Tuple[PerfKey, PerfEntry]]:
+        """All profiled modes at this batch, nearest profiled bandwidth."""
+        bws = sorted({k.bandwidth_mbps for k, _ in self.entries()
+                      if k.batch == batch})
+        if not bws:
+            return []
+        bw = min(bws, key=lambda b: abs(b - bandwidth_mbps))
+        return [(k, v) for k, v in self.entries()
+                if k.batch == batch and
+                (k.bandwidth_mbps == bw or k.mode == "local")]
+
+    def batches(self) -> List[int]:
+        return sorted({k.batch for k, _ in self.entries()})
+
+    # --- persistence ------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({k: e.to_dict() for k, e in self._d.items()}, f,
+                      indent=1)
+        os.replace(tmp, path)      # atomic
+
+    @staticmethod
+    def load(path: str) -> "PerfMap":
+        pm = PerfMap()
+        with open(path) as f:
+            for k, d in json.load(f).items():
+                pm._d[k] = PerfEntry.from_dict(d)
+        return pm
+
+    def __len__(self) -> int:
+        return len(self._d)

@@ -1,0 +1,75 @@
+"""Runtime adaptive execution policy (paper §3.3).
+
+Given an arriving batch size and the observed bandwidth, query the perf map
+and pick the execution mode — ``local`` or ``distributed(best CR)`` —
+minimizing per-sample latency or energy. Includes the derived artifacts the
+paper reports: the batch crossover point and the bandwidth crossover.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional, Tuple
+
+from repro.core.perfmap import PerfEntry, PerfKey, PerfMap
+
+Objective = Literal["latency", "energy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    mode: str                  # "local" | "prism" | "voltage"
+    cr: float                  # 0.0 unless prism
+    expected: PerfEntry
+    objective: Objective
+
+    @property
+    def distributed(self) -> bool:
+        return self.mode != "local"
+
+
+class AdaptivePolicy:
+    def __init__(self, perfmap: PerfMap,
+                 allow_modes: Tuple[str, ...] = ("local", "prism")):
+        """``allow_modes`` defaults to the paper's deployment (voltage is
+        profiled for reporting but never selected — it loses everywhere)."""
+        self.pm = perfmap
+        self.allow = allow_modes
+
+    def decide(self, batch: int, bandwidth_mbps: float,
+               objective: Objective = "latency") -> Decision:
+        batch_key = self._nearest_batch(batch)
+        cands = [(k, e) for k, e in self.pm.candidates(batch_key,
+                                                       bandwidth_mbps)
+                 if k.mode in self.allow]
+        if not cands:
+            raise LookupError("empty performance map")
+        metric = (lambda e: e.per_sample_ms) if objective == "latency" else \
+                 (lambda e: e.per_sample_j)
+        k, e = min(cands, key=lambda kv: metric(kv[1]))
+        return Decision(mode=k.mode, cr=k.cr, expected=e, objective=objective)
+
+    def _nearest_batch(self, batch: int) -> int:
+        bs = self.pm.batches()
+        return min(bs, key=lambda b: (abs(b - batch), b))
+
+    # --- paper-reported artifacts -----------------------------------------
+
+    def batch_crossover(self, bandwidth_mbps: float,
+                        objective: Objective = "latency") -> Optional[int]:
+        """Smallest profiled batch at which distributed wins (paper: 8)."""
+        for b in self.pm.batches():
+            if self.decide(b, bandwidth_mbps, objective).distributed:
+                return b
+        return None
+
+    def bandwidth_crossover(self, batch: int,
+                            objective: Objective = "latency"
+                            ) -> Optional[float]:
+        """Smallest profiled bandwidth at which distributed wins at
+        ``batch`` (paper: ≈340 Mbps at B=8)."""
+        bws = sorted({k.bandwidth_mbps for k, _ in self.pm.entries()
+                      if k.mode != "local"})
+        for bw in bws:
+            if self.decide(batch, bw, objective).distributed:
+                return bw
+        return None

@@ -1,0 +1,86 @@
+"""Segment Means compression (PRISM Eq. 1) and compression-rate math.
+
+Each sequence partition ``X_p ∈ R^{N_p×D}`` is divided into ``L`` equal,
+non-overlapping segments; the column-wise mean of each segment forms the
+compact representation ``Z_p ∈ R^{L×D}`` exchanged between devices.
+
+Compression rate: ``CR = N / (L · P)`` — the paper's primary tuning knob,
+because it directly controls staged/communicated volume.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def segment_sizes(n_p: int, L: int) -> int:
+    """Tokens per segment. Requires equal segments (paper keeps them integer)."""
+    if L <= 0:
+        raise ValueError(f"L must be positive, got {L}")
+    if n_p % L != 0:
+        raise ValueError(f"partition length {n_p} not divisible into {L} segments")
+    return n_p // L
+
+
+def segment_means(x: jnp.ndarray, L: int, axis: int = -2) -> jnp.ndarray:
+    """Column-wise means of ``L`` equal segments along ``axis`` (Eq. 1).
+
+    Works for any rank; the segmented axis defaults to the token axis of a
+    ``[..., N_p, D]`` tensor. Output has length ``L`` on that axis.
+    """
+    axis = axis % x.ndim
+    n_p = x.shape[axis]
+    s = segment_sizes(n_p, L)
+    new_shape = x.shape[:axis] + (L, s) + x.shape[axis + 1:]
+    # Mean in f32 for numerical robustness, cast back.
+    xr = x.reshape(new_shape)
+    return xr.astype(jnp.float32).mean(axis=axis + 1).astype(x.dtype)
+
+
+def segment_means_masked(x: jnp.ndarray, L: int, mask: jnp.ndarray,
+                         axis: int = -2):
+    """Mask-aware segment means for padded sequences.
+
+    ``mask`` is boolean over the segmented axis (broadcastable to x's shape
+    with trailing dims removed); padded positions are excluded from the mean.
+    Returns ``(means, counts)`` where ``counts`` is the number of real tokens
+    per segment — the scaling-aware softmax uses ``log(count)`` as the bias
+    and masks segments with ``count == 0``.
+    """
+    axis = axis % x.ndim
+    n_p = x.shape[axis]
+    s = segment_sizes(n_p, L)
+    new_shape = x.shape[:axis] + (L, s) + x.shape[axis + 1:]
+    xr = x.reshape(new_shape).astype(jnp.float32)
+    mshape = mask.shape[:axis] + (L, s)
+    mr = mask.reshape(mshape).astype(jnp.float32)
+    counts = mr.sum(axis=axis + 1)                        # [..., L]
+    mexp = mr.reshape(mr.shape + (1,) * (xr.ndim - mr.ndim))
+    total = (xr * mexp).sum(axis=axis + 1)
+    means = total / jnp.maximum(counts.reshape(
+        counts.shape + (1,) * (total.ndim - counts.ndim)), 1.0)
+    return means.astype(x.dtype), counts
+
+
+def cr_to_L(n_tokens: int, P: int, cr: float) -> int:
+    """Invert ``CR = N/(L·P)`` to the (integer) number of segment means."""
+    L = int(round(n_tokens / (cr * P)))
+    return max(L, 1)
+
+
+def L_to_cr(n_tokens: int, P: int, L: int) -> float:
+    return n_tokens / (L * P)
+
+
+def comm_elements_voltage(P: int, N: int, D: int) -> int:
+    """Per-device received elements for full-tensor exchange (Voltage)."""
+    return (P - 1) * N * D // P
+
+
+def comm_elements_prism(P: int, L: int, D: int) -> int:
+    """Per-device received elements for Segment Means exchange (PRISM)."""
+    return (P - 1) * L * D
+
+
+def comm_reduction(P: int, N: int, L: int) -> float:
+    """Communication speed-up factor of PRISM over Voltage (≈ CR)."""
+    return comm_elements_voltage(P, N, 1) / max(comm_elements_prism(P, L, 1), 1)

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (SyntheticLMDataset, SyntheticImageDataset,
+                                 make_lm_batch, synthetic_vit_task)
+
+__all__ = ["SyntheticLMDataset", "SyntheticImageDataset", "make_lm_batch",
+           "synthetic_vit_task"]

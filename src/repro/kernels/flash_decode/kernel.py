@@ -1,0 +1,99 @@
+"""Pallas-TPU flash-decode: one-token partial attention over a
+sequence-sharded KV-cache shard, emitting (o·l, m, l) for the cross-shard
+LSE merge (one tiny psum — ``repro.core.exchange.decode_attention_sharded``).
+
+Tiling: grid (B, H, S/TS). The S axis is the *minor-most sequential* grid
+dim, so the (m, l, acc) online-softmax state lives in VMEM scratch across
+S-blocks of the same (b, h) — the cache streams HBM→VMEM once, q stays
+resident. Validity/window masking arrives as an additive bias [B, S]
+(computed outside from cache_len — keeps the kernel branch-free).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref,
+            acc_ref, mm_ref, ll_ref, *, scale: float,
+            softcap: Optional[float], n_s_blocks: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        mm_ref[...] = jnp.full_like(mm_ref, NEG_INF)
+        ll_ref[...] = jnp.zeros_like(ll_ref)
+
+    q = q_ref[0, 0, :].astype(jnp.float32) * scale          # [dh]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)               # [TS, dh]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    bias = bias_ref[0, :].astype(jnp.float32)               # [TS]
+
+    s = k @ q                                               # [TS]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = s + bias
+    m_prev = mm_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                  # [TS]
+    ll_ref[0] = ll_ref[0] * alpha + jnp.sum(p)
+    acc_ref[0, :] = acc_ref[0, :] * alpha + p @ v
+    mm_ref[0] = m_new
+
+    @pl.when(si == n_s_blocks - 1)
+    def _flush():
+        o_ref[0, 0, :] = acc_ref[0, :].astype(o_ref.dtype)
+        m_ref[0, 0] = mm_ref[0]
+        l_ref[0, 0] = ll_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "s_block",
+                                             "interpret"))
+def flash_decode_pallas(q: jnp.ndarray,       # [B, H, dh]
+                        k: jnp.ndarray,       # [B, S, Hk, dh]
+                        v: jnp.ndarray,
+                        kv_bias: jnp.ndarray,  # [B, S] f32
+                        *, scale: Optional[float] = None,
+                        softcap: Optional[float] = None,
+                        s_block: int = 512,
+                        interpret: bool = False):
+    B, H, dh = q.shape
+    S, Hk = k.shape[1], k.shape[2]
+    scale = (dh ** -0.5) if scale is None else scale
+    group = H // Hk
+    ts = min(s_block, S)
+    assert S % ts == 0, (S, ts)
+    grid = (B, H, S // ts)
+
+    out_shapes = (jax.ShapeDtypeStruct((B, H, dh), jnp.float32),
+                  jax.ShapeDtypeStruct((B, H), jnp.float32),
+                  jax.ShapeDtypeStruct((B, H), jnp.float32))
+    o, m, l = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, softcap=softcap,
+                          n_s_blocks=S // ts),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda b, h, s: (b, h, 0)),
+            pl.BlockSpec((1, ts, 1, dh), lambda b, h, s: (b, s, h // group, 0)),
+            pl.BlockSpec((1, ts, 1, dh), lambda b, h, s: (b, s, h // group, 0)),
+            pl.BlockSpec((1, ts), lambda b, h, s: (b, s)),
+        ],
+        out_specs=(pl.BlockSpec((1, 1, dh), lambda b, h, s: (b, h, 0)),
+                   pl.BlockSpec((1, 1), lambda b, h, s: (b, h)),
+                   pl.BlockSpec((1, 1), lambda b, h, s: (b, h))),
+        out_shape=out_shapes,
+        scratch_shapes=[pltpu.VMEM((1, dh), jnp.float32),   # acc
+                        pltpu.VMEM((1,), jnp.float32),      # m
+                        pltpu.VMEM((1,), jnp.float32)],     # l
+        interpret=interpret,
+    )(q, k, v, kv_bias)
+    return o, m, l

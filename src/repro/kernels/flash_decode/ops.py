@@ -1,0 +1,59 @@
+"""jit'd wrapper: builds the validity bias from (cache_len, offset, window)
+and merges shard partials (the exact LSE combine used across devices)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.kernel import NEG_INF, flash_decode_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def validity_bias(B: int, S: int, cache_len, offset=0,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """[B, S] additive bias: 0 where the (global) position is a valid cache
+    slot, -inf where empty / outside the sliding window."""
+    gpos = offset + jnp.arange(S)[None, :]
+    clen = jnp.broadcast_to(jnp.reshape(jnp.asarray(cache_len), (-1, 1)),
+                            (B, 1))
+    ok = gpos < clen
+    if window is not None:
+        ok &= gpos >= clen - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def flash_decode_op(q: jnp.ndarray,      # [B, 1, H, dh] or [B, H, dh]
+                    k: jnp.ndarray,      # [B, S, Hk, dh]
+                    v: jnp.ndarray,
+                    cache_len,
+                    *, offset=0, window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    softcap: Optional[float] = None,
+                    interpret: Optional[bool] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Partial attention over the local shard → (o_unnorm, m, l)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    B, H, dh = q.shape
+    S = k.shape[1]
+    bias = validity_bias(B, S, cache_len, offset=offset, window=window)
+    s_block = 512 if S % 512 == 0 else max(
+        t for t in (256, 128, 64, 32, 16, 8, 4, 2, 1) if S % t == 0)
+    return flash_decode_pallas(q, k, v, bias, scale=scale, softcap=softcap,
+                               s_block=s_block, interpret=interpret)
+
+
+def merge_partials(o, m, l) -> jnp.ndarray:
+    """Combine [n_shards, B, H, dh] partials exactly (flash-decoding)."""
+    m_star = jnp.max(m, axis=0)                              # [B, H]
+    w = jnp.exp(m - m_star[None])
+    l_tot = jnp.sum(w * l, axis=0)
+    o_tot = jnp.sum(w[..., None] * o, axis=0)
+    return o_tot / l_tot[..., None]

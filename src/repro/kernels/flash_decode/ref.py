@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash-decode partial-attention kernel."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_decode_ref(q: jnp.ndarray,        # [B, H, dh]
+                     k: jnp.ndarray,        # [B, S, Hk, dh] (local shard)
+                     v: jnp.ndarray,
+                     kv_bias: jnp.ndarray,  # [B, S] additive (0 / -inf)
+                     *, scale: Optional[float] = None,
+                     softcap: Optional[float] = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Partial attention over the local cache shard.
+
+    Returns (o·l, m, l) — un-normalized weighted values plus the softmax
+    stats, so shards merge exactly:  o = Σ e^{m_i - m*} o_i / Σ e^{m_i-m*} l_i.
+    """
+    B, H, dh = q.shape
+    Hk = k.shape[2]
+    scale = (dh ** -0.5) if scale is None else scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if Hk != H:
+        kf = jnp.repeat(kf, H // Hk, axis=2)
+        vf = jnp.repeat(vf, H // Hk, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32) * scale, kf)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = s + kv_bias[:, None, :]
+    m = jnp.max(s, axis=-1)                                  # [B, H]
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)                                  # [B, H]
+    o = jnp.einsum("bhs,bshd->bhd", p, vf)                   # un-normalized
+    return o, m, l

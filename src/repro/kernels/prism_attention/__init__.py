@@ -1,0 +1,4 @@
+from repro.kernels.prism_attention.ops import prism_attention_op
+from repro.kernels.prism_attention.ref import prism_attention_ref
+
+__all__ = ["prism_attention_op", "prism_attention_ref"]

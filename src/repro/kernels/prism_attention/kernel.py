@@ -1,0 +1,106 @@
+"""Pallas-TPU PRISM attention: flash-style softmax over [local K/V ‖
+segment-mean K/V with additive log-count bias].
+
+TPU adaptation of the paper's scaling-aware softmax (DESIGN.md §2): the
+GPU prototype materializes the concatenated score matrix; here the two key
+groups are processed as separate MXU tiles with one running (m, l, acc)
+online-softmax state, so the augmented representation never exists in HBM
+— the means ride along as one extra K-block.
+
+Tiling: grid (B, H, Nq/TQ). Per program:
+  q tile      [TQ, dh]           VMEM
+  local K/V   [Nk, dh]           VMEM (per-partition Nk = N/P is small by
+                                 construction — PRISM's partitioning is what
+                                 makes full-KV residency viable; a streamed
+                                 variant would kick in above ~8k tokens)
+  mean K/V    [M, dh] + bias [M] VMEM (M = P·L)
+MXU work: [TQ, dh]·[dh, Nk] and [TQ, dh]·[dh, M]; TQ, Nk, M padded to 128.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, km_ref, vm_ref, bias_ref, o_ref, *,
+            scale: float, causal: bool, q_block: int,
+            softcap: Optional[float]):
+    qi = pl.program_id(2)
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale      # [TQ, dh]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # [Nk, dh]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    km = km_ref[0, :, 0, :].astype(jnp.float32)            # [M, dh]
+    vm = vm_ref[0, :, 0, :].astype(jnp.float32)
+    bias = bias_ref[0, :].astype(jnp.float32)              # [M]
+
+    def cap(x):
+        return x if softcap is None else softcap * jnp.tanh(x / softcap)
+
+    s_loc = cap(q @ k.T)                                   # [TQ, Nk]
+    if causal:
+        qpos = qi * q_block + jax.lax.broadcasted_iota(
+            jnp.int32, s_loc.shape, 0)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, s_loc.shape, 1)
+        s_loc = jnp.where(qpos >= kpos, s_loc, NEG_INF)
+
+    s_mean = cap(q @ km.T) + bias[None, :]                 # [TQ, M]
+
+    # one online-softmax state across both key groups
+    m1 = jnp.max(s_loc, axis=-1)
+    m2 = jnp.max(s_mean, axis=-1)
+    m = jnp.maximum(jnp.maximum(m1, m2), -1e29)
+    p_loc = jnp.exp(s_loc - m[:, None])
+    p_mean = jnp.exp(s_mean - m[:, None])
+    l = jnp.sum(p_loc, axis=-1) + jnp.sum(p_mean, axis=-1)
+    acc = p_loc @ v + p_mean @ vm                          # [TQ, dh]
+    o_ref[0, :, 0, :] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "softcap", "q_block",
+                              "interpret"))
+def prism_attention_pallas(
+    q: jnp.ndarray,        # [B, Nq, H, dh]
+    k_loc: jnp.ndarray,    # [B, Nk, Hk, dh]
+    v_loc: jnp.ndarray,
+    k_means: jnp.ndarray,  # [B, M, Hk, dh]
+    v_means: jnp.ndarray,
+    mean_bias: jnp.ndarray,   # [B, M] f32
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    softcap: Optional[float] = None,
+    q_block: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Nq, H, dh = q.shape
+    Hk = k_loc.shape[2]
+    Nk, M = k_loc.shape[1], k_means.shape[1]
+    scale = (dh ** -0.5) if scale is None else scale
+    group = H // Hk
+    tq = min(q_block, Nq)
+    assert Nq % tq == 0, (Nq, tq)
+    grid = (B, H, Nq // tq)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, q_block=tq,
+                          softcap=softcap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq, 1, dh), lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((1, Nk, 1, dh), lambda b, h, i: (b, 0, h // group, 0)),
+            pl.BlockSpec((1, Nk, 1, dh), lambda b, h, i: (b, 0, h // group, 0)),
+            pl.BlockSpec((1, M, 1, dh), lambda b, h, i: (b, 0, h // group, 0)),
+            pl.BlockSpec((1, M, 1, dh), lambda b, h, i: (b, 0, h // group, 0)),
+            pl.BlockSpec((1, M), lambda b, h, i: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, 1, dh), lambda b, h, i: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Nq, H, dh), q.dtype),
+        interpret=interpret,
+    )(q, k_loc, v_loc, k_means, v_means, mean_bias)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the PRISM attention kernel (device-local view).
+
+Mirrors ``repro.core.prism_attention.prism_attention`` with the means
+pre-flattened to [B, M, Hk, dh] and their visibility/scaling folded into an
+additive bias [B, M] (log segment count; -inf to hide own/future
+partitions) — exactly the contract the Pallas kernel implements.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _expand(kv: jnp.ndarray, H: int) -> jnp.ndarray:
+    hk = kv.shape[-2]
+    return kv if hk == H else jnp.repeat(kv, H // hk, axis=-2)
+
+
+def prism_attention_ref(
+    q: jnp.ndarray,        # [B, Nq, H, dh]
+    k_loc: jnp.ndarray,    # [B, Nk, Hk, dh]
+    v_loc: jnp.ndarray,
+    k_means: jnp.ndarray,  # [B, M, Hk, dh]
+    v_means: jnp.ndarray,
+    mean_bias: jnp.ndarray,  # [B, M] additive (log counts / -inf)
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    logit_softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    B, Nq, H, dh = q.shape
+    scale = (dh ** -0.5) if scale is None else scale
+    f32 = jnp.float32
+    kl = _expand(k_loc, H).astype(f32)
+    vl = _expand(v_loc, H).astype(f32)
+    km = _expand(k_means, H).astype(f32)
+    vm = _expand(v_means, H).astype(f32)
+
+    def cap(x):
+        if logit_softcap is None:
+            return x
+        return logit_softcap * jnp.tanh(x / logit_softcap)
+
+    l_loc = cap(jnp.einsum("bqhd,bkhd->bhqk", q.astype(f32), kl) * scale)
+    if causal:
+        Nk = k_loc.shape[1]
+        mask = jnp.arange(Nq)[:, None] >= jnp.arange(Nk)[None, :]
+        l_loc = jnp.where(mask[None, None], l_loc, NEG_INF)
+    l_mean = cap(jnp.einsum("bqhd,bkhd->bhqk", q.astype(f32), km) * scale)
+    l_mean = l_mean + mean_bias[:, None, None, :]
+    logits = jnp.concatenate([l_loc, l_mean], axis=-1)
+    p = jax.nn.softmax(logits, axis=-1)
+    vals = jnp.concatenate([vl, vm], axis=1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vals)
+    return out.astype(q.dtype)

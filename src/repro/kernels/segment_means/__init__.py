@@ -1,0 +1,4 @@
+from repro.kernels.segment_means.ops import segment_means_op
+from repro.kernels.segment_means.ref import segment_means_ref
+
+__all__ = ["segment_means_op", "segment_means_ref"]

@@ -1,0 +1,35 @@
+"""jit'd wrapper: shape plumbing + CPU interpret fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_means.kernel import segment_means_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def segment_means_op(x: jnp.ndarray, L: int,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Segment means over the token axis of [B, N, ...feature...].
+
+    Flattens trailing feature dims, pads the feature dim to a 128 lane
+    multiple, runs the kernel (interpret=True on CPU), and restores shape.
+    """
+    interpret = _on_cpu() if interpret is None else interpret
+    B, N = x.shape[:2]
+    feat = x.shape[2:]
+    D = 1
+    for f in feat:
+        D *= int(f)
+    xf = x.reshape(B, N, D)
+    pad = (-D) % 128
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, 0), (0, pad)))
+    block_d = 512 if (D + pad) % 512 == 0 else 128
+    out = segment_means_pallas(xf, L, block_d=block_d, interpret=interpret)
+    if pad:
+        out = out[..., :D]
+    return out.reshape(B, L, *feat)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the segment-means kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def segment_means_ref(x: jnp.ndarray, L: int) -> jnp.ndarray:
+    """[B, N, D] → [B, L, D] column-wise means of L equal segments (f32
+    accumulation, cast back to x.dtype) — PRISM Eq. (1)."""
+    B, N, D = x.shape
+    seg = N // L
+    xr = x.reshape(B, L, seg, D).astype(jnp.float32)
+    return xr.mean(axis=2).astype(x.dtype)

@@ -1,0 +1,385 @@
+"""Post-optimization HLO analyzer: loop-aware FLOPs / HBM-bytes / collective
+bytes for the roofline (EXPERIMENTS.md §Roofline).
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits every
+while-loop body ONCE — all our layer stacks are ``lax.scan``s, so its flops
+undercount by the layer count. This analyzer parses ``compiled.as_text()``
+(per-device, post-SPMD shapes), walks the call graph, and multiplies while
+bodies by their ``known_trip_count`` backend config.
+
+Cost model per op (documented assumptions):
+* dot: 2 · prod(output) · prod(contracted dims) FLOPs.
+* elementwise arith/transcendental: 1 FLOP / output element.
+* HBM bytes: operands + outputs per top-level op; fusions count their
+  *parameters'* effective reads — a parameter whose only users inside the
+  fusion are (dynamic-)slice/gather is charged the slice bytes, not the full
+  buffer (this is exactly the scan weight-slicing pattern).
+* collectives: operand bytes recorded per kind with ring-transfer factors —
+  all-gather (P-1)·in, reduce-scatter (P-1)/P·in, all-reduce 2(P-1)/P·in,
+  all-to-all (P-1)/P·in, collective-permute 1·in — giving per-device wire
+  bytes; both raw operand sums (the brief's definition) and wire bytes are
+  reported.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1,
+                "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 0.5,
+                "u4": 0.5, "c128": 16, "token": 0, "opaque": 0}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "rsqrt", "sqrt", "power", "sign", "floor", "ceil", "compare",
+    "select", "and", "or", "not", "xor", "convert", "sine", "cosine",
+    "logistic", "erf", "atan2", "remainder", "round-nearest-afz",
+    "round-nearest-even", "clamp", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "cbrt", "is-finite", "reduce", "exp",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPND_RE = re.compile(r"%[\w.\-]+")
+
+
+def _shape_bytes_elems(type_str: str) -> Tuple[float, float]:
+    """Total (bytes, elements) over all arrays in a (possibly tuple) type."""
+    total_b = total_e = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1.0
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_e += n
+        total_b += n * _DTYPE_BYTES[dt]
+    return total_b, total_e
+
+
+def _split_top_type(line: str) -> Optional[str]:
+    """Return the result type of '%name = TYPE op(...)' lines."""
+    m = re.match(r"\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*(.*?)\s+([\w\-]+)\(", line)
+    if not m:
+        return None
+    return m.group(1)
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    kind: str
+    out_type: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class CollectiveRecord:
+    kind: str
+    operand_bytes: float        # per-device operand size × executions
+    wire_bytes: float           # ring-transfer bytes per device × executions
+    group_size: int
+    count: float                # number of executions (× trip counts)
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: List[CollectiveRecord] = dataclasses.field(
+        default_factory=list)
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(self.flops * k, self.bytes * k,
+                       [CollectiveRecord(c.kind, c.operand_bytes * k,
+                                         c.wire_bytes * k, c.group_size,
+                                         c.count * k)
+                        for c in self.collectives])
+
+    def add(self, other: "HloCost") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.collectives.extend(other.collectives)
+
+    @property
+    def collective_operand_bytes(self) -> float:
+        return sum(c.operand_bytes for c in self.collectives)
+
+    @property
+    def collective_wire_bytes(self) -> float:
+        return sum(c.wire_bytes for c in self.collectives)
+
+    def collective_summary(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = defaultdict(
+            lambda: {"operand_bytes": 0.0, "wire_bytes": 0.0, "count": 0.0})
+        for c in self.collectives:
+            out[c.kind]["operand_bytes"] += c.operand_bytes
+            out[c.kind]["wire_bytes"] += c.wire_bytes
+            out[c.kind]["count"] += c.count
+        return dict(out)
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[OpInfo]] = {}
+        self.op_types: Dict[Tuple[str, str], str] = {}   # (comp, %name) → type
+        self._parse(text)
+
+    def _parse(self, text: str) -> None:
+        comp = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            header = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{",
+                              line)
+            if header and "=" not in line.split("(")[0]:
+                comp = header.group(1)
+                self.computations[comp] = []
+                continue
+            if comp is None:
+                continue
+            m = re.match(
+                r"\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)",
+                line)
+            if not m:
+                continue
+            name, out_type, kind, rest = m.groups()
+            args_part = rest.split("),", 1)[0] if ")," in rest else rest
+            operands = _OPND_RE.findall(args_part)
+            op = OpInfo(name=name, kind=kind, out_type=out_type,
+                        operands=operands, attrs=rest, line=line)
+            self.computations[comp].append(op)
+            self.op_types[(comp, name)] = out_type
+
+    # ------------------------------------------------------------------
+
+    def _operand_type(self, comp: str, name: str) -> str:
+        return self.op_types.get((comp, name), "")
+
+    def _group_size(self, attrs: str) -> int:
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+        if m:
+            return int(m.group(2))
+        m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+        if m:
+            return len(m.group(1).split(","))
+        return 2
+
+    def _trip_count(self, attrs: str) -> float:
+        m = re.search(r'known_trip_count[":{ ]+n["\s:]+\"?(\d+)', attrs)
+        return float(m.group(1)) if m else 1.0
+
+    def _called(self, attrs: str, key: str) -> Optional[str]:
+        m = re.search(key + r"=%([\w.\-]+)", attrs)
+        return m.group(1) if m else None
+
+    def _fusion_param_bytes(self, called: str, operands: List[str],
+                            comp: str) -> float:
+        """Effective read bytes of a fusion's parameters (slice-aware)."""
+        ops = self.computations.get(called, [])
+        params: Dict[int, str] = {}
+        for o in ops:
+            if o.kind == "parameter":
+                m = re.search(r"parameter\((\d+)", o.line)
+                if m:
+                    params[int(m.group(1))] = o.name
+        total = 0.0
+        for idx, opnd in enumerate(operands):
+            full_b, _ = _shape_bytes_elems(self._operand_type(comp, opnd))
+            pname = params.get(idx)
+            if pname is None:
+                total += full_b
+                continue
+            users = [o for o in ops if pname in o.operands]
+            if users and all(u.kind in ("dynamic-slice", "gather", "bitcast",
+                                        "reshape", "slice", "copy",
+                                        "dynamic-update-slice")
+                             for u in users):
+                eff = 0.0
+                for u in users:
+                    if u.kind == "dynamic-update-slice":
+                        # reads+writes only the update region
+                        upd = u.operands[1] if len(u.operands) > 1 else None
+                        t = (self._operand_type(called, upd) if upd else
+                             u.out_type)
+                        eff += _shape_bytes_elems(t)[0]
+                    else:
+                        eff += _shape_bytes_elems(u.out_type)[0]
+                total += min(eff, full_b)
+            else:
+                total += full_b
+        return total
+
+    def cost_of(self, comp: str, memo: Optional[Dict[str, HloCost]] = None
+                ) -> HloCost:
+        memo = memo if memo is not None else {}
+        if comp in memo:
+            return memo[comp]
+        memo[comp] = HloCost()          # break cycles defensively
+        total = HloCost()
+        for op in self.computations.get(comp, []):
+            k = op.kind
+            if k in ("parameter", "constant", "get-tuple-element", "tuple",
+                     "bitcast", "after-all", "partition-id", "replica-id",
+                     "iota"):
+                continue
+            out_b, out_e = _shape_bytes_elems(op.out_type)
+
+            if k == "while":
+                trip = self._trip_count(op.attrs)
+                body = self._called(op.attrs, "body")
+                cond = self._called(op.attrs, "condition")
+                if body:
+                    total.add(self.cost_of(body, memo).scaled(trip))
+                if cond:
+                    total.add(self.cost_of(cond, memo).scaled(trip))
+                continue
+            if k == "conditional":
+                branches = re.findall(r"%([\w.\-]+)", op.attrs)
+                subcosts = [self.cost_of(b, memo) for b in branches
+                            if b in self.computations]
+                if subcosts:
+                    biggest = max(subcosts, key=lambda c: c.flops + c.bytes)
+                    total.add(biggest)
+                total.bytes += out_b
+                continue
+            if k in ("call", "async-start"):
+                called = self._called(op.attrs, "to_apply") or \
+                    self._called(op.attrs, "calls")
+                if called:
+                    total.add(self.cost_of(called, memo))
+                continue
+
+            if k in _COLLECTIVES or any(op.kind.startswith(c)
+                                        for c in _COLLECTIVES):
+                in_b = sum(_shape_bytes_elems(
+                    self._operand_type(comp, o))[0] for o in op.operands)
+                g = self._group_size(op.attrs)
+                base = max(g - 1, 0) / max(g, 1)
+                kind = next(c for c in _COLLECTIVES if op.kind.startswith(c))
+                if kind == "all-gather":
+                    wire = in_b * max(g - 1, 0)
+                elif kind == "all-reduce":
+                    wire = 2 * in_b * base
+                elif kind in ("reduce-scatter", "all-to-all"):
+                    wire = in_b * base
+                else:                      # collective-permute
+                    wire = in_b
+                total.collectives.append(
+                    CollectiveRecord(kind, in_b, wire, g, 1.0))
+                total.bytes += in_b + out_b
+                continue
+
+            if k == "fusion":
+                called = self._called(op.attrs, "calls")
+                if called:
+                    sub = self.cost_of(called, memo)
+                    total.flops += sub.flops
+                    total.collectives.extend(sub.collectives)
+                    total.bytes += (self._fusion_param_bytes(
+                        called, op.operands, comp) + out_b)
+                continue
+
+            if k == "dot":
+                lhs_t = self._operand_type(comp, op.operands[0]) \
+                    if op.operands else ""
+                contract = 1.0
+                m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+                if m and lhs_t:
+                    dims_m = _SHAPE_RE.search(lhs_t)
+                    if dims_m:
+                        lshape = [int(x) for x in dims_m.group(2).split(",")
+                                  if x]
+                        for d in m.group(1).split(","):
+                            if d:
+                                contract *= lshape[int(d)]
+                total.flops += 2.0 * out_e * contract
+                in_b = sum(_shape_bytes_elems(
+                    self._operand_type(comp, o))[0] for o in op.operands)
+                total.bytes += in_b + out_b
+                continue
+
+            if k == "convolution":
+                m = re.search(r"dim_labels=\S+", op.attrs)
+                total.flops += 2.0 * out_e * 128        # coarse; convs only
+                total.bytes += out_b * 3                # in stub frontends
+                continue
+
+            if k in ("dynamic-slice", "slice", "gather"):
+                total.bytes += 2 * out_b
+                continue
+            if k in ("dynamic-update-slice", "scatter"):
+                upd = op.operands[1] if len(op.operands) > 1 else None
+                ub = _shape_bytes_elems(
+                    self._operand_type(comp, upd))[0] if upd else out_b
+                total.bytes += 2 * ub
+                continue
+            if k in ("copy", "copy-start", "transpose", "reshape",
+                     "broadcast", "concatenate", "pad", "reverse",
+                     "reduce-window", "sort", "rng", "rng-bit-generator",
+                     "cholesky", "triangular-solve", "custom-call",
+                     "dynamic-reshape", "select-and-scatter"):
+                in_b = sum(_shape_bytes_elems(
+                    self._operand_type(comp, o))[0] for o in op.operands)
+                total.bytes += in_b + out_b
+                if k == "sort":
+                    total.flops += out_e * 10           # ~n log n compares
+                continue
+
+            if k in _ELEMENTWISE:
+                total.flops += out_e
+                in_b = sum(_shape_bytes_elems(
+                    self._operand_type(comp, o))[0] for o in op.operands)
+                total.bytes += in_b + out_b
+                continue
+
+            # unknown op: count bytes conservatively
+            in_b = sum(_shape_bytes_elems(
+                self._operand_type(comp, o))[0] for o in op.operands)
+            total.bytes += in_b + out_b
+        memo[comp] = total
+        return total
+
+    def entry_cost(self) -> HloCost:
+        entry = None
+        for name, ops in self.computations.items():
+            if name.startswith("main") or ".main" in name or entry is None:
+                if any(o.kind not in ("parameter",) for o in ops):
+                    if entry is None or "main" in name:
+                        entry = name
+        # prefer a computation literally containing 'main'
+        mains = [n for n in self.computations if "main" in n]
+        if mains:
+            entry = mains[0]
+        return self.cost_of(entry)
+
+
+def analyze_hlo_text(text: str) -> HloCost:
+    return HloModule(text).entry_cost()
+
+
+def analysis_dict(cost: HloCost, n_chips: int) -> Dict:
+    """Roofline terms per EXPERIMENTS.md §Roofline (per-chip quantities —
+    post-SPMD HLO shapes are already per-device)."""
+    from repro.core.costmodel import TPU_HBM_BW, TPU_ICI_BW, TPU_PEAK_FLOPS
+    return {
+        "per_device_flops": cost.flops,
+        "per_device_hbm_bytes": cost.bytes,
+        "per_device_collective_operand_bytes": cost.collective_operand_bytes,
+        "per_device_collective_wire_bytes": cost.collective_wire_bytes,
+        "collectives": cost.collective_summary(),
+        "n_chips": n_chips,
+        "compute_s": cost.flops / TPU_PEAK_FLOPS,
+        "memory_s": cost.bytes / TPU_HBM_BW,
+        "collective_s": cost.collective_wire_bytes / TPU_ICI_BW,
+    }

@@ -1,0 +1,119 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with PRISM latent exchange.
+
+The KV path is compressed to a rank-``r`` latent ``c_kv`` plus a shared
+rotary key ``k_pe``; only ``r + d_rope`` floats/token are cached or
+communicated. PRISM's segment means are taken **in latent space** (the two
+compressions compound — see ``repro.core.exchange.exchange_attention_mla``),
+and decode uses the absorbed formulation (W_uk folded into the query,
+W_uv applied after attention) so the cache is never expanded.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLACfg
+from repro.core.exchange import ExchangeConfig, ExchangeMode, exchange_attention_mla
+from repro.models.layers import (apply_rope, dense_init, init_rmsnorm,
+                                 rmsnorm, rope_tables)
+
+Params = Dict[str, Any]
+
+
+def init_mla(key, d: int, n_heads: int, cfg: MLACfg, dtype) -> Params:
+    ks = jax.random.split(key, 8)
+    H = n_heads
+    return {
+        "w_dq": dense_init(ks[0], d, cfg.q_lora_rank, dtype),
+        "q_norm": init_rmsnorm(cfg.q_lora_rank),
+        "w_uq": dense_init(ks[1], cfg.q_lora_rank,
+                           H * (cfg.qk_nope_dim + cfg.qk_rope_dim), dtype),
+        "w_dkv": dense_init(ks[2], d, cfg.kv_lora_rank + cfg.qk_rope_dim, dtype),
+        "kv_norm": init_rmsnorm(cfg.kv_lora_rank),
+        # stored [r, H, dim] so mean-then-expand is a single einsum
+        "w_uk": (jax.random.normal(ks[3], (cfg.kv_lora_rank, H, cfg.qk_nope_dim),
+                                   jnp.float32) * cfg.kv_lora_rank ** -0.5
+                 ).astype(dtype),
+        "w_uv": (jax.random.normal(ks[4], (cfg.kv_lora_rank, H, cfg.v_head_dim),
+                                   jnp.float32) * cfg.kv_lora_rank ** -0.5
+                 ).astype(dtype),
+        "wo": dense_init(ks[5], H * cfg.v_head_dim, d, dtype),
+    }
+
+
+def _project_q(params: Params, x: jnp.ndarray, H: int, cfg: MLACfg,
+               positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    B, N, _ = x.shape
+    q = rmsnorm(params["q_norm"], x @ params["w_dq"]) @ params["w_uq"]
+    q = q.reshape(B, N, H, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_pe = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    cos, sin = rope_tables(positions, cfg.qk_rope_dim, theta)
+    q_pe = apply_rope(q_pe, cos, sin)
+    return jnp.concatenate([q_nope, q_pe], axis=-1)
+
+
+def _project_kv_latent(params: Params, x: jnp.ndarray, cfg: MLACfg,
+                       positions: jnp.ndarray, theta: float):
+    ckv = x @ params["w_dkv"]
+    c_kv, k_pe = ckv[..., :cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank:]
+    c_kv = rmsnorm(params["kv_norm"], c_kv)
+    cos, sin = rope_tables(positions, cfg.qk_rope_dim, theta)
+    k_pe = apply_rope(k_pe[..., None, :], cos, sin)[..., 0, :]
+    return c_kv, k_pe
+
+
+def mla_block(params: Params, x: jnp.ndarray, n_heads: int, cfg: MLACfg,
+              xcfg: ExchangeConfig, *, positions: Optional[jnp.ndarray] = None,
+              rope_theta: float = 10000.0) -> jnp.ndarray:
+    """Full-sequence MLA attention (train / prefill)."""
+    B, N, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(N, dtype=jnp.int32)[None, :]
+    q = _project_q(params, x, n_heads, cfg, positions, rope_theta)
+    c_kv, k_pe = _project_kv_latent(params, x, cfg, positions, rope_theta)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    out = exchange_attention_mla(q, c_kv, k_pe, params["w_uk"], params["w_uv"],
+                                 xcfg, causal=True, scale=scale)
+    return out.reshape(B, N, n_heads * cfg.v_head_dim) @ params["wo"]
+
+
+def mla_decode(params: Params, x: jnp.ndarray, n_heads: int, cfg: MLACfg,
+               xcfg: ExchangeConfig, cache: Dict[str, jnp.ndarray],
+               cache_index, *, rope_theta: float = 10000.0
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Absorbed-form decode over the latent cache.
+
+    logits_h = q_nope_h·W_uk_h·c_kv^T + q_pe·k_pe^T ;  out_h = (p·c_kv)·W_uv_h
+    — the per-token work in the cache dimension is O(r + d_rope), and the
+    latent cache shards over the sequence axis exactly like a K/V cache
+    (flash-decoding LSE merge, see below).
+    """
+    B = x.shape[0]
+    H = n_heads
+    pos = jnp.full((B, 1), cache_index, jnp.int32)
+    q = _project_q(params, x, H, cfg, pos, rope_theta)           # [B,1,H,dq]
+    q_nope, q_pe = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    c_new, pe_new = _project_kv_latent(params, x, cfg, pos, rope_theta)
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), cache_index, axis=1)
+    pe_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_pe"], pe_new.astype(cache["k_pe"].dtype), cache_index, axis=1)
+
+    # absorb: q_lat[b,1,h,r] = q_nope · W_uk^T
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, params["w_uk"])
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    cache_len = cache_index + 1
+
+    from repro.core.exchange import mla_decode_attention_sharded
+    o_lat = mla_decode_attention_sharded(
+        q_lat, q_pe, c_cache, pe_cache, cache_len, xcfg, scale=scale)
+    out = jnp.einsum("bqhr,rhd->bqhd", o_lat, params["w_uv"])
+    y = out.reshape(B, 1, H * cfg.v_head_dim) @ params["wo"]
+    return y, {"c_kv": c_cache, "k_pe": pe_cache}
+
+
+def init_mla_cache(batch: int, seq: int, cfg: MLACfg, dtype):
+    return {"c_kv": jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype),
+            "k_pe": jnp.zeros((batch, seq, cfg.qk_rope_dim), dtype)}

@@ -1,0 +1,114 @@
+"""Config → model builder + abstract input specs for every (arch × shape).
+
+``input_specs(cfg, shape)`` returns ``jax.ShapeDtypeStruct`` stand-ins for
+every model input (weak-type-correct, shardable, no device allocation) —
+the dry-run lowers against these. Modality frontends are STUBS per the
+brief: whisper gets precomputed frame embeddings, the VLM gets projected
+patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import transformer as tfm
+from repro.models import vit as vit_mod
+
+ShapeStruct = jax.ShapeDtypeStruct
+
+
+def init_fn(cfg: ModelConfig) -> Callable:
+    if cfg.family == "vit":
+        return lambda key: vit_mod.init_vit(key, cfg)
+    return lambda key: tfm.init_lm(key, cfg)
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocating anything."""
+    return jax.eval_shape(init_fn(cfg), jax.random.key(0))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    return init_fn(cfg)(jax.random.key(seed))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract inputs for (arch × shape): train/prefill take full sequences;
+    decode takes one new token + the cache is built separately."""
+    B, N = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+
+    if cfg.family == "vit":
+        return {"images": ShapeStruct((B, vit_mod.IMAGE, vit_mod.IMAGE, 3),
+                                      jnp.float32)}
+
+    if shape.kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {"tokens": ShapeStruct((B, N), tok)}
+        if shape.kind == "train":
+            specs["labels"] = ShapeStruct((B, N), tok)
+        if cfg.family == "audio":
+            specs["frames"] = ShapeStruct((B, cfg.encoder_seq, cfg.d_model),
+                                          cfg.jdtype)
+        if cfg.family == "vlm":
+            specs["image_embeds"] = ShapeStruct((B, cfg.image_tokens,
+                                                 cfg.d_model), cfg.jdtype)
+        return specs
+
+    # decode: one new token against a cache of length N
+    return {"tokens": ShapeStruct((B, 1), tok)}
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeSpec, xcfg=None):
+    """Abstract decode cache for (arch × shape) — scan-stacked layout."""
+    B, S = shape.global_batch, shape.seq_len
+
+    def build():
+        cache = tfm.init_decode_cache(cfg, B, S)
+        if cfg.family in ("audio", "vlm"):
+            # memory K/V slots materialize with prefill; give them abstract
+            # shapes here so the decode step can lower standalone.
+            from repro.models.transformer import pad_len
+            shards = xcfg.seq_shards if xcfg is not None else 1
+            L = xcfg.L if xcfg is not None else 1
+            if cfg.family == "audio":
+                M = pad_len(cfg.encoder_seq, shards, max(L, 1))
+                n_stack = cfg.n_layers
+            else:
+                M = pad_len(cfg.image_tokens, shards, max(L, 1))
+                n_stack = cfg.n_layers // cfg.cross_attn_every
+            mem_kv = {"k": jnp.zeros((n_stack, B, M, cfg.n_kv_heads, cfg.hd),
+                                     cfg.jdtype),
+                      "v": jnp.zeros((n_stack, B, M, cfg.n_kv_heads, cfg.hd),
+                                     cfg.jdtype)}
+            mem_mask = jnp.zeros((B, M), bool)
+            cache = {**cache, "mem_kv": mem_kv, "mem_mask": mem_mask}
+        return cache
+
+    return jax.eval_shape(build)
+
+
+def forward_fn(cfg: ModelConfig):
+    if cfg.family == "vit":
+        return lambda params, batch, xcfg: (
+            vit_mod.forward_vit(params, batch["images"], cfg, xcfg),
+            jnp.zeros((), jnp.float32))
+    return lambda params, batch, xcfg: tfm.forward_lm(params, batch, cfg, xcfg)
+
+
+def prefill_fn(cfg: ModelConfig):
+    """Forward that unembeds only the last position (serving prefill)."""
+    if cfg.family == "vit":
+        return forward_fn(cfg)
+    return lambda params, batch, xcfg: tfm.forward_lm(params, batch, cfg,
+                                                      xcfg, last_only=True)
+
+
+def decode_fn(cfg: ModelConfig):
+    if cfg.family == "vit":
+        raise ValueError("ViT is encoder-only: no decode step (skip decode "
+                         "shapes per the brief)")
+    return lambda params, batch, cache, idx, xcfg: tfm.decode_step(
+        params, batch, cache, idx, cfg, xcfg)

@@ -1,0 +1,325 @@
+"""State-space / recurrent sequence mixers: Mamba (hymba) and xLSTM blocks.
+
+PRISM inapplicability (DESIGN.md §4): these paths have no softmax attention
+to feed segment means into. Sequence distribution instead uses *state
+hand-off*: the inter-device object is the recurrent state (independent of
+sequence length — already maximally "compressed"), exchanged once per block
+via an exclusive prefix scan over the sequence axis
+(``jax.lax.associative_scan``-style, here a P-step ``ppermute`` chain since P
+is small and states are tiny).
+
+Forms implemented per mixer:
+  * ``*_scan``  — full-sequence (train / prefill), ``lax.scan`` over time:
+    compiles to a compact while-loop; the chunked Pallas formulation is the
+    hillclimb target (EXPERIMENTS.md §Perf).
+  * ``*_step``  — single-token decode with O(1) carried state.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMCfg
+from repro.models.layers import dense_init, init_norm, apply_norm
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) — hymba's parallel-SSM head path
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, d: int, cfg: SSMCfg, dtype, d_inner: Optional[int] = None
+               ) -> Params:
+    di = d_inner or cfg.expand * d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], d, 2 * di, dtype),
+        "conv": (jax.random.normal(ks[1], (cfg.conv_width, di), jnp.float32)
+                 * (cfg.conv_width ** -0.5)).astype(dtype),
+        "w_bc": dense_init(ks[2], di, 2 * cfg.state_size, dtype),
+        "w_dt": dense_init(ks[3], di, di, dtype, scale=d ** -0.5),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, cfg.state_size + 1,
+                                             dtype=jnp.float32), (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 carry: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over time. x: [B, N, di]; w: [W, di]."""
+    W = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return out, xp[:, -(W - 1):, :]
+
+
+def _mamba_inner(params, x, cfg: SSMCfg):
+    """Shared projections; returns (xc, z, dt, B_in, C_in)."""
+    di = params["d_skip"].shape[0]
+    xz = x @ params["w_in"]
+    xs, z = xz[..., :di], xz[..., di:]
+    xc, conv_carry = _causal_conv(xs, params["conv"])
+    xc = jax.nn.silu(xc)
+    bc = xc @ params["w_bc"]
+    B_in, C_in = bc[..., :cfg.state_size], bc[..., cfg.state_size:]
+    dt = jax.nn.softplus((xc @ params["w_dt"]).astype(jnp.float32)
+                         + params["dt_bias"])
+    return xc, z, dt, B_in, C_in, conv_carry
+
+
+def chunked_time_scan(step, state0, xs_time, chunk: int):
+    """Two-level time scan: outer scan over chunks with ``jax.checkpoint``
+    (backward stores the recurrent state only at chunk boundaries and
+    recomputes inside) — without this, reverse-mode through a T-step scan
+    saves T copies of the state (e.g. xLSTM's [B,H,dh,dh] matrix memory →
+    hundreds of GB at T=4096).
+
+    xs_time: pytree with leading time axis T (T % chunk == 0 expected;
+    falls back to a single plain scan otherwise)."""
+    T = jax.tree_util.tree_leaves(xs_time)[0].shape[0]
+    if chunk <= 1 or T % chunk or T <= chunk:
+        return jax.lax.scan(step, state0, xs_time)
+    n = T // chunk
+    xs_c = jax.tree_util.tree_map(
+        lambda t: t.reshape(n, chunk, *t.shape[1:]), xs_time)
+
+    @jax.checkpoint
+    def outer(state, xs_chunk):
+        state, ys = jax.lax.scan(step, state, xs_chunk)
+        return state, ys
+
+    state, ys_c = jax.lax.scan(outer, state0, xs_c)
+    ys = jax.tree_util.tree_map(
+        lambda t: t.reshape(T, *t.shape[2:]), ys_c)
+    return state, ys
+
+
+def mamba_scan(params: Params, x: jnp.ndarray, cfg: SSMCfg,
+               h0: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence selective scan. x: [B, N, D] → (y: [B, N, D], h_N)."""
+    B, N, D = x.shape
+    di = params["d_skip"].shape[0]
+    xc, z, dt, B_in, C_in, _ = _mamba_inner(params, x, cfg)
+    A = -jnp.exp(params["a_log"])                       # [di, S] (negative)
+
+    def step(h, inp):
+        xc_t, dt_t, b_t, c_t = inp
+        dA = jnp.exp(dt_t[:, :, None] * A[None])        # [B, di, S]
+        dBx = dt_t[:, :, None] * b_t[:, None, :] * xc_t.astype(jnp.float32)[:, :, None]
+        h = dA * h + dBx
+        y = jnp.einsum("bds,bs->bd", h, c_t)            # [B, di]
+        return h, y
+
+    h0 = jnp.zeros((B, di, cfg.state_size), jnp.float32) if h0 is None else h0
+    xs = (xc.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          B_in.transpose(1, 0, 2).astype(jnp.float32),
+          C_in.transpose(1, 0, 2).astype(jnp.float32))
+    h_final, ys = chunked_time_scan(step, h0, xs, cfg.chunk)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)           # [B, N, di]
+    y = y + xc * params["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_out"], h_final
+
+
+def mamba_step(params: Params, x: jnp.ndarray, cfg: SSMCfg,
+               state: Dict[str, jnp.ndarray]
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token decode. x: [B, 1, D]; state: {"h": [B,di,S], "conv": ...}."""
+    di = params["d_skip"].shape[0]
+    xz = x @ params["w_in"]
+    xs, z = xz[..., :di], xz[..., di:]
+    xc, conv_carry = _causal_conv(xs, params["conv"], state["conv"])
+    xc = jax.nn.silu(xc)
+    bc = xc @ params["w_bc"]
+    B_in, C_in = bc[..., :cfg.state_size], bc[..., cfg.state_size:]
+    dt = jax.nn.softplus((xc @ params["w_dt"]).astype(jnp.float32)
+                         + params["dt_bias"])
+    A = -jnp.exp(params["a_log"])
+    dA = jnp.exp(dt[:, 0, :, None] * A[None])
+    dBx = (dt[:, 0, :, None] * B_in.astype(jnp.float32)[:, 0, None, :]
+           * xc.astype(jnp.float32)[:, 0, :, None])
+    h = dA * state["h"] + dBx
+    y = jnp.einsum("bds,bs->bd", h, C_in.astype(jnp.float32)[:, 0])[:, None, :]
+    y = y.astype(x.dtype) + xc * params["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_out"], {"h": h, "conv": conv_carry}
+
+
+def init_mamba_state(batch: int, d: int, cfg: SSMCfg, dtype,
+                     d_inner: Optional[int] = None):
+    di = d_inner or cfg.expand * d
+    return {"h": jnp.zeros((batch, di, cfg.state_size), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, di), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM's matrix-memory cell)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d: int, cfg: SSMCfg, dtype) -> Params:
+    H = cfg.mlstm_heads
+    dh = int(d * cfg.proj_factor) // H
+    di = H * dh
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * di, dtype),
+        "w_q": dense_init(ks[1], di, di, dtype),
+        "w_k": dense_init(ks[2], di, di, dtype),
+        "w_v": dense_init(ks[3], di, di, dtype),
+        "w_if": dense_init(ks[4], di, 2 * H, dtype, scale=0.02),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]
+                                ).astype(jnp.float32),
+        "gn_scale": jnp.ones((di,), jnp.float32),
+        "w_down": dense_init(ks[5], di, d, dtype),
+    }
+
+
+def mlstm_scan(params: Params, x: jnp.ndarray, cfg: SSMCfg,
+               state0: Optional[Dict[str, jnp.ndarray]] = None):
+    """Full-sequence mLSTM. x: [B, N, D] → (y, final_state).
+
+    Stabilized exponential gating (Beck et al. 2024): m tracks the running
+    max of (f̃ + m_prev, ĩ); C, n are rescaled accordingly.
+    """
+    B, N, D = x.shape
+    H = cfg.mlstm_heads
+    di = params["w_q"].shape[0]
+    dh = di // H
+    up = x @ params["w_up"]
+    xin, z = up[..., :di], up[..., di:]
+    q = (xin @ params["w_q"]).reshape(B, N, H, dh) * (dh ** -0.5)
+    k = (xin @ params["w_k"]).reshape(B, N, H, dh) * (dh ** -0.5)
+    v = (xin @ params["w_v"]).reshape(B, N, H, dh)
+    gates = (xin @ params["w_if"]).astype(jnp.float32) + params["b_if"]
+    i_pre, f_pre = gates[..., :H], gates[..., H:]       # [B, N, H]
+
+    def step(carry, inp):
+        C, n, m = carry                                  # [B,H,dh,dh],[B,H,dh],[B,H]
+        q_t, k_t, v_t, i_t, f_t = inp
+        logf = -jax.nn.softplus(-f_t)                    # log σ(f)
+        m_new = jnp.maximum(logf + m, i_t)
+        fg = jnp.exp(logf + m - m_new)                   # [B,H]
+        ig = jnp.exp(i_t - m_new)
+        kf = k_t.astype(jnp.float32)
+        vf = v_t.astype(jnp.float32)
+        C = fg[..., None, None] * C + ig[..., None, None] * (
+            kf[..., :, None] * vf[..., None, :])         # [B,H,dh,dh]
+        n = fg[..., None] * n + ig[..., None] * kf
+        qf = q_t.astype(jnp.float32)
+        num = jnp.einsum("bhd,bhde->bhe", qf, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)),
+                          jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), (num / den)
+
+    if state0 is None:
+        state0 = init_mlstm_state(B, D, cfg)
+    carry0 = (state0["C"], state0["n"], state0["m"])
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (q, k, v)) + (
+        i_pre.transpose(1, 0, 2), f_pre.transpose(1, 0, 2))
+    (C, n, m), ys = chunked_time_scan(step, carry0, xs, cfg.chunk)
+    h = ys.transpose(1, 0, 2, 3).reshape(B, N, di)       # [B, N, di]
+    h = _groupnorm_heads(h, H, params["gn_scale"]).astype(x.dtype)
+    y = (h * jax.nn.silu(z)) @ params["w_down"]
+    return y, {"C": C, "n": n, "m": m}
+
+
+def _groupnorm_heads(h: jnp.ndarray, H: int, scale: jnp.ndarray):
+    """Per-head RMS-style groupnorm used by xLSTM after the cell."""
+    B, N, di = h.shape
+    hh = h.reshape(B, N, H, di // H).astype(jnp.float32)
+    var = jnp.mean(jnp.square(hh), axis=-1, keepdims=True)
+    hh = hh * jax.lax.rsqrt(var + 1e-6)
+    return (hh.reshape(B, N, di) * scale)
+
+
+def mlstm_step(params: Params, x: jnp.ndarray, cfg: SSMCfg,
+               state: Dict[str, jnp.ndarray]):
+    """Single-token decode — same math as one scan step."""
+    y, new_state = mlstm_scan(params, x, cfg, state0=state)
+    return y, new_state
+
+
+def init_mlstm_state(batch: int, d: int, cfg: SSMCfg):
+    H = cfg.mlstm_heads
+    dh = int(d * cfg.proj_factor) // H
+    return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM's scalar-memory cell with recurrent mixing)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d: int, cfg: SSMCfg, dtype) -> Params:
+    H = cfg.mlstm_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    # input weights for (i, f, z, o); block-diagonal recurrent weights per head
+    return {
+        "w_x": dense_init(ks[0], d, 4 * d, dtype),
+        "r": (jax.random.normal(ks[1], (4, H, dh, dh), jnp.float32)
+              * (dh ** -0.5)).astype(dtype),
+        "b": jnp.concatenate([jnp.zeros((d,)), 3.0 * jnp.ones((d,)),
+                              jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "gn_scale": jnp.ones((d,), jnp.float32),
+        "w_up": dense_init(ks[2], d, int(d * 4 / 3) * 2, dtype),
+        "w_down": dense_init(ks[3], int(d * 4 / 3), d, dtype),
+    }
+
+
+def slstm_scan(params: Params, x: jnp.ndarray, cfg: SSMCfg,
+               state0: Optional[Dict[str, jnp.ndarray]] = None):
+    """Strictly-sequential sLSTM over time. x: [B, N, D] → (y, state)."""
+    B, N, D = x.shape
+    H = cfg.mlstm_heads
+    dh = D // H
+    wx = (x @ params["w_x"]).astype(jnp.float32)         # [B, N, 4D]
+
+    def step(carry, wx_t):
+        c, n, h, m = carry                               # all [B, D] (+m)
+        hh = h.reshape(B, H, dh)
+        rec = jnp.stack([
+            jnp.einsum("bhd,hde->bhe", hh, params["r"][g].astype(jnp.float32))
+            for g in range(4)], axis=1).reshape(B, 4 * D)
+        pre = wx_t + rec + params["b"]
+        i_p, f_p, z_p, o_p = jnp.split(pre, 4, axis=-1)
+        logf = -jax.nn.softplus(-f_p)
+        m_new = jnp.maximum(logf + m, i_p)
+        ig = jnp.exp(i_p - m_new)
+        fg = jnp.exp(logf + m - m_new)
+        c = fg * c + ig * jnp.tanh(z_p)
+        n = fg * n + ig
+        h_new = jax.nn.sigmoid(o_p) * c / jnp.maximum(n, 1.0)
+        return (c, n, h_new, m_new), h_new
+
+    if state0 is None:
+        state0 = init_slstm_state(B, D)
+    carry0 = (state0["c"], state0["n"], state0["h"], state0["m"])
+    (c, n, h, m), ys = chunked_time_scan(step, carry0, wx.transpose(1, 0, 2),
+                                         cfg.chunk)
+    hseq = ys.transpose(1, 0, 2)                         # [B, N, D] f32
+    hseq = _groupnorm_heads(hseq, H, params["gn_scale"]).astype(x.dtype)
+    # post-cell gated FFN (proj factor 4/3)
+    du = params["w_down"].shape[0]
+    up = hseq @ params["w_up"]
+    y = (jax.nn.gelu(up[..., :du]) * up[..., du:]) @ params["w_down"]
+    return y, {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_step(params: Params, x: jnp.ndarray, cfg: SSMCfg,
+               state: Dict[str, jnp.ndarray]):
+    return slstm_scan(params, x, cfg, state0=state)
+
+
+def init_slstm_state(batch: int, d: int):
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, d), -1e30, jnp.float32)}

@@ -1,0 +1,100 @@
+"""ViT encoder — the paper's evaluation workload (ViT-B/16, CIFAR-10 at
+224², N = 197 tokens). Bidirectional attention with the PRISM / Voltage /
+local exchange threaded through every block, exactly as the prototype
+distributes it; the classifier head reads the CLS token.
+
+Sequence padding: 197 is not divisible by P partitions, so tokens are padded
+to ``pad_len(197, P, L)`` and the pads are excluded via the mask-aware
+segment means (exact — zero probability mass on pads).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.exchange import ExchangeConfig, exchange_attention
+from repro.models.layers import (apply_mlp, apply_norm, dense_init, init_mlp,
+                                 init_norm, project_qkv)
+from repro.models.transformer import _attn_spec, _stack, pad_len
+
+Params = Dict[str, Any]
+
+PATCH = 16
+IMAGE = 224
+N_PATCHES = (IMAGE // PATCH) ** 2          # 196
+N_TOKENS = N_PATCHES + 1                   # + CLS = 197
+
+
+def init_vit(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    d, dtype = cfg.d_model, cfg.jdtype
+    patch_dim = PATCH * PATCH * 3
+
+    def layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": init_norm(cfg.norm_type, d),
+                "attn": {
+                    "wq": dense_init(jax.random.fold_in(k1, 0), d, d, dtype),
+                    "wk": dense_init(jax.random.fold_in(k1, 1), d, d, dtype),
+                    "wv": dense_init(jax.random.fold_in(k1, 2), d, d, dtype),
+                    "wo": dense_init(jax.random.fold_in(k1, 3), d, d, dtype)},
+                "ln2": init_norm(cfg.norm_type, d),
+                "mlp": init_mlp(k2, d, cfg.d_ff, dtype, gated=False)}
+
+    return {
+        "patch_embed": dense_init(ks[0], patch_dim, d, dtype),
+        "patch_bias": jnp.zeros((d,), dtype),
+        "cls": (jax.random.normal(ks[1], (1, 1, d), jnp.float32) * 0.02
+                ).astype(dtype),
+        "pos": (jax.random.normal(ks[2], (1, N_TOKENS, d), jnp.float32) * 0.02
+                ).astype(dtype),
+        "layers": _stack(layer, ks[3], cfg.n_layers),
+        "final_norm": init_norm(cfg.norm_type, d),
+        "head": dense_init(ks[4], d, cfg.vocab_size, dtype, scale=0.02),
+        "head_bias": jnp.zeros((cfg.vocab_size,), dtype),
+    }
+
+
+def patchify(images: jnp.ndarray) -> jnp.ndarray:
+    """[B, 224, 224, 3] → [B, 196, 768] raw patch vectors."""
+    B = images.shape[0]
+    g = IMAGE // PATCH
+    x = images.reshape(B, g, PATCH, g, PATCH, 3)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, N_PATCHES, PATCH * PATCH * 3)
+
+
+def forward_vit(params: Params, images: jnp.ndarray, cfg: ModelConfig,
+                xcfg: ExchangeConfig) -> jnp.ndarray:
+    """[B, 224, 224, 3] → class logits [B, n_classes]."""
+    B = images.shape[0]
+    x = patchify(images.astype(cfg.jdtype)) @ params["patch_embed"]
+    x = x + params["patch_bias"]
+    x = jnp.concatenate([jnp.broadcast_to(params["cls"], (B, 1, x.shape[-1])),
+                         x], axis=1)
+    x = x + params["pos"]
+
+    # pad so every partition divides into L integer segments
+    N = pad_len(N_TOKENS, max(xcfg.seq_shards, 1), max(xcfg.L, 1))
+    x = jnp.pad(x, ((0, 0), (0, N - N_TOKENS), (0, 0)))
+    kv_mask = jnp.broadcast_to(jnp.arange(N)[None] < N_TOKENS, (B, N))
+
+    spec = _attn_spec(cfg, causal=False, use_rope=False)
+
+    def body(xc, lp):
+        xin = apply_norm(cfg.norm_type, lp["ln1"], xc)
+        q, k, v = project_qkv(lp["attn"], xin, spec, None)
+        h = exchange_attention(q, k, v, xcfg, causal=False, kv_mask=kv_mask)
+        h = h.reshape(B, N, -1) @ lp["attn"]["wo"]
+        xc = xc + h
+        h2 = apply_mlp(lp["mlp"], apply_norm(cfg.norm_type, lp["ln2"], xc),
+                       cfg.act)
+        return xc + h2, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["layers"])
+    x = apply_norm(cfg.norm_type, params["final_norm"], x)
+    cls = x[:, 0]
+    return (cls @ params["head"] + params["head_bias"]).astype(jnp.float32)

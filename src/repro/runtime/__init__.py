@@ -1,0 +1,6 @@
+from repro.runtime.fault import FaultTolerantLoop, HeartbeatMonitor, FaultEvent
+from repro.runtime.elastic import ElasticMeshManager, replan_for_failure
+from repro.runtime.straggler import StragglerMitigator
+
+__all__ = ["FaultTolerantLoop", "HeartbeatMonitor", "FaultEvent",
+           "ElasticMeshManager", "replan_for_failure", "StragglerMitigator"]

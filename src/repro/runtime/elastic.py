@@ -1,0 +1,70 @@
+"""Elastic re-meshing: survive losing a pod (or shrinking the fleet).
+
+PRISM's sequence-partition count P is a *runtime* parameter (the paper's
+adaptive policy already varies execution shape per request), which makes the
+whole system naturally elastic: on failure we rebuild the mesh from the
+surviving devices, re-derive the sharding plan (P follows the model-axis
+size), and re-shard the checkpointed state onto it — checkpoints store
+global arrays, so restore-with-new-shardings is just ``jax.device_put`` with
+the new specs (checkpoint/manager.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.exchange import ExchangeMode
+from repro.sharding.specs import ShardingPlan, make_plan
+
+
+@dataclasses.dataclass
+class ElasticMeshManager:
+    """Tracks the healthy device set and rebuilds mesh + plan on change."""
+    cfg: ModelConfig
+    mode: ExchangeMode
+    L: int = 0
+    devices: Optional[list] = None
+
+    def __post_init__(self):
+        self.devices = list(self.devices or jax.devices())
+
+    def build(self, axis_shape: Tuple[int, ...], axis_names: Tuple[str, ...]):
+        n = int(np.prod(axis_shape))
+        devs = np.asarray(self.devices[:n]).reshape(axis_shape)
+        mesh = jax.sharding.Mesh(devs, axis_names)
+        return mesh, make_plan(mesh, self.cfg, self.mode, L=self.L)
+
+    def drop(self, n_failed: int):
+        """Remove failed devices and return the largest viable mesh."""
+        self.devices = self.devices[:len(self.devices) - n_failed]
+        return self.best_mesh()
+
+    def best_mesh(self):
+        n = len(self.devices)
+        shape = largest_mesh_shape(n)
+        names = ("data", "model") if len(shape) == 2 else ("pod", "data",
+                                                           "model")
+        return self.build(shape, names)
+
+
+def largest_mesh_shape(n_devices: int) -> Tuple[int, ...]:
+    """Largest (data, model) grid with model a power of two ≤ 16 that fits
+    in ``n_devices`` — PRISM's P re-balances to the new model-axis size."""
+    best = (1, 1)
+    for model in (16, 8, 4, 2, 1):
+        data = n_devices // model
+        if data >= 1 and data * model > best[0] * best[1]:
+            best = (data, model)
+    return best
+
+
+def replan_for_failure(cfg: ModelConfig, mode: ExchangeMode,
+                       surviving: int, L: int = 0):
+    """One-shot helper: mesh + plan for the surviving device count."""
+    mgr = ElasticMeshManager(cfg, mode, L=L,
+                             devices=jax.devices()[:surviving])
+    return mgr.best_mesh()

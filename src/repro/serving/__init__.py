@@ -1,0 +1,5 @@
+from repro.serving.engine import ServeEngine, build_prefill_step, build_decode_step
+from repro.serving.dispatcher import AdaptiveDispatcher
+
+__all__ = ["ServeEngine", "build_prefill_step", "build_decode_step",
+           "AdaptiveDispatcher"]

@@ -1,0 +1,62 @@
+"""Adaptive dispatcher: the paper's runtime loop around the policy.
+
+Holds one jitted executable per execution mode (local / prism@CR) and routes
+each arriving request batch to the one the profiled map predicts fastest
+(or most energy-efficient) under current network conditions. Bandwidth is
+observed via an EWMA probe the caller updates (`observe_bandwidth`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+from repro.core.perfmap import PerfMap
+from repro.core.policy import AdaptivePolicy, Decision, Objective
+
+
+@dataclasses.dataclass
+class DispatchRecord:
+    batch: int
+    bandwidth_mbps: float
+    decision: Decision
+    wall_ms: float
+
+
+class AdaptiveDispatcher:
+    """Routes batches to per-mode executables per the profiled policy."""
+
+    def __init__(self, perfmap: PerfMap,
+                 executables: Dict[str, Callable],
+                 objective: Objective = "latency",
+                 bandwidth_alpha: float = 0.3):
+        """``executables``: {"local": fn, "prism@9.9": fn, ...} — each fn
+        takes the request batch pytree and returns outputs."""
+        self.policy = AdaptivePolicy(perfmap)
+        self.execs = executables
+        self.objective: Objective = objective
+        self._bw = 400.0
+        self._alpha = bandwidth_alpha
+        self.history: list[DispatchRecord] = []
+
+    def observe_bandwidth(self, mbps: float) -> None:
+        self._bw = self._alpha * mbps + (1 - self._alpha) * self._bw
+
+    @property
+    def bandwidth(self) -> float:
+        return self._bw
+
+    def _key(self, d: Decision) -> str:
+        return "local" if d.mode == "local" else f"{d.mode}@{d.cr:g}"
+
+    def dispatch(self, batch_inputs: Any, batch_size: int) -> Any:
+        d = self.policy.decide(batch_size, self._bw, self.objective)
+        key = self._key(d)
+        if key not in self.execs:           # fall back to any same-mode exec
+            key = next((k for k in self.execs if k.startswith(d.mode)),
+                       "local")
+        t0 = time.perf_counter()
+        out = self.execs[key](batch_inputs)
+        wall = (time.perf_counter() - t0) * 1e3
+        self.history.append(DispatchRecord(batch_size, self._bw, d, wall))
+        return out

@@ -1,0 +1,6 @@
+from repro.sharding.specs import (ShardingPlan, make_plan, param_shardings,
+                                  batch_shardings, cache_shardings,
+                                  opt_state_shardings)
+
+__all__ = ["ShardingPlan", "make_plan", "param_shardings", "batch_shardings",
+           "cache_shardings", "opt_state_shardings"]

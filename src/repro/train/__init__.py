@@ -1,0 +1,5 @@
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update
+from repro.train.train_step import build_train_step, loss_fn
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "build_train_step",
+           "loss_fn"]

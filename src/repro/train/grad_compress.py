@@ -1,0 +1,90 @@
+"""Segment-Means gradient compression for the slow (DCN / pod) axis.
+
+The paper's insight — compress what crosses the slow, volume-proportional
+link — applied to training communication: gradients are reduced normally
+over the fast ICI axes by GSPMD, while the cross-pod reduction exchanges
+only L row-segment means per matrix (the same Eq. (1) operator used for
+activations), shrinking DCN bytes by rows/L.
+
+Lossy compression needs **error feedback** to keep SGD unbiased over time
+(Seide et al. '14; Karimireddy et al. '19): each pod keeps the local
+residual ``g - decompress(compress(g))`` and adds it to the next step's
+gradient before compressing, so all gradient mass is eventually
+transmitted. ``tests/test_grad_compress.py`` verifies the telescoping-sum
+property exactly.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g: jnp.ndarray, L: int) -> jnp.ndarray:
+    """Row-segment means of the leading dim: [r, ...] → [L, ...] (f32)."""
+    r = g.shape[0]
+    if L >= r or r % L:
+        return g.astype(jnp.float32)
+    seg = r // L
+    return g.reshape(L, seg, *g.shape[1:]).astype(jnp.float32).mean(axis=1)
+
+
+def decompress(z: jnp.ndarray, r: int) -> jnp.ndarray:
+    """Broadcast L row means back to r rows (transpose of ``compress`` up to
+    the 1/seg scale — each row receives its segment's mean)."""
+    L = z.shape[0]
+    if L >= r:
+        return z
+    seg = r // L
+    return jnp.repeat(z, seg, axis=0)
+
+
+def compress_with_feedback(g: jnp.ndarray, residual: Optional[jnp.ndarray],
+                           L: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(gradient, carried residual) → (compressed payload, new residual).
+
+    payload = compress(g + residual); new residual = (g + residual) −
+    decompress(payload): exactly the mass the wire did NOT carry.
+    """
+    gf = g.astype(jnp.float32)
+    if residual is not None:
+        gf = gf + residual
+    z = compress(gf, L)
+    new_res = gf - decompress(z, g.shape[0]).astype(jnp.float32)
+    return z, new_res
+
+
+def compressed_cross_pod_mean(grads: Any, residuals: Any, L: int,
+                              pod_axis: str = "pod"):
+    """Mean-reduce a gradient pytree across pods with Segment-Means payloads.
+
+    Call INSIDE a manual region over ``pod_axis`` (shard_map), after the
+    fast-axis reductions: every leaf with a compressible leading dim sends
+    ``L/r`` of its bytes over DCN; error feedback keeps the update unbiased
+    over steps. Returns (reduced grads, new residuals).
+    """
+    def one(g, res):
+        if g.ndim < 2 or g.shape[0] % max(L, 1) or g.shape[0] <= L:
+            return jax.lax.pmean(g.astype(jnp.float32), pod_axis), res
+        z, new_res = compress_with_feedback(g, res, L)
+        z = jax.lax.pmean(z, pod_axis)
+        return decompress(z, g.shape[0]), new_res
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = (treedef.flatten_up_to(residuals) if residuals is not None
+              else [None] * len(flat_g))
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] if o[1] is not None else
+                               jnp.zeros_like(o[0]) for o in out]))
+
+
+def init_residuals(grads: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compression_ratio(r: int, L: int) -> float:
+    """DCN byte reduction for a leading dim of r rows."""
+    return r / L if (L < r and r % L == 0) else 1.0

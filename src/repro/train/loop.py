@@ -1,0 +1,73 @@
+"""Training loop wiring: data cursor + fault-tolerant driver + checkpoints.
+
+The inner step is the pjit'd train_step from train_step.py; this module adds
+the deterministic data cursor (seed ⊕ step → batch), checkpoint cadence and
+the heartbeat hook so the FaultTolerantLoop can restart it bit-exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.core.exchange import ExchangeConfig
+from repro.data.pipeline import SyntheticLMDataset
+from repro.models import registry
+from repro.runtime.fault import FaultTolerantLoop, HeartbeatMonitor
+from repro.train.optimizer import OptConfig, adamw_init
+from repro.train.train_step import build_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 200
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0
+    log_every: int = 10
+    batch_size: int = 8
+    seq_len: int = 128
+
+
+class Trainer:
+    """Single-host trainer used by examples/ and tests (same step code the
+    launcher shards over the production mesh)."""
+
+    def __init__(self, cfg: ModelConfig, xcfg: ExchangeConfig,
+                 tcfg: TrainerConfig = TrainerConfig(),
+                 opt_cfg: Optional[OptConfig] = None):
+        self.cfg, self.xcfg, self.tcfg = cfg, xcfg, tcfg
+        self.params = registry.init_params(cfg, seed=tcfg.seed)
+        self.opt_state = adamw_init(self.params)
+        self.step_fn = jax.jit(build_train_step(cfg, xcfg, opt_cfg),
+                               donate_argnums=(0, 1))
+        self.ds = SyntheticLMDataset(cfg.vocab_size, tcfg.seq_len,
+                                     tcfg.batch_size, seed=tcfg.seed)
+        self.metrics_log: list = []
+
+    def batch_for_step(self, step: int) -> Dict[str, jnp.ndarray]:
+        rng = np.random.RandomState(self.tcfg.seed * 100003 + step)
+        b = self.ds.sample(rng)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    def run(self, n_steps: Optional[int] = None, fail_at=None):
+        n = n_steps or self.tcfg.steps
+        ckpt = CheckpointManager(self.tcfg.ckpt_dir, keep=2)
+        monitor = HeartbeatMonitor(["host0"])
+
+        def step_fn(state, batch):
+            params, opt = state
+            params, opt, m = self.step_fn(params, opt, batch)
+            self.metrics_log.append({k: float(v) for k, v in m.items()})
+            return (params, opt), m
+
+        loop = FaultTolerantLoop(step_fn, self.batch_for_step, ckpt, monitor,
+                                 ckpt_every=self.tcfg.ckpt_every)
+        (self.params, self.opt_state), step = loop.run(
+            (self.params, self.opt_state), 0, n, fail_at=fail_at)
+        return step

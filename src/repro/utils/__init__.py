@@ -1,0 +1,4 @@
+from repro.utils.tree import param_count, param_bytes, tree_norm
+from repro.utils.timing import Timer
+
+__all__ = ["param_count", "param_bytes", "tree_norm", "Timer"]

@@ -1,0 +1,50 @@
+"""Wall-clock timing helpers (block_until_ready-aware)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+
+
+@dataclass
+class Timer:
+    """Accumulating timer; ``with timer.scope("x"): ...`` records wall time."""
+
+    records: dict = field(default_factory=dict)
+
+    def scope(self, name: str):
+        return _Scope(self, name)
+
+    def add(self, name: str, dt: float) -> None:
+        self.records.setdefault(name, []).append(dt)
+
+    def mean_ms(self, name: str) -> float:
+        xs = self.records.get(name, [])
+        return 1e3 * sum(xs) / max(len(xs), 1)
+
+
+class _Scope:
+    def __init__(self, timer: Timer, name: str):
+        self.timer, self.name = timer, name
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.timer.add(self.name, time.perf_counter() - self.t0)
+        return False
+
+
+def timeit_jax(fn, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall-time (seconds) of ``fn(*args)`` with device sync."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]

@@ -1,0 +1,34 @@
+"""Distributed correctness via subprocesses (8 host devices per process, so
+the XLA device-count flag never leaks into this pytest process — smoke
+tests here see 1 device, per the dry-run contract)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    return subprocess.run([sys.executable, os.path.join(ROOT, script)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+
+
+@pytest.mark.slow
+def test_exchange_shard_map_equivalences():
+    """shard_map PRISM/Voltage/decode == single-host oracles (8 devices)."""
+    r = _run("scripts/sanity_exchange.py")
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "ALL SANITY PASSED" in r.stdout
+
+
+@pytest.mark.slow
+def test_e2e_distributed_train_and_decode():
+    """PRISM/Voltage train steps + sharded decode on a (4×2) mesh."""
+    r = _run("scripts/sanity_e2e_distributed.py")
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "E2E DISTRIBUTED SANITY PASSED" in r.stdout

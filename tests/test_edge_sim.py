@@ -1,0 +1,120 @@
+"""Edge simulator vs the paper's published numbers (Tables 2/3/4, Fig. 6).
+
+The local column is calibration input (DESIGN.md §6); the distributed
+columns and the derived gains are validation targets with documented
+tolerance bands.
+"""
+import numpy as np
+import pytest
+
+from repro.core.costmodel import EdgeCostModel, EdgeWorkload, vit_flops_per_sample
+
+PAPER_LOCAL = {1: 80.6, 2: 141.3, 4: 249.8, 8: 485.0, 16: 946.0, 32: 1864.8}
+PAPER_PRISM = {1: 168.1, 2: 196.4, 4: 252.9, 8: 414.7, 16: 704.7, 32: 1339.8}
+PAPER_VOLT = {1: 351.0, 2: 497.5, 4: 806.0, 8: 1288.0, 16: 2274.5, 32: 3843.0}
+PAPER_GAIN_LAT = {1: 77.0, 2: 71.6, 4: 69.0, 8: 67.8, 16: 69.0, 32: 65.1}
+
+
+@pytest.fixture(scope="module")
+def model():
+    return EdgeCostModel()
+
+
+def test_vit_gflops_match_table3(model):
+    """Table 3: 35.15 GFLOPs single-device; 17.54 PRISM P=2 CR=9.9;
+    ~20.37 Voltage P=2."""
+    w = model.w
+    full = vit_flops_per_sample(w) / 1e9
+    assert full == pytest.approx(35.15, rel=0.02)
+    prism = vit_flops_per_sample(w, 99, 99 + 10) / 1e9
+    assert prism == pytest.approx(17.54, rel=0.02)
+    volt = (vit_flops_per_sample(w, 99, 197)
+            + w.n_layers * 2 * 98 * w.d_model * 2 * w.d_model) / 1e9
+    assert volt == pytest.approx(20.37, rel=0.05)
+
+
+def test_compute_speedup_50pct(model):
+    """Paper abstract: scaling-aware softmax cuts per-device GFLOPs by up to
+    50.11% at P=2."""
+    full = vit_flops_per_sample(model.w)
+    prism = vit_flops_per_sample(model.w, 99, 109)
+    assert (1 - prism / full) * 100 == pytest.approx(50.11, abs=1.0)
+
+
+@pytest.mark.parametrize("B", sorted(PAPER_LOCAL))
+def test_local_latency_within_10pct(model, B):
+    assert model.local(B)["total_ms"] == pytest.approx(PAPER_LOCAL[B],
+                                                       rel=0.10)
+
+
+@pytest.mark.parametrize("B", sorted(PAPER_PRISM))
+def test_prism_latency_within_12pct(model, B):
+    out = model.distributed(B, 400, P=2, L=10)["total_ms"]
+    assert out == pytest.approx(PAPER_PRISM[B], rel=0.12)
+
+
+@pytest.mark.parametrize("B", sorted(PAPER_VOLT))
+def test_voltage_latency_within_20pct(model, B):
+    out = model.distributed(B, 400, P=2, L=None)["total_ms"]
+    assert out == pytest.approx(PAPER_VOLT[B], rel=0.20)
+
+
+def test_voltage_staging_exceeds_local_at_b1(model):
+    """Paper's headline: at B=1 Voltage's staging alone (94 ms) exceeds the
+    80.6 ms single-device total."""
+    volt = model.distributed(1, 400, P=2, L=None)
+    assert volt["staging_ms"] > 0.8 * model.local(1)["total_ms"]
+
+
+@pytest.mark.parametrize("B", sorted(PAPER_GAIN_LAT))
+def test_adaptive_latency_gain_band(model, B):
+    """Paper Table 4: 65.1–77.0% latency reduction; require each batch's
+    simulated gain within ±8 points of the paper's."""
+    local = model.local(B)["total_ms"]
+    prism = model.distributed(B, 400, 2, 10)["total_ms"]
+    volt = model.distributed(B, 400, 2, None)["total_ms"]
+    gain = 100 * (1 - min(local, prism) / volt)
+    assert abs(gain - PAPER_GAIN_LAT[B]) < 8.0
+
+
+def test_energy_gains_positive_all_batches(model):
+    """Paper: 34–52% energy reduction. The simulator reproduces the ≥8
+    rows within 6 points; small-batch Voltage energy is over-estimated
+    (documented in EXPERIMENTS.md §Paper-validation)."""
+    for B in (8, 16, 32):
+        local = model.local(B)
+        prism = model.distributed(B, 400, 2, 10)
+        volt = model.distributed(B, 400, 2, None)
+        pick = prism if prism["total_ms"] < local["total_ms"] else local
+        gain = 100 * (1 - pick["per_sample_j"] / volt["per_sample_j"])
+        assert 28.0 < gain < 58.0
+
+
+def test_prism_bandwidth_insensitivity(model):
+    """Fig. 6: PRISM stays low across 200–900 Mbps; Voltage degrades
+    severely at low bandwidth."""
+    p200 = model.distributed(8, 200, 2, 10)["total_ms"]
+    p900 = model.distributed(8, 900, 2, 10)["total_ms"]
+    v200 = model.distributed(8, 200, 2, None)["total_ms"]
+    v900 = model.distributed(8, 900, 2, None)["total_ms"]
+    assert (p200 - p900) / p900 < 0.35          # PRISM varies < 35%
+    assert (v200 - v900) / v900 > 0.5           # Voltage degrades > 50%
+
+
+def test_staging_independent_of_bandwidth(model):
+    """§3.2: staging latency is proportional to tensor size and independent
+    of network bandwidth."""
+    a = model.distributed(8, 200, 2, 10)["staging_ms"]
+    b = model.distributed(8, 900, 2, 10)["staging_ms"]
+    assert a == pytest.approx(b)
+
+
+def test_crossover_shifts_with_more_devices(model):
+    """§4: staging grows with P, pushing the crossover to larger batches."""
+    def crossover(P):
+        for B in (1, 2, 4, 8, 16, 32, 64):
+            if model.distributed(B, 400, P, 10)["total_ms"] < \
+                    model.local(B)["total_ms"]:
+                return B
+        return 128
+    assert crossover(4) >= crossover(2)

@@ -1,0 +1,94 @@
+"""Fault tolerance: heartbeat detection, checkpoint-restart determinism,
+straggler mitigation, elastic re-meshing logic."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.elastic import largest_mesh_shape
+from repro.runtime.fault import FaultTolerantLoop, HeartbeatMonitor
+from repro.runtime.straggler import StragglerMitigator
+
+
+def test_heartbeat_timeout():
+    t = [0.0]
+    mon = HeartbeatMonitor(["a", "b"], timeout_s=5.0, clock=lambda: t[0])
+    assert mon.healthy()
+    t[0] = 4.0
+    mon.beat("a")
+    t[0] = 7.0
+    assert mon.dead_nodes() == ["b"]
+
+
+def _counter_loop(tmp_path, ckpt_every=2):
+    """step_fn: state = (count, checksum); checksum folds the batch in, so
+    divergent replay would change it."""
+    def step_fn(state, batch):
+        c, h = state
+        return (c + 1, h * 31 + int(batch)), {}
+
+    def batch_fn(step):
+        return step * step + 7          # deterministic cursor
+
+    ckpt = CheckpointManager(str(tmp_path), keep=3)
+    mon = HeartbeatMonitor(["n0", "n1"], timeout_s=1e9)
+    return FaultTolerantLoop(
+        step_fn, batch_fn, ckpt, mon, ckpt_every=ckpt_every), ckpt
+
+
+def test_restart_deterministic(tmp_path):
+    loop, _ = _counter_loop(tmp_path / "a")
+    clean, _ = loop.run((jnp.asarray(0), jnp.asarray(1)), 0, 10)
+
+    loop2, _ = _counter_loop(tmp_path / "b")
+    failed, _ = loop2.run((jnp.asarray(0), jnp.asarray(1)), 0, 10,
+                          fail_at={5: "n1"})
+    assert any(e.kind == "node_down" for e in loop2.events)
+    assert int(clean[0]) == int(failed[0])
+    assert int(clean[1]) == int(failed[1])      # bit-identical replay
+
+
+def test_resume_from_existing_checkpoint(tmp_path):
+    loop, ckpt = _counter_loop(tmp_path)
+    state, step = loop.run((jnp.asarray(0), jnp.asarray(1)), 0, 6)
+    assert step == 6
+    # new loop, same dir → resumes from the last checkpoint, not step 0
+    loop2 = FaultTolerantLoop(loop.step_fn, loop.batch_fn, ckpt,
+                              HeartbeatMonitor(["n0"]), ckpt_every=2)
+    state2, step2 = loop2.run((jnp.asarray(0), jnp.asarray(1)), 0, 8)
+    assert any(e.kind == "restart" for e in loop2.events)
+    assert step2 == 8
+
+
+def test_straggler_detection_and_rebalance():
+    mit = StragglerMitigator(n_devices=4)
+    for _ in range(10):
+        mit.observe(np.array([1.0, 1.0, 1.0, 2.0]))   # device 3 is slow
+    assert mit.stragglers() == [3]
+    parts = mit.rebalanced_partitions(n_tokens=1600, seg_size=10)
+    assert sum(parts) == 1600
+    assert all(p % 10 == 0 for p in parts)
+    assert parts[3] == min(parts)                     # slow device gets less
+
+
+@given(st.integers(1, 600))
+@settings(max_examples=60, deadline=None)
+def test_largest_mesh_shape_properties(n):
+    d, m = largest_mesh_shape(n)
+    assert d * m <= n
+    assert m in (1, 2, 4, 8, 16)
+    # never wastes more than half the fleet beyond what divisibility forces
+    assert d * m >= n // 2 or n < 2
+
+
+@given(st.lists(st.floats(0.1, 10.0), min_size=2, max_size=16))
+@settings(max_examples=40, deadline=None)
+def test_rebalance_total_invariant(times):
+    mit = StragglerMitigator(n_devices=len(times))
+    mit.observe(np.asarray(times))
+    parts = mit.rebalanced_partitions(n_tokens=len(times) * 160, seg_size=8)
+    assert sum(parts) == len(times) * 160
+    assert all(p >= 8 for p in parts)

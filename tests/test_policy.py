@@ -1,0 +1,84 @@
+"""Performance map + adaptive policy: paper §3.3 semantics."""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.costmodel import EdgeCostModel
+from repro.core.perfmap import PerfEntry, PerfKey, PerfMap
+from repro.core.policy import AdaptivePolicy
+from repro.core.profiler import (PAPER_BATCHES, PAPER_BWS, PAPER_CRS,
+                                 SweepSpec, profile_simulated, sweep_cost)
+
+
+@pytest.fixture(scope="module")
+def perfmap():
+    return profile_simulated()
+
+
+def test_sweep_cost_formula():
+    """Paper: ~|B|·|CR|·|BW|·T passes ≈ a few thousand, 'a one-time
+    profiling sweep of ~200 inference passes' per configuration grid cell."""
+    spec = SweepSpec()
+    assert sweep_cost(spec) == 6 * 3 * 8 * 20
+
+
+def test_perfmap_roundtrip(tmp_path, perfmap):
+    path = str(tmp_path / "perf.json")
+    perfmap.save(path)
+    loaded = PerfMap.load(path)
+    assert len(loaded) == len(perfmap)
+    k = PerfKey("prism", 8, 9.9, 400.0)
+    assert loaded.get(k).total_ms == pytest.approx(perfmap.get(k).total_ms)
+
+
+def test_policy_batch_crossover_is_8(perfmap):
+    """Paper §5.1: 'Adaptive crossover at batch 8' at ≈400 Mbps."""
+    pol = AdaptivePolicy(perfmap)
+    assert pol.batch_crossover(400.0) == 8
+    for b in (1, 2, 4):
+        assert not pol.decide(b, 400.0).distributed
+    for b in (8, 16, 32):
+        assert pol.decide(b, 400.0).distributed
+
+
+def test_policy_picks_best_cr(perfmap):
+    d = pol = AdaptivePolicy(perfmap).decide(32, 400.0)
+    assert d.mode == "prism"
+    assert d.cr == max(PAPER_CRS)      # highest compression wins on latency
+
+
+def test_policy_energy_objective(perfmap):
+    pol = AdaptivePolicy(perfmap)
+    d = pol.decide(16, 400.0, objective="energy")
+    assert d.objective == "energy"
+    assert d.expected.per_sample_j <= pol.decide(
+        16, 400.0, objective="latency").expected.per_sample_j + 1e-9
+
+
+def test_voltage_never_selected(perfmap):
+    """Paper: full-tensor exchange loses at every batch size — the policy
+    (allowed all modes) must never pick it."""
+    pol = AdaptivePolicy(perfmap, allow_modes=("local", "prism", "voltage"))
+    for b in PAPER_BATCHES:
+        for bw in PAPER_BWS:
+            assert pol.decide(b, bw).mode != "voltage"
+
+
+def test_bandwidth_crossover_near_paper(perfmap):
+    """Paper Fig. 6: PRISM crosses single-device near 340 Mbps at B=8 —
+    accept the [200, 500] band for the simulator."""
+    pol = AdaptivePolicy(perfmap)
+    bw = pol.bandwidth_crossover(8)
+    assert bw is not None and 200 <= bw <= 500
+
+
+@given(st.integers(1, 64), st.floats(100, 1000))
+@settings(max_examples=30, deadline=None)
+def test_policy_total_function(b, bw):
+    pm = profile_simulated()
+    d = AdaptivePolicy(pm).decide(b, bw)
+    assert d.mode in ("local", "prism")
+    assert d.expected.per_sample_ms > 0

@@ -1,0 +1,89 @@
+"""Unit + property tests for Segment Means (PRISM Eq. 1) and the CR math."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.segment_means import (comm_elements_prism,
+                                      comm_elements_voltage, comm_reduction,
+                                      cr_to_L, L_to_cr, segment_means,
+                                      segment_means_masked, segment_sizes)
+
+
+def test_segment_sizes_divisibility():
+    assert segment_sizes(100, 10) == 10
+    with pytest.raises(ValueError):
+        segment_sizes(100, 7)
+    with pytest.raises(ValueError):
+        segment_sizes(100, 0)
+
+
+def test_segment_means_basic():
+    x = jnp.arange(12, dtype=jnp.float32).reshape(1, 6, 2)
+    z = segment_means(x, 3, axis=1)
+    assert z.shape == (1, 3, 2)
+    np.testing.assert_allclose(np.asarray(z[0, 0]), [1.0, 2.0])   # mean of rows 0,1
+
+
+def test_segment_means_seg1_identity():
+    x = jnp.asarray(np.random.RandomState(0).randn(2, 8, 4), jnp.float32)
+    np.testing.assert_allclose(np.asarray(segment_means(x, 8, axis=1)),
+                               np.asarray(x), rtol=1e-6)
+
+
+def test_masked_means_match_unmasked_when_full():
+    x = jnp.asarray(np.random.RandomState(1).randn(2, 12, 4), jnp.float32)
+    mask = jnp.ones((2, 12), bool)
+    m, counts = segment_means_masked(x, 3, mask, axis=1)
+    np.testing.assert_allclose(np.asarray(m),
+                               np.asarray(segment_means(x, 3, axis=1)),
+                               rtol=1e-6)
+    assert np.all(np.asarray(counts) == 4)
+
+
+def test_masked_means_exclude_pads():
+    x = jnp.asarray(np.random.RandomState(2).randn(1, 8, 2), jnp.float32)
+    mask = jnp.asarray([[1, 1, 1, 1, 1, 0, 0, 0]], bool)   # last 3 are pads
+    m, counts = segment_means_masked(x, 2, mask, axis=1)
+    np.testing.assert_allclose(np.asarray(counts[0]), [4, 1])
+    np.testing.assert_allclose(np.asarray(m[0, 1]), np.asarray(x[0, 4]),
+                               rtol=1e-6)
+
+
+@given(st.integers(1, 8), st.integers(1, 16), st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_cr_L_roundtrip(P, L, seg):
+    """CR↔L inversion is consistent for integer segmentations."""
+    N = P * L * seg
+    cr = L_to_cr(N, P, L)
+    assert cr_to_L(N, P, cr) == L
+
+
+@given(st.integers(2, 16), st.integers(64, 4096), st.integers(1, 32),
+       st.integers(32, 1024))
+@settings(max_examples=50, deadline=None)
+def test_comm_reduction_matches_cr(P, N, L, D):
+    """PRISM/Voltage comm ratio ≈ CR·(P-1)/P·P/(P-1) — exactly N/(L·P)."""
+    volt = comm_elements_voltage(P, N, D)
+    prism = comm_elements_prism(P, L, D)
+    assert volt == (P - 1) * N * D // P
+    assert prism == (P - 1) * L * D
+    # reduction equals N/(P·L) up to the floor in voltage's //P
+    red = comm_reduction(P, N, L)
+    assert red == pytest.approx(N / (P * L), rel=0.02)
+
+
+@given(st.integers(1, 4), st.integers(1, 6), st.integers(1, 8),
+       st.integers(1, 6))
+@settings(max_examples=30, deadline=None)
+def test_mean_linearity_property(b, L, seg, d):
+    """mean(X)·W == mean(X·W) — the identity that lets PRISM exchange
+    *projected* means and never re-project remote features (paper §3.1)."""
+    rng = np.random.RandomState(b * 100 + L * 10 + seg)
+    X = jnp.asarray(rng.randn(b, L * seg, d), jnp.float32)
+    W = jnp.asarray(rng.randn(d, d + 1), jnp.float32)
+    lhs = segment_means(X, L, axis=1) @ W
+    rhs = segment_means(X @ W, L, axis=1)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-4)
