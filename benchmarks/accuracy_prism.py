@@ -11,8 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ExecutionPlan
 from repro.configs import get_config
-from repro.core.exchange import ExchangeConfig, ExchangeMode
 from repro.core.segment_means import cr_to_L
 from repro.data.pipeline import SyntheticImageDataset
 from repro.models import registry
@@ -62,7 +62,7 @@ def run(train_steps=60, ft_steps=25):
         d_ff=128, vocab_size=10)
     ds = SyntheticImageDataset(batch_size=16, seed=0)
     params = registry.init_params(cfg, seed=0)
-    local = ExchangeConfig(ExchangeMode.LOCAL)
+    local = ExecutionPlan.local().to_exchange_config()
     params = _train(cfg, params, local, ds, train_steps)
     acc_full = _acc(cfg, params, local, ds)
     print(f"# PRISM accuracy mechanism (synthetic task; paper Table 3)")
@@ -72,14 +72,16 @@ def run(train_steps=60, ft_steps=25):
     N_pad = 200          # padded ViT tokens for P=2 (197 → 200)
     for cr in (3.3, 4.95, 9.9):
         L = cr_to_L(197, P, cr)
-        xp = ExchangeConfig(ExchangeMode.PRISM_SIM, "seq", P, L=L)
+        xp = ExecutionPlan.prism_sim(L=L, cr=cr,
+                                     seq_shards=P).to_exchange_config()
         acc = _acc(cfg, params, xp, ds)
         out["prism"][cr] = acc
         print(f"PRISM CR={cr:<5} L={L:<3} accuracy: {acc:.3f} "
               f"(drop {acc_full - acc:+.3f})")
     # fine-tune THROUGH the highest compression (paper's recovery)
     L = cr_to_L(197, P, 9.9)
-    xp = ExchangeConfig(ExchangeMode.PRISM_SIM, "seq", P, L=L)
+    xp = ExecutionPlan.prism_sim(L=L, cr=9.9,
+                                 seq_shards=P).to_exchange_config()
     params_ft = _train(cfg, params, xp, ds, ft_steps, lr=1e-4, seed=7)
     acc_ft = _acc(cfg, params_ft, xp, ds)
     out["finetuned"][9.9] = acc_ft

@@ -1,0 +1,35 @@
+"""Adaptive-runtime explanation through `repro.api`: one `InferenceSession`
+profiles offline and reports, per operating point, what the policy routes
+and why — including the paper's batch-crossover (B=8 @ 400 Mbps) and
+bandwidth-crossover (≈340 Mbps @ B=8) artifacts."""
+from repro.api import ExecutionPlan, InferenceSession
+
+
+def run():
+    session = InferenceSession.from_config(
+        "vit-base-16",
+        plans=[ExecutionPlan.local(),
+               ExecutionPlan.prism_sim(L=20, cr=9.9)])
+    session.profile()
+    print("# Adaptive routing explained (paper §3.3 / §5.1)")
+    out = {"points": {}}
+    for batch, bw in ((1, 400.0), (8, 400.0), (32, 400.0), (8, 200.0)):
+        exp = session.explain(batch, bw)
+        print(exp.summary())
+        out["points"][f"B{batch}@{bw:g}"] = {
+            "mode": exp.decision.mode, "cr": exp.decision.cr,
+            "plan": exp.plan_key,
+            "per_sample_ms": exp.decision.expected.per_sample_ms,
+        }
+    exp = session.explain(8, 400.0)
+    out["batch_crossover"] = exp.batch_crossover
+    out["bandwidth_crossover_mbps"] = exp.bandwidth_crossover
+    assert exp.batch_crossover == 8, "paper's B=8 crossover not reproduced"
+    assert (exp.bandwidth_crossover is not None
+            and 200 <= exp.bandwidth_crossover <= 500), \
+        "bandwidth crossover outside the simulator's accepted band"
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,7 +1,6 @@
 """Paper §3.3 / §5.5: the one-time profiling sweep cost and the resulting
 performance map + derived crossovers."""
-from repro.core.policy import AdaptivePolicy
-from repro.core.profiler import SweepSpec, profile_simulated, sweep_cost
+from repro.api import AdaptivePolicy, SweepSpec, profile_simulated, sweep_cost
 
 
 def run():

@@ -18,8 +18,9 @@ def main():
     os.makedirs(args.out, exist_ok=True)
     results = {}
 
-    from benchmarks import (fig6_bandwidth, profiling_cost, roofline,
-                            table2_breakdown, table3_efficiency, table4_gains)
+    from benchmarks import (explain_adaptive, fig6_bandwidth, profiling_cost,
+                            roofline, table2_breakdown, table3_efficiency,
+                            table4_gains)
 
     sections = [
         ("table2_breakdown", table2_breakdown.run),
@@ -27,6 +28,7 @@ def main():
         ("table4_gains", table4_gains.run),
         ("fig6_bandwidth", fig6_bandwidth.run),
         ("profiling_cost", profiling_cost.run),
+        ("explain_adaptive", explain_adaptive.run),
         ("roofline", roofline.run),
     ]
     if not args.fast:

@@ -1,7 +1,9 @@
-"""Quickstart: the paper's Fig. 1 pipeline end to end on one host.
+"""Quickstart: the paper's Fig. 1 pipeline end to end on one host, entirely
+through the unified `repro.api` surface.
 
 1. Offline profiling sweep (B × CR × BW) → performance map (JSON).
-2. Runtime adaptive policy: per-batch choice of local vs distributed(CR).
+2. Runtime adaptive policy: per-batch choice of local vs distributed(CR),
+   explained with the paper's crossover artifacts.
 3. PRISM inference on ViT: full attention vs Segment-Means attention agree.
 
     PYTHONPATH=src python examples/quickstart.py
@@ -14,40 +16,38 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
-from repro.core.exchange import ExchangeConfig, ExchangeMode
-from repro.core.policy import AdaptivePolicy
-from repro.core.profiler import profile_simulated
+from repro.api import ExecutionPlan, InferenceSession
 from repro.data.pipeline import SyntheticImageDataset
-from repro.models import registry
 
 
 def main():
+    # one session owns params, per-plan executables, perf map, and policy
+    session = InferenceSession.from_config(
+        "vit-base-16",
+        plans=[ExecutionPlan.local(),
+               ExecutionPlan.prism_sim(L=20, cr=4.95)])
+
     # --- 1. offline profiling (paper §3.3) -------------------------------
-    pm = profile_simulated()
     path = "/tmp/prism_perfmap.json"
-    pm.save(path)
+    pm = session.profile(save_path=path)
     print(f"[1] profiled {len(pm)} configurations → {path}")
 
     # --- 2. runtime adaptive policy --------------------------------------
-    pol = AdaptivePolicy(pm)
     for batch, bw in ((1, 400), (8, 400), (32, 400), (8, 200), (8, 900)):
-        d = pol.decide(batch, bw)
+        d = session.decide(batch, bw)
         print(f"[2] B={batch:<3} BW={bw:<4} → {d.mode:<6} CR={d.cr:<5} "
               f"expect {d.expected.per_sample_ms:7.1f} ms/sample")
-    print(f"[2] batch crossover @400Mbps: {pol.batch_crossover(400)} "
-          f"(paper: 8)")
+    exp = session.explain(8, 400.0)
+    print(f"[2] batch crossover @400Mbps: {exp.batch_crossover} (paper: 8); "
+          f"bandwidth crossover @B=8: {exp.bandwidth_crossover:g} Mbps "
+          f"(paper: ≈340)")
 
     # --- 3. PRISM attention on ViT ----------------------------------------
-    cfg = get_config("vit-base-16").reduced()
-    params = registry.init_params(cfg, seed=0)
     imgs, labels = SyntheticImageDataset(batch_size=4).sample(
         np.random.RandomState(0))
-    fwd = registry.forward_fn(cfg)
-    lg_full, _ = fwd(params, {"images": jnp.asarray(imgs)},
-                     ExchangeConfig(ExchangeMode.LOCAL))
-    lg_prism, _ = fwd(params, {"images": jnp.asarray(imgs)},
-                      ExchangeConfig(ExchangeMode.PRISM_SIM, "seq", 2, L=20))
+    batch = {"images": jnp.asarray(imgs)}
+    lg_full = session.run("local", batch)
+    lg_prism = session.run("prism@4.95", batch)
     agree = (jnp.argmax(lg_full, -1) == jnp.argmax(lg_prism, -1)).mean()
     print(f"[3] ViT local-vs-PRISM(CR≈4.9) prediction agreement: "
           f"{float(agree) * 100:.0f}%")

@@ -1,6 +1,7 @@
-"""Adaptive serving (paper §3.3 runtime): the dispatcher routes request
-batches between the local and PRISM executables per profiled performance and
-observed bandwidth, then generates tokens with the engine.
+"""Adaptive serving (paper §3.3 runtime) through `repro.api`: one
+`InferenceSession` profiles offline, then routes each arriving request batch
+between its local and PRISM executables per profiled performance and
+observed bandwidth, and finally generates tokens.
 
     PYTHONPATH=src python examples/serve_adaptive.py
 """
@@ -9,48 +10,38 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
-from repro.core.exchange import ExchangeConfig, ExchangeMode
-from repro.core.profiler import profile_simulated
-from repro.models import registry
-from repro.serving.dispatcher import AdaptiveDispatcher
-from repro.serving.engine import ServeEngine
+from repro.api import ExecutionPlan, InferenceSession
 
 
 def main():
-    cfg = get_config("llama3.2-1b").reduced(vocab_size=128)
-    params = registry.init_params(cfg, seed=0)
-    fwd = registry.forward_fn(cfg)
-
-    # executables per mode (single host: PRISM runs in simulation form)
-    execs = {
-        "local": jax.jit(lambda b: fwd(params, b,
-                                       ExchangeConfig(ExchangeMode.LOCAL))[0]),
-        "prism@9.9": jax.jit(lambda b: fwd(
-            params, b, ExchangeConfig(ExchangeMode.PRISM_SIM, "seq", 2,
-                                      L=4))[0]),
-    }
-    disp = AdaptiveDispatcher(profile_simulated(), execs)
+    # executables per plan (single host: PRISM runs in simulation form)
+    session = InferenceSession.from_config(
+        "llama3.2-1b", reduced={"vocab_size": 128},
+        plans=[ExecutionPlan.local(),
+               ExecutionPlan.prism_sim(L=4, cr=9.9)])
+    session.profile()
 
     rng = np.random.RandomState(0)
+    V = session.cfg.vocab_size
     for step, (batch_size, bw) in enumerate(
             [(1, 400), (4, 420), (8, 380), (16, 390), (32, 250), (8, 200)]):
-        disp.observe_bandwidth(bw)
-        toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (batch_size, 32)))
-        disp.dispatch({"tokens": toks}, batch_size)
-        rec = disp.history[-1]
-        print(f"req {step}: B={batch_size:<3} bw~{disp.bandwidth:5.0f} Mbps "
-              f"→ {rec.decision.mode:<6} CR={rec.decision.cr:<5} "
-              f"({rec.wall_ms:6.1f} ms wall)")
+        session.observe_bandwidth(bw)
+        toks = jnp.asarray(rng.randint(0, V, (batch_size, 32)))
+        session.dispatch({"tokens": toks})
+        rec = session.history[-1]
+        print(f"req {step}: B={batch_size:<3} bw~{session.bandwidth:5.0f} "
+              f"Mbps → {rec.decision.mode:<6} CR={rec.decision.cr:<5} "
+              f"exec={rec.exec_key:<10} ({rec.wall_ms:6.1f} ms wall)")
 
-    # token generation with the engine
-    eng = ServeEngine(cfg, ExchangeConfig(ExchangeMode.LOCAL), params)
-    prompt = jnp.asarray(rng.randint(0, cfg.vocab_size, (2, 8)))
-    out = eng.generate(prompt, n_new=8)
+    # why did the B=8 requests route the way they did?
+    print(session.explain(8, 400.0).summary())
+
+    # token generation on the session's local plan
+    prompt = jnp.asarray(rng.randint(0, V, (2, 8)))
+    out = session.generate(prompt, n_new=8)
     print("generated tokens:", np.asarray(out))
     print("SERVE ADAPTIVE OK")
 

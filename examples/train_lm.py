@@ -11,8 +11,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+from repro.api import ExecutionPlan
 from repro.configs import get_config
-from repro.core.exchange import ExchangeConfig, ExchangeMode
 from repro.train.loop import Trainer, TrainerConfig
 
 
@@ -26,8 +26,9 @@ def main():
 
     cfg = get_config(args.arch).reduced(vocab_size=256, n_layers=4,
                                         d_model=128, d_ff=256)
-    xcfg = (ExchangeConfig(ExchangeMode.LOCAL) if args.mode == "local" else
-            ExchangeConfig(ExchangeMode.PRISM_SIM, "seq", 4, L=4))
+    plan = (ExecutionPlan.local() if args.mode == "local" else
+            ExecutionPlan.prism_sim(L=4, seq_shards=4))
+    xcfg = plan.to_exchange_config()
     from repro.train.optimizer import OptConfig
     tr = Trainer(cfg, xcfg, TrainerConfig(
         steps=args.steps, ckpt_every=50, ckpt_dir="/tmp/repro_train_lm",

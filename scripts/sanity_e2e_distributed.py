@@ -10,21 +10,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ExecutionPlan
 from repro.configs import get_config
-from repro.core.exchange import ExchangeConfig, ExchangeMode
+from repro.core.exchange import ExchangeMode
 from repro.models import registry, transformer as tfm
 from repro.sharding.specs import (batch_shardings, cache_shardings, make_plan,
                                   opt_state_shardings, param_shardings)
 from repro.train.optimizer import adamw_init
 from repro.train.train_step import build_train_step
+from repro.utils import compat
+from repro.utils.compat import make_auto_mesh
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_auto_mesh((4, 2), ("data", "model"))
 cfg = get_config("llama3.2-1b").reduced()
 rng = np.random.RandomState(0)
 B, N = 8, 32
 
-with jax.sharding.set_mesh(mesh):
+with compat.set_mesh(mesh):
     for mode in (ExchangeMode.PRISM, ExchangeMode.VOLTAGE):
         plan = make_plan(mesh, cfg, mode, L=4, train=True)
         xcfg = plan.xcfg
@@ -53,7 +55,8 @@ with jax.sharding.set_mesh(mesh):
     tokens = jnp.asarray(rng.randint(0, cfg.vocab_size, (4, 32)))
     lg_dist, _ = jax.jit(lambda p, t: registry.forward_fn(cfg)(
         p, {"tokens": t}, plan.xcfg))(params, tokens)
-    xsim = ExchangeConfig(ExchangeMode.PRISM_SIM, "model", 2, L=4)
+    xsim = ExecutionPlan.prism_sim(L=4, seq_axis="model",
+                               seq_shards=2).to_exchange_config()
     lg_sim, _ = registry.forward_fn(cfg)(params, {"tokens": tokens}, xsim)
     np.testing.assert_allclose(np.asarray(lg_dist), np.asarray(lg_sim),
                                atol=0.15, rtol=0.05)
@@ -71,7 +74,7 @@ with jax.sharding.set_mesh(mesh):
     lg_d, cache = dec(params, {"tokens": tok}, cache, 0)
     cache_l = tfm.init_decode_cache(cfg, 4, 32)
     lg_l, _ = tfm.decode_step(params, {"tokens": tok}, cache_l, 0, cfg,
-                              ExchangeConfig(ExchangeMode.LOCAL))
+                              ExecutionPlan.local().to_exchange_config())
     np.testing.assert_allclose(np.asarray(lg_d), np.asarray(lg_l), atol=0.1,
                                rtol=0.05)
     print("sharded decode == local decode OK")

@@ -7,11 +7,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
 
-from repro.core.exchange import (ExchangeConfig, ExchangeMode,
-                                 exchange_attention, decode_attention_sharded)
+from repro.api import ExecutionPlan
+from repro.core.exchange import exchange_attention, decode_attention_sharded
 from repro.core.partition import (simulate_prism_attention,
                                   simulate_voltage_attention)
 from repro.core.prism_attention import reference_attention
+from repro.utils import compat
 
 mesh = jax.make_mesh((4, 2), ("seq", "model"))
 B, N, H, Hk, dh = 2, 64, 8, 4, 16
@@ -21,25 +22,25 @@ q = jnp.asarray(rng.randn(B, N, H, dh), jnp.float32)
 k = jnp.asarray(rng.randn(B, N, Hk, dh), jnp.float32)
 v = jnp.asarray(rng.randn(B, N, Hk, dh), jnp.float32)
 
-with jax.sharding.set_mesh(mesh):
+with compat.set_mesh(mesh):
     spec = NamedSharding(mesh, P(None, "seq", None, None))
     qs, ks, vs = (jax.device_put(x, spec) for x in (q, k, v))
 
     for causal in (False, True):
-        cfg = ExchangeConfig(ExchangeMode.VOLTAGE, "seq", 4)
+        cfg = ExecutionPlan.voltage(seq_shards=4).to_exchange_config()
         out = jax.jit(lambda a, b, c: exchange_attention(a, b, c, cfg, causal=causal))(qs, ks, vs)
         ref = reference_attention(q, k, v, causal=causal)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
         print(f"voltage causal={causal} OK")
 
-        cfg = ExchangeConfig(ExchangeMode.PRISM, "seq", 4, L=L)
+        cfg = ExecutionPlan.prism(L=L, seq_shards=4).to_exchange_config()
         out = jax.jit(lambda a, b, c: exchange_attention(a, b, c, cfg, causal=causal))(qs, ks, vs)
         ref = simulate_prism_attention(q, k, v, 4, L, causal=causal)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
         print(f"prism causal={causal} OK")
 
     # PRISM == VOLTAGE when segment size == 1 (L = Np)
-    cfg = ExchangeConfig(ExchangeMode.PRISM, "seq", 4, L=N // 4)
+    cfg = ExecutionPlan.prism(L=N // 4, seq_shards=4).to_exchange_config()
     out = jax.jit(lambda a, b, c: exchange_attention(a, b, c, cfg, causal=False))(qs, ks, vs)
     # bidirectional, seg=1: means == tokens, but own-partition means masked and
     # local full used instead -> equals full attention
@@ -55,7 +56,7 @@ with jax.sharding.set_mesh(mesh):
     clen = jnp.array([40, 64], jnp.int32)
     cspec = NamedSharding(mesh, P(None, "seq", None, None))
     kcs, vcs = jax.device_put(kc, cspec), jax.device_put(vc, cspec)
-    cfg = ExchangeConfig(ExchangeMode.VOLTAGE, "seq", 4)
+    cfg = ExecutionPlan.voltage(seq_shards=4).to_exchange_config()
     out = jax.jit(lambda a, b, c, d: decode_attention_sharded(a, b, c, d, cfg))(q1, kcs, vcs, clen)
     pos = jnp.arange(S)[None, :]
     ref = reference_attention(q1, kc, vc, kv_mask=pos < clen[:, None])
@@ -68,7 +69,7 @@ with jax.sharding.set_mesh(mesh):
     Sp = S // 4
     km = jnp.stack([kc[:, i * Sp:(i + 1) * Sp] for i in range(4)], axis=1)
     vm = jnp.stack([vc[:, i * Sp:(i + 1) * Sp] for i in range(4)], axis=1)
-    cfgp = ExchangeConfig(ExchangeMode.PRISM, "seq", 4, L=Sp)
+    cfgp = ExecutionPlan.prism(L=Sp, seq_shards=4).to_exchange_config()
     out = jax.jit(lambda a, b, c, d, e, f: decode_attention_sharded(
         a, b, c, d, cfgp, k_means=e, v_means=f))(
         q1, kcs, vcs, jnp.asarray(S), km, vm)

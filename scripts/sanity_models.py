@@ -3,11 +3,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.api import ExecutionPlan
 from repro.configs import get_config, ASSIGNED_ARCHS
-from repro.core.exchange import ExchangeConfig, ExchangeMode
 from repro.models import registry, transformer as tfm
 
-xcfg = ExchangeConfig(ExchangeMode.LOCAL)
+xcfg = ExecutionPlan.local().to_exchange_config()
 B, N = 2, 32
 
 for arch in ASSIGNED_ARCHS + ("vit-base-16",):

@@ -1,0 +1,37 @@
+"""`repro.api` — the unified adaptive-inference surface.
+
+One import for the paper's whole runtime loop:
+
+* :class:`ExecutionPlan` — mode + CR/L + sequence-partition layout; converts
+  to/from ``PerfKey`` and ``ExchangeConfig`` and replaces ad-hoc
+  ``"mode@cr"`` strings.
+* :class:`ExchangeStrategy` / :func:`register_strategy` — pluggable exchange
+  registry (local / voltage / prism / prism_sim; open to new strategies).
+* :class:`InferenceSession` — owns params, per-plan executables, bandwidth
+  observation, profiling, policy, dispatch, and generation
+  (``profile() / dispatch() / generate() / explain()``).
+
+The profiling/policy primitives (``PerfMap``, ``AdaptivePolicy``, sweep
+helpers) are re-exported so downstream code needs only ``repro.api``.
+"""
+from repro.api.plan import ExecutionPlan
+from repro.api.session import (DispatchRecord, Explanation, InferenceSession)
+from repro.api.strategies import (ExchangeStrategy, get_strategy,
+                                  list_strategies, register_strategy)
+from repro.core.exchange import ExchangeConfig, ExchangeMode
+from repro.core.perfmap import PerfEntry, PerfKey, PerfMap
+from repro.core.policy import AdaptivePolicy, Decision, Objective
+from repro.core.profiler import (PAPER_BATCHES, PAPER_BWS, PAPER_CRS,
+                                 SweepSpec, profile_measured,
+                                 profile_simulated, sweep_cost)
+
+__all__ = [
+    "ExecutionPlan", "InferenceSession", "DispatchRecord", "Explanation",
+    "ExchangeStrategy", "register_strategy", "get_strategy",
+    "list_strategies",
+    "ExchangeConfig", "ExchangeMode",
+    "PerfKey", "PerfEntry", "PerfMap",
+    "AdaptivePolicy", "Decision", "Objective",
+    "profile_simulated", "profile_measured", "SweepSpec", "sweep_cost",
+    "PAPER_BATCHES", "PAPER_CRS", "PAPER_BWS",
+]

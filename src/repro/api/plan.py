@@ -1,0 +1,174 @@
+"""`ExecutionPlan` — the one description of *how* a batch executes.
+
+The paper's runtime chooses between *local* execution and *distributed(CR)*
+execution per batch.  Before this module, that choice was smeared over three
+ad-hoc encodings: raw ``ExchangeConfig`` dataclasses (physical exchange
+parameters), ``PerfKey`` strings (profiling identity), and ``"mode@cr"``
+dispatcher keys (executable identity).  ``ExecutionPlan`` unifies them: it
+carries mode + compression + sequence-partition layout and converts to/from
+each legacy encoding.
+
+Key identities:
+
+* ``plan.key``   — canonical executable id, e.g. ``"local"``/``"prism@9.9"``.
+  ``prism_sim`` shares the ``prism`` key family because it is PRISM math run
+  on unpartitioned tensors (profiled identically).
+* ``plan.to_exchange_config()`` — physical exchange parameters for model code.
+* ``plan.to_perf_key(batch, bw)`` — profiling identity for the perf map.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.exchange import ExchangeConfig, ExchangeMode
+from repro.core.perfmap import PerfKey
+from repro.core.segment_means import L_to_cr, cr_to_L
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Mode + compression + sequence-partition layout for one executable.
+
+    ``cr`` is the *profiled* compression rate (the perf-map label); ``L`` is
+    the *physical* number of segment means per partition at the deployed
+    sequence length.  They are related by ``CR = N/(L·P)`` but may be set
+    independently when the smoke-test sequence length differs from the
+    profiled workload's.
+    """
+    mode: str = "local"              # registered strategy name
+    cr: float = 0.0                  # profiled compression rate (0 = n/a)
+    L: int = 0                       # segment means per partition (PRISM)
+    seq_axis: Optional[str] = None   # mesh axis carrying sequence partitions
+    seq_shards: int = 1              # P — number of sequence partitions
+    batch_axes: Tuple[str, ...] = ()  # mesh axes sharding the batch dim
+
+    def __post_init__(self):
+        from repro.api.strategies import get_strategy
+        strategy = get_strategy(self.mode)     # raises on unknown mode
+        strategy.validate_plan(self)
+
+    # -- identity -----------------------------------------------------------
+
+    @property
+    def perf_mode(self) -> str:
+        """Mode name under which this plan is profiled ("prism" for
+        prism_sim — same math, same cost model)."""
+        from repro.api.strategies import get_strategy
+        return get_strategy(self.mode).perf_mode
+
+    @property
+    def key(self) -> str:
+        """Canonical executable id — replaces hand-rolled "mode@cr" keys."""
+        if self.cr > 0:
+            return f"{self.perf_mode}@{self.cr:g}"
+        return self.perf_mode
+
+    @property
+    def distributed(self) -> bool:
+        from repro.api.strategies import get_strategy
+        return get_strategy(self.mode).distributed
+
+    # -- constructors --------------------------------------------------------
+
+    @staticmethod
+    def local() -> "ExecutionPlan":
+        return ExecutionPlan("local")
+
+    @staticmethod
+    def voltage(seq_axis: str = "seq", seq_shards: int = 2,
+                batch_axes: Tuple[str, ...] = ()) -> "ExecutionPlan":
+        return ExecutionPlan("voltage", 0.0, 0, seq_axis, seq_shards,
+                             tuple(batch_axes))
+
+    @staticmethod
+    def prism(L: int, cr: float = 0.0, seq_axis: str = "seq",
+              seq_shards: int = 2,
+              batch_axes: Tuple[str, ...] = ()) -> "ExecutionPlan":
+        return ExecutionPlan("prism", cr, L, seq_axis, seq_shards,
+                             tuple(batch_axes))
+
+    @staticmethod
+    def prism_sim(L: int, cr: float = 0.0, seq_axis: str = "seq",
+                  seq_shards: int = 2,
+                  batch_axes: Tuple[str, ...] = ()) -> "ExecutionPlan":
+        """PRISM math on unpartitioned tensors (single-host validation)."""
+        return ExecutionPlan("prism_sim", cr, L, seq_axis, seq_shards,
+                             tuple(batch_axes))
+
+    @staticmethod
+    def parse(key: str, *, seq_axis: str = "seq", seq_shards: int = 2,
+              L: int = 0) -> "ExecutionPlan":
+        """Parse a legacy dispatcher key: ``"local"`` / ``"prism@9.9"``."""
+        if "@" in key:
+            mode, cr_s = key.split("@", 1)
+            try:
+                cr = float(cr_s)
+            except ValueError:
+                raise ValueError(f"malformed plan key {key!r}: "
+                                 f"compression rate {cr_s!r} is not a number")
+            return ExecutionPlan(mode, cr, L, seq_axis, seq_shards)
+        if key == "local":
+            return ExecutionPlan.local()
+        return ExecutionPlan(key, 0.0, L, seq_axis, seq_shards)
+
+    # -- conversions ---------------------------------------------------------
+
+    def to_exchange_config(self) -> ExchangeConfig:
+        from repro.api.strategies import get_strategy
+        return ExchangeConfig(get_strategy(self.mode).exchange_mode,
+                              self.seq_axis if self.mode != "local" else None,
+                              self.seq_shards if self.mode != "local" else 1,
+                              L=self.L, batch_axes=tuple(self.batch_axes),
+                              strategy=self.mode)
+
+    @staticmethod
+    def from_exchange_config(xcfg: ExchangeConfig,
+                             n_tokens: Optional[int] = None,
+                             cr: Optional[float] = None) -> "ExecutionPlan":
+        """Lift a raw ``ExchangeConfig``; ``cr`` recovered from ``n_tokens``
+        via CR = N/(L·P) when not given explicitly."""
+        mode = xcfg.strategy or xcfg.mode.value
+        if cr is None:
+            cr = (L_to_cr(n_tokens, xcfg.seq_shards, xcfg.L)
+                  if (n_tokens and xcfg.L > 0 and xcfg.seq_shards > 0)
+                  else 0.0)
+        return ExecutionPlan(mode, cr, xcfg.L, xcfg.seq_axis,
+                             xcfg.seq_shards, tuple(xcfg.batch_axes))
+
+    def to_perf_key(self, batch: int, bandwidth_mbps: float = 0.0) -> PerfKey:
+        if not self.distributed:
+            return PerfKey(self.perf_mode, batch, 0.0, 0.0)
+        return PerfKey(self.perf_mode, batch, self.cr, bandwidth_mbps)
+
+    @staticmethod
+    def from_perf_key(key: PerfKey, *, seq_axis: str = "seq",
+                      seq_shards: int = 2, n_tokens: Optional[int] = None,
+                      simulated: bool = False) -> "ExecutionPlan":
+        """``n_tokens`` resolves the physical L from the profiled CR;
+        ``simulated`` maps "prism" onto the single-host prism_sim strategy."""
+        mode = key.mode
+        if mode == "local":
+            return ExecutionPlan.local()
+        if mode == "prism" and simulated:
+            mode = "prism_sim"
+        L = (cr_to_L(n_tokens, seq_shards, key.cr)
+             if (n_tokens and key.cr > 0) else 0)
+        return ExecutionPlan(mode, key.cr, L, seq_axis, seq_shards)
+
+    def resolve_L(self, n_tokens: int) -> "ExecutionPlan":
+        """Fill in the physical L for a deployment sequence length from the
+        profiled CR (no-op for non-PRISM plans or when L is already set)."""
+        if self.L > 0 or self.cr <= 0 or not self.distributed:
+            return self
+        return dataclasses.replace(
+            self, L=cr_to_L(n_tokens, self.seq_shards, self.cr))
+
+    def sharding_plan(self, mesh, cfg, *, train: bool = False,
+                      decode: bool = False):
+        """Mesh-level ``ShardingPlan`` for multi-device launches (the mesh's
+        axis sizes override this plan's ``seq_shards``)."""
+        from repro.sharding.specs import make_plan
+        from repro.api.strategies import get_strategy
+        return make_plan(mesh, cfg, get_strategy(self.mode).exchange_mode,
+                         L=self.L, train=train, decode=decode)

@@ -1,0 +1,295 @@
+"""`InferenceSession` — the one supported way to run the adaptive runtime.
+
+Owns the model params, one jitted executable per `ExecutionPlan`, the
+bandwidth observer (EWMA probe), the profiled performance map, and the
+adaptive policy — the paper's whole Fig. 1 loop behind a single object::
+
+    session = InferenceSession.from_config(
+        "vit-base-16",
+        plans=[ExecutionPlan.local(),
+               ExecutionPlan.prism_sim(L=20, cr=4.95)])
+    session.profile()                      # offline sweep → perf map
+    session.observe_bandwidth(400.0)
+    out = session.dispatch({"images": imgs})   # policy-routed execution
+    print(session.explain(batch=8, bandwidth_mbps=400.0).summary())
+
+Subsumes the legacy ``AdaptiveDispatcher`` + ``ServeEngine`` pair (both kept
+as deprecation shims in ``repro.serving``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.api.plan import ExecutionPlan
+from repro.core.perfmap import PerfEntry, PerfKey, PerfMap
+from repro.core.policy import AdaptivePolicy, Decision, Objective
+
+
+@dataclasses.dataclass
+class DispatchRecord:
+    """One routed batch: what the policy decided and what actually ran."""
+    batch: int
+    bandwidth_mbps: float
+    decision: Decision
+    wall_ms: float
+    exec_key: str = ""          # executable that actually ran
+    substituted: bool = False   # True when the decided key had no executable
+
+
+@dataclasses.dataclass(frozen=True)
+class Explanation:
+    """Why a (batch, bandwidth) pair routes the way it does — the paper's
+    reported artifacts derived from the live policy."""
+    batch: int
+    bandwidth_mbps: float
+    decision: Decision
+    plan_key: str                                   # executable id chosen
+    candidates: Tuple[Tuple[PerfKey, PerfEntry], ...]
+    batch_crossover: Optional[int]                  # paper: 8 @ 400 Mbps
+    bandwidth_crossover: Optional[float]            # paper: ≈340 Mbps @ B=8
+
+    def summary(self) -> str:
+        lines = [f"B={self.batch} BW={self.bandwidth_mbps:g} Mbps → "
+                 f"{self.decision.mode}"
+                 + (f" CR={self.decision.cr:g}" if self.decision.cr else "")
+                 + f"  ({self.decision.expected.per_sample_ms:.1f} ms/sample"
+                 f" expected, plan {self.plan_key!r})"]
+        for k, e in sorted(self.candidates,
+                           key=lambda kv: kv[1].per_sample_ms):
+            mark = "→" if (k.mode, k.cr) == (self.decision.mode,
+                                             self.decision.cr) else " "
+            lines.append(f"  {mark} {k.mode:<8} CR={k.cr:<5g} "
+                         f"{e.per_sample_ms:8.1f} ms/sample "
+                         f"{e.per_sample_j:7.2f} J/sample")
+        lines.append(f"  batch crossover @ {self.bandwidth_mbps:g} Mbps: "
+                     f"{self.batch_crossover} (paper: 8)")
+        lines.append(f"  bandwidth crossover @ B={self.batch}: "
+                     f"{self.bandwidth_crossover} Mbps (paper: ≈340)")
+        return "\n".join(lines)
+
+
+class InferenceSession:
+    """Facade over params + per-plan executables + profiling + policy."""
+
+    def __init__(self, cfg, params, plans: Sequence[ExecutionPlan] = (),
+                 perfmap: Optional[PerfMap] = None,
+                 objective: Objective = "latency",
+                 allow_modes: Optional[Tuple[str, ...]] = None,
+                 bandwidth_alpha: float = 0.3,
+                 initial_bandwidth_mbps: float = 400.0,
+                 temperature: float = 0.0):
+        self.cfg = cfg
+        self.params = params
+        self.plans: Dict[str, ExecutionPlan] = {}
+        self._execs: Dict[str, Any] = {}
+        self._decode_execs: Dict[str, Any] = {}
+        self.objective: Objective = objective
+        self.temperature = temperature
+        self._allow = allow_modes
+        self._policy: Optional[AdaptivePolicy] = None
+        self._bw = initial_bandwidth_mbps
+        self._alpha = bandwidth_alpha
+        self.history: List[DispatchRecord] = []
+        self.perfmap = perfmap
+        for p in (plans or [ExecutionPlan.local()]):
+            self.add_plan(p)
+
+    @classmethod
+    def from_config(cls, arch: str, plans: Sequence[ExecutionPlan] = (),
+                    *, perfmap: Optional[PerfMap] = None, reduced=True,
+                    seed: int = 0, params=None, **kw) -> "InferenceSession":
+        """Build from an architecture id (e.g. "vit-base-16", "llama3.2-1b").
+
+        ``reduced``: True → CPU smoke-test variant; a dict → kwargs for
+        ``cfg.reduced(**reduced)``; False → full-size config.
+        """
+        from repro.configs import get_config
+        from repro.models import registry
+        cfg = get_config(arch)
+        if reduced:
+            cfg = cfg.reduced(**(reduced if isinstance(reduced, dict) else {}))
+        if params is None:
+            params = registry.init_params(cfg, seed=seed)
+        return cls(cfg, params, plans, perfmap=perfmap, **kw)
+
+    # -- plans & executables -------------------------------------------------
+
+    def add_plan(self, plan: ExecutionPlan) -> str:
+        """Register a plan and jit its forward executable; returns its key."""
+        import jax
+        from repro.api.strategies import get_strategy
+        from repro.models import registry
+        key = plan.key
+        if key in self.plans:
+            raise ValueError(f"plan {key!r} already registered")
+        if get_strategy(plan.mode).requires_L and plan.L <= 0:
+            # a cr-only plan (e.g. from parse()/from_perf_key without
+            # n_tokens) has no physical segment count to execute with
+            raise ValueError(
+                f"plan {key!r} has cr={plan.cr:g} but no physical L; call "
+                "plan.resolve_L(n_tokens) before registering it")
+        fwd = registry.forward_fn(self.cfg)
+        xcfg = plan.to_exchange_config()
+        self.plans[key] = plan
+        self._execs[key] = jax.jit(
+            lambda batch: fwd(self.params, batch, xcfg)[0])
+        return key
+
+    def run(self, plan_key: str, batch_inputs: Any):
+        """Run one specific plan's executable (no policy involved)."""
+        if plan_key not in self._execs:
+            raise KeyError(f"no executable for plan {plan_key!r}; "
+                           f"registered: {sorted(self._execs)}")
+        return self._execs[plan_key](batch_inputs)
+
+    # -- profiling -----------------------------------------------------------
+
+    def profile(self, spec=None, *, measured: bool = False,
+                model=None, save_path: Optional[str] = None) -> PerfMap:
+        """Offline sweep (paper §3.3) → performance map, installed on the
+        session (and optionally saved as the on-device JSON artifact)."""
+        from repro.core.profiler import (SweepSpec, profile_measured,
+                                         profile_simulated)
+        spec = spec or SweepSpec()
+        pm = (profile_measured(spec=spec) if measured
+              else profile_simulated(model=model, spec=spec))
+        self.set_perfmap(pm)
+        if save_path:
+            pm.save(save_path)
+        return pm
+
+    def set_perfmap(self, pm: PerfMap) -> None:
+        self.perfmap = pm
+        self._policy = None            # rebuilt lazily against the new map
+
+    @property
+    def policy(self) -> AdaptivePolicy:
+        if self.perfmap is None:
+            raise RuntimeError("no performance map: call session.profile() "
+                               "or pass perfmap= / set_perfmap() first")
+        if self._policy is None:
+            self._policy = (AdaptivePolicy(self.perfmap, self._allow)
+                            if self._allow else AdaptivePolicy(self.perfmap))
+        return self._policy
+
+    # -- bandwidth observation ----------------------------------------------
+
+    def observe_bandwidth(self, mbps: float) -> None:
+        """EWMA bandwidth probe update (the caller measures the link)."""
+        self._bw = self._alpha * mbps + (1 - self._alpha) * self._bw
+
+    @property
+    def bandwidth(self) -> float:
+        return self._bw
+
+    # -- adaptive dispatch ---------------------------------------------------
+
+    def decide(self, batch: int, bandwidth_mbps: Optional[float] = None,
+               objective: Optional[Objective] = None) -> Decision:
+        return self.policy.decide(batch,
+                                  self._bw if bandwidth_mbps is None
+                                  else bandwidth_mbps,
+                                  objective or self.objective)
+
+    def _exec_key_for(self, d: Decision) -> Tuple[str, bool]:
+        """Decision → registered executable key, with recorded fallback:
+        same-mode executable at another CR first, then any executable."""
+        key = "local" if d.mode == "local" else f"{d.mode}@{d.cr:g}"
+        if key in self._execs:
+            return key, False
+        same_mode = next((k for k in self._execs if k.split("@")[0] == d.mode),
+                         None)
+        if same_mode is not None:
+            return same_mode, True
+        if not self._execs:
+            raise LookupError("no executables registered")
+        return next(iter(self._execs)), True
+
+    def dispatch(self, batch_inputs: Any,
+                 batch_size: Optional[int] = None) -> Any:
+        """Route one batch per the profiled policy and run it."""
+        if batch_size is None:
+            batch_size = int(next(iter(batch_inputs.values())).shape[0]
+                             if isinstance(batch_inputs, dict)
+                             else batch_inputs.shape[0])
+        d = self.decide(batch_size)
+        key, substituted = self._exec_key_for(d)
+        t0 = time.perf_counter()
+        out = self._execs[key](batch_inputs)
+        wall = (time.perf_counter() - t0) * 1e3
+        self.history.append(DispatchRecord(batch_size, self._bw, d, wall,
+                                           exec_key=key,
+                                           substituted=substituted))
+        return out
+
+    # -- generation (subsumes ServeEngine) -----------------------------------
+
+    def generate(self, prompt_tokens, n_new: int,
+                 plan: Optional[ExecutionPlan] = None,
+                 batch_extras: Optional[Dict[str, Any]] = None,
+                 seed: int = 0, temperature: Optional[float] = None):
+        """Greedy/temperature generation: prompt [B, T0] → [B, n_new].
+
+        ``plan`` defaults to the local plan (or the first registered one);
+        decode executables are jitted once per plan key and cached.
+        """
+        import jax
+        import jax.numpy as jnp
+        from repro.models import transformer as tfm
+        plan = plan or self.plans.get("local") or next(iter(self.plans.values()))
+        xcfg = plan.to_exchange_config()
+        T = self.temperature if temperature is None else temperature
+        # cache by the full plan, not plan.key: distinct plans (e.g. two
+        # prism_sim L values) can share a key but need distinct executables
+        if plan not in self._decode_execs:
+            self._decode_execs[plan] = jax.jit(
+                lambda p, b, c, i: tfm.decode_step(p, b, c, i, self.cfg,
+                                                   xcfg),
+                donate_argnums=(2,))
+        dec = self._decode_execs[plan]
+
+        B, T0 = prompt_tokens.shape
+        S = T0 + n_new
+        cache = tfm.init_decode_cache(self.cfg, B, S)
+        if self.cfg.family in ("audio", "vlm"):
+            batch = {"tokens": prompt_tokens, **(batch_extras or {})}
+            cache = tfm.prefill_memory(self.params, batch, self.cfg, xcfg,
+                                       cache)
+        from repro.serving.engine import sample_token
+        key = jax.random.key(seed)
+        # teacher-forced prompt consumption token by token (prefill-by-decode)
+        tok = prompt_tokens[:, :1]
+        out = []
+        for t in range(S - 1):
+            logits, cache = dec(self.params, {"tokens": tok}, cache, t)
+            if t + 1 < T0:
+                tok = prompt_tokens[:, t + 1:t + 2]
+            else:
+                key, sub = jax.random.split(key)
+                tok = sample_token(logits, sub, T)[:, 0:1]
+                out.append(tok)
+            if len(out) >= n_new:
+                break
+        return (jnp.concatenate(out, axis=1) if out
+                else jnp.zeros((B, 0), jnp.int32))
+
+    # -- explanation (the paper's reported artifacts) ------------------------
+
+    def explain(self, batch: int, bandwidth_mbps: Optional[float] = None,
+                objective: Optional[Objective] = None) -> Explanation:
+        """Decision + candidate table + both crossover artifacts for one
+        (batch, bandwidth) operating point."""
+        bw = self._bw if bandwidth_mbps is None else bandwidth_mbps
+        obj = objective or self.objective
+        pol = self.policy
+        d = pol.decide(batch, bw, obj)
+        key, _ = self._exec_key_for(d)
+        batch_key = pol._nearest_batch(batch)   # same snapping as decide()
+        cands = tuple(self.perfmap.candidates(batch_key, bw))
+        return Explanation(
+            batch=batch, bandwidth_mbps=bw, decision=d, plan_key=key,
+            candidates=cands,
+            batch_crossover=pol.batch_crossover(bw, obj),
+            bandwidth_crossover=pol.bandwidth_crossover(batch, obj))

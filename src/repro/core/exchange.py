@@ -20,6 +20,7 @@ style `psum`) — position-wise partitioning for autoregressive steps.
 """
 from __future__ import annotations
 
+import dataclasses
 import enum
 from dataclasses import dataclass
 from functools import partial
@@ -39,6 +40,7 @@ from repro.core.prism_attention import (
     reference_attention,
 )
 from repro.core.segment_means import segment_means, segment_means_masked
+from repro.utils import compat
 
 
 def all_gather_grad_safe(x: jnp.ndarray, axis_name: str, *, axis: int = 0,
@@ -87,10 +89,12 @@ class ExchangeConfig:
     seq_shards: int = 1              # P — number of sequence partitions
     L: int = 0                       # segment means per partition (PRISM)
     batch_axes: tuple = ()           # mesh axes sharding the batch dim
+    strategy: Optional[str] = None   # registry name when it differs from the
+                                     # mode (custom strategies reusing a
+                                     # built-in ExchangeMode); None → mode
 
     def with_mode(self, mode: ExchangeMode) -> "ExchangeConfig":
-        return ExchangeConfig(mode, self.seq_axis, self.seq_shards, self.L,
-                              self.batch_axes)
+        return dataclasses.replace(self, mode=mode, strategy=None)
 
 
 def pin_activations(x: jnp.ndarray, cfg: ExchangeConfig) -> jnp.ndarray:
@@ -99,8 +103,10 @@ def pin_activations(x: jnp.ndarray, cfg: ExchangeConfig) -> jnp.ndarray:
     boundaries so GSPMD never drifts into batch-replicated layouts."""
     if x.ndim < 2 or (not cfg.batch_axes and cfg.seq_axis is None):
         return x
+    if not compat.SHARDING_HINTS_SAFE:    # 0.4.x: hint can corrupt values
+        return x
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = compat.get_abstract_mesh()
         if mesh is None or mesh.empty:
             return x
         bax = tuple(a for a in cfg.batch_axes if a in mesh.axis_names)
@@ -140,30 +146,50 @@ def exchange_attention(
 ) -> jnp.ndarray:
     """Attention with the configured cross-partition exchange.
 
-    Returns [B, N, H, dh] with the same sequence sharding as the inputs.
+    Dispatches through the ``repro.api.strategies`` registry — each registered
+    ``ExchangeStrategy`` binds one of the ``*_prefill_attention`` functions
+    below. Returns [B, N, H, dh] with the same sequence sharding as inputs.
     """
-    mode = cfg.mode
-    if mode == ExchangeMode.LOCAL or cfg.seq_axis is None or cfg.seq_shards == 1:
-        B, Nq, H = q.shape[0], q.shape[1], q.shape[2]
-        if B * H * Nq * k.shape[1] * 4 > 0.5e9:
-            from repro.core.prism_attention import chunked_reference_attention
-            return chunked_reference_attention(
-                q, k, v, causal=causal, window=window,
-                logit_softcap=logit_softcap, scale=scale, kv_mask=kv_mask)
-        return reference_attention(
+    from repro.api.strategies import get_strategy
+    try:
+        strategy = get_strategy(cfg.strategy or cfg.mode.value)
+    except KeyError as e:                  # preserve the old contract
+        raise ValueError(f"unknown exchange mode {cfg.mode}") from e
+    return strategy.prefill_attention(
+        q, k, v, cfg, causal=causal, window=window,
+        logit_softcap=logit_softcap, scale=scale, kv_mask=kv_mask)
+
+
+def local_prefill_attention(q, k, v, cfg, *, causal=False, window=None,
+                            logit_softcap=None, scale=None, kv_mask=None):
+    """No sequence partitioning: ordinary full attention (chunked above a
+    memory threshold)."""
+    B, Nq, H = q.shape[0], q.shape[1], q.shape[2]
+    if B * H * Nq * k.shape[1] * 4 > 0.5e9:
+        from repro.core.prism_attention import chunked_reference_attention
+        return chunked_reference_attention(
             q, k, v, causal=causal, window=window,
             logit_softcap=logit_softcap, scale=scale, kv_mask=kv_mask)
+    return reference_attention(
+        q, k, v, causal=causal, window=window,
+        logit_softcap=logit_softcap, scale=scale, kv_mask=kv_mask)
 
-    if mode == ExchangeMode.PRISM_SIM:
-        from repro.core.partition import simulate_prism_attention
-        if window is not None:
-            raise NotImplementedError("PRISM_SIM with sliding window")
-        return simulate_prism_attention(
-            q, k, v, cfg.seq_shards, cfg.L, causal=causal,
-            logit_softcap=logit_softcap, scale=scale)
 
+def prism_sim_prefill_attention(q, k, v, cfg, *, causal=False, window=None,
+                                logit_softcap=None, scale=None, kv_mask=None):
+    """PRISM math on unpartitioned tensors (training / single-host)."""
+    from repro.core.partition import simulate_prism_attention
+    if window is not None:
+        raise NotImplementedError("PRISM_SIM with sliding window")
+    return simulate_prism_attention(
+        q, k, v, cfg.seq_shards, cfg.L, causal=causal,
+        logit_softcap=logit_softcap, scale=scale)
+
+
+def voltage_prefill_attention(q, k, v, cfg, *, causal=False, window=None,
+                              logit_softcap=None, scale=None, kv_mask=None):
+    """Full-tensor K/V all-gather (the paper's Voltage baseline)."""
     axis = cfg.seq_axis
-    Pn = cfg.seq_shards
     if kv_mask is None:
         kv_mask = jnp.ones(k.shape[:2], dtype=bool)
     # Pin the projections to (batch-propagated, seq-sharded, replicated
@@ -172,85 +198,92 @@ def exchange_attention(
     # replicates the stacked scan weights to reshard — catastrophic.
     q, k, v = (_pin_seq_sharding(t, axis) for t in (q, k, v))
 
-    if mode == ExchangeMode.VOLTAGE:
-        def volt(qs, ks, vs, ms):
-            p = jax.lax.axis_index(axis)
-            Np = qs.shape[1]
-            # full-tensor exchange: the paper's Voltage baseline
-            kg = all_gather_grad_safe(ks, axis, axis=1, tiled=True)
-            vg = all_gather_grad_safe(vs, axis, axis=1, tiled=True)
-            mg = jax.lax.all_gather(ms, axis, axis=1, tiled=True)  # bool: no grad
-            from repro.core.prism_attention import chunked_reference_attention
-            return chunked_reference_attention(
-                qs, kg, vg, causal=causal, q_offset=p * Np,
-                window=window, logit_softcap=logit_softcap, scale=scale,
-                kv_mask=mg)
-        bax = _manual_batch_axes(q.shape[0], cfg)
-        return _seq_shard_map(volt, axis, n_masks=1, batch_axes=bax)(
-            q, k, v, kv_mask)
+    def volt(qs, ks, vs, ms):
+        p = jax.lax.axis_index(axis)
+        Np = qs.shape[1]
+        # full-tensor exchange: the paper's Voltage baseline
+        kg = all_gather_grad_safe(ks, axis, axis=1, tiled=True)
+        vg = all_gather_grad_safe(vs, axis, axis=1, tiled=True)
+        mg = jax.lax.all_gather(ms, axis, axis=1, tiled=True)  # bool: no grad
+        from repro.core.prism_attention import chunked_reference_attention
+        return chunked_reference_attention(
+            qs, kg, vg, causal=causal, q_offset=p * Np,
+            window=window, logit_softcap=logit_softcap, scale=scale,
+            kv_mask=mg)
+    bax = _manual_batch_axes(q.shape[0], cfg)
+    return _seq_shard_map(volt, axis, n_masks=1, batch_axes=bax)(
+        q, k, v, kv_mask)
 
-    if mode == ExchangeMode.PRISM:
-        L = cfg.L
-        if window is not None:
-            # Windowed layers: segment means of far context are invisible
-            # under the window anyway, so exchange only the HALO — the
-            # ceil(window / shard_len) preceding shards, fetched by
-            # collective_permute — instead of a full gather. Comm drops from
-            # (P-1)/P*N*D to n_halo/P*N*D per device.
-            Np_g = q.shape[1] // Pn
-            n_halo = min(-(-window // max(Np_g, 1)), Pn - 1)
-            if causal and n_halo < Pn - 1:
-                def halo(qs, ks, vs, ms):
-                    p = jax.lax.axis_index(axis)
-                    Np = qs.shape[1]
-                    parts_k, parts_v = [], []
-                    for sft in range(n_halo, 0, -1):
-                        perm = [(i, i + sft) for i in range(Pn - sft)]
-                        parts_k.append(jax.lax.ppermute(ks, axis, perm))
-                        parts_v.append(jax.lax.ppermute(vs, axis, perm))
-                    kg = jnp.concatenate(parts_k + [ks], axis=1)
-                    vg = jnp.concatenate(parts_v + [vs], axis=1)
-                    base = (p - n_halo) * Np
-                    gpos = base + jnp.arange((n_halo + 1) * Np)
-                    valid = (gpos >= 0)[None, :]
-                    from repro.core.prism_attention import (
-                        chunked_reference_attention)
-                    return chunked_reference_attention(
-                        qs, kg, vg, causal=True, q_offset=n_halo * Np,
-                        window=window, logit_softcap=logit_softcap,
-                        scale=scale,
-                        kv_mask=jnp.broadcast_to(
-                            valid, (qs.shape[0], gpos.shape[0])))
-                bax = _manual_batch_axes(q.shape[0], cfg)
-                return _seq_shard_map(halo, axis, n_masks=1,
-                                      batch_axes=bax)(q, k, v, kv_mask)
-            return exchange_attention(
-                q, k, v, cfg.with_mode(ExchangeMode.VOLTAGE), causal=causal,
-                window=window, logit_softcap=logit_softcap, scale=scale,
-                kv_mask=kv_mask)
 
-        def prism(qs, ks, vs, ms):
-            p = jax.lax.axis_index(axis)
-            Np = qs.shape[1]
-            seg = Np // L
-            # L projected segment means per partition (linearity: no
-            # re-projection of remote features — scaling-aware reformulation)
-            km, cnt = segment_means_masked(ks, L, ms, axis=1)  # [B,L,Hk,dh]
-            vm, _ = segment_means_masked(vs, L, ms, axis=1)
-            km_all = all_gather_grad_safe(km, axis)       # [P, B, L, Hk, dh]
-            vm_all = all_gather_grad_safe(vm, axis)
-            cnt_all = jnp.moveaxis(jax.lax.all_gather(cnt, axis), 0, 1)
-            km_all = jnp.moveaxis(km_all, 0, 1)         # [B, P, L, Hk, dh]
-            vm_all = jnp.moveaxis(vm_all, 0, 1)
-            return prism_attention(qs, ks, vs, km_all, vm_all, p, seg,
-                                   causal=causal, logit_softcap=logit_softcap,
-                                   scale=scale, kv_mask=ms,
-                                   mean_counts=cnt_all)
-        bax = _manual_batch_axes(q.shape[0], cfg)
-        return _seq_shard_map(prism, axis, n_masks=1, batch_axes=bax)(
-            q, k, v, kv_mask)
+def prism_prefill_attention(q, k, v, cfg, *, causal=False, window=None,
+                            logit_softcap=None, scale=None, kv_mask=None):
+    """Segment-Means exchange + scaling-aware softmax (the paper's PRISM)."""
+    axis = cfg.seq_axis
+    Pn = cfg.seq_shards
+    if kv_mask is None:
+        kv_mask = jnp.ones(k.shape[:2], dtype=bool)
+    q, k, v = (_pin_seq_sharding(t, axis) for t in (q, k, v))
 
-    raise ValueError(f"unknown exchange mode {mode}")
+    L = cfg.L
+    if window is not None:
+        # Windowed layers: segment means of far context are invisible
+        # under the window anyway, so exchange only the HALO — the
+        # ceil(window / shard_len) preceding shards, fetched by
+        # collective_permute — instead of a full gather. Comm drops from
+        # (P-1)/P*N*D to n_halo/P*N*D per device.
+        Np_g = q.shape[1] // Pn
+        n_halo = min(-(-window // max(Np_g, 1)), Pn - 1)
+        if causal and n_halo < Pn - 1:
+            def halo(qs, ks, vs, ms):
+                p = jax.lax.axis_index(axis)
+                Np = qs.shape[1]
+                parts_k, parts_v = [], []
+                for sft in range(n_halo, 0, -1):
+                    perm = [(i, i + sft) for i in range(Pn - sft)]
+                    parts_k.append(jax.lax.ppermute(ks, axis, perm))
+                    parts_v.append(jax.lax.ppermute(vs, axis, perm))
+                kg = jnp.concatenate(parts_k + [ks], axis=1)
+                vg = jnp.concatenate(parts_v + [vs], axis=1)
+                base = (p - n_halo) * Np
+                gpos = base + jnp.arange((n_halo + 1) * Np)
+                valid = (gpos >= 0)[None, :]
+                from repro.core.prism_attention import (
+                    chunked_reference_attention)
+                return chunked_reference_attention(
+                    qs, kg, vg, causal=True, q_offset=n_halo * Np,
+                    window=window, logit_softcap=logit_softcap,
+                    scale=scale,
+                    kv_mask=jnp.broadcast_to(
+                        valid, (qs.shape[0], gpos.shape[0])))
+            bax = _manual_batch_axes(q.shape[0], cfg)
+            return _seq_shard_map(halo, axis, n_masks=1,
+                                  batch_axes=bax)(q, k, v, kv_mask)
+        return exchange_attention(
+            q, k, v, cfg.with_mode(ExchangeMode.VOLTAGE), causal=causal,
+            window=window, logit_softcap=logit_softcap, scale=scale,
+            kv_mask=kv_mask)
+
+    def prism(qs, ks, vs, ms):
+        p = jax.lax.axis_index(axis)
+        Np = qs.shape[1]
+        seg = Np // L
+        # L projected segment means per partition (linearity: no
+        # re-projection of remote features — scaling-aware reformulation)
+        km, cnt = segment_means_masked(ks, L, ms, axis=1)  # [B,L,Hk,dh]
+        vm, _ = segment_means_masked(vs, L, ms, axis=1)
+        km_all = all_gather_grad_safe(km, axis)       # [P, B, L, Hk, dh]
+        vm_all = all_gather_grad_safe(vm, axis)
+        cnt_all = jnp.moveaxis(jax.lax.all_gather(cnt, axis), 0, 1)
+        km_all = jnp.moveaxis(km_all, 0, 1)         # [B, P, L, Hk, dh]
+        vm_all = jnp.moveaxis(vm_all, 0, 1)
+        return prism_attention(qs, ks, vs, km_all, vm_all, p, seg,
+                               causal=causal, logit_softcap=logit_softcap,
+                               scale=scale, kv_mask=ms,
+                               mean_counts=cnt_all)
+    bax = _manual_batch_axes(q.shape[0], cfg)
+    return _seq_shard_map(prism, axis, n_masks=1, batch_axes=bax)(
+        q, k, v, kv_mask)
+
 
 
 def _pin_seq_sharding(t: jnp.ndarray, axis: str) -> jnp.ndarray:
@@ -271,7 +304,7 @@ def _manual_batch_axes(batch: int, cfg: ExchangeConfig):
     if not cfg.batch_axes:
         return ()
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = compat.get_abstract_mesh()
         if mesh is None or mesh.empty:
             return ()
         bax = tuple(a for a in cfg.batch_axes if a in mesh.axis_names)
@@ -292,7 +325,7 @@ def _seq_shard_map(fn, axis: str, n_masks: int = 0, batch_axes=()):
     spec = P(b, axis, None, None)
     in_specs = (spec, spec, spec) + (P(b, axis),) * n_masks
     manual = set((axis,) + tuple(batch_axes))
-    return jax.shard_map(fn, in_specs=in_specs, out_specs=spec,
+    return compat.shard_map(fn, in_specs=in_specs, out_specs=spec,
                          axis_names=manual, check_vma=False)
 
 
@@ -316,7 +349,10 @@ def exchange_cross_attention(
     memory partition; PRISM broadcasts only mask-aware segment means of the
     other partitions (comm (P-1)·L·D vs Voltage's (P-1)/P·M·D).
     """
-    if cfg.mode == ExchangeMode.LOCAL or cfg.seq_axis is None or cfg.seq_shards == 1:
+    if (cfg.mode in (ExchangeMode.LOCAL, ExchangeMode.PRISM_SIM)
+            or cfg.seq_axis is None or cfg.seq_shards == 1):
+        # PRISM_SIM never uses real collectives; these paths have no
+        # simulation analogue (unsharded cache / memory), so run exact
         return reference_attention(q, k_mem, v_mem, kv_mask=mem_mask,
                                    logit_softcap=logit_softcap, scale=scale)
     axis, Pn, L = cfg.seq_axis, cfg.seq_shards, cfg.L
@@ -331,7 +367,7 @@ def exchange_cross_attention(
                                        logit_softcap=logit_softcap, scale=scale)
         bax = _manual_batch_axes(q.shape[0], cfg) or None
         manual = {axis} | set(bax or ())
-        return jax.shard_map(
+        return compat.shard_map(
             volt,
             in_specs=(P(bax, axis, None, None), P(bax, axis, None, None),
                       P(bax, axis, None, None), P(bax, axis)),
@@ -351,7 +387,7 @@ def exchange_cross_attention(
                                kv_mask=ms, mean_counts=cnt_all)
     bax = _manual_batch_axes(q.shape[0], cfg) or None
     manual = {axis} | set(bax or ())
-    return jax.shard_map(
+    return compat.shard_map(
         prism_x,
         in_specs=(P(bax, axis, None, None), P(bax, axis, None, None),
                   P(bax, axis, None, None), P(bax, axis)),
@@ -393,7 +429,10 @@ def exchange_attention_mla(
         v = jnp.einsum("bnr,rhd->bnhd", c, w_uv)
         return k, v
 
-    if cfg.mode == ExchangeMode.LOCAL or cfg.seq_axis is None or cfg.seq_shards == 1:
+    if (cfg.mode in (ExchangeMode.LOCAL, ExchangeMode.PRISM_SIM)
+            or cfg.seq_axis is None or cfg.seq_shards == 1):
+        # PRISM_SIM never uses real collectives; these paths have no
+        # simulation analogue (unsharded cache / memory), so run exact
         k, v = expand(c_kv, k_pe)
         B_, Nq_, H_ = q.shape[0], q.shape[1], q.shape[2]
         if B_ * H_ * Nq_ * k.shape[1] * 4 > 0.5e9:
@@ -419,7 +458,7 @@ def exchange_attention_mla(
                                                q_offset=p * Np, scale=scale)
         bax = _manual_batch_axes(q.shape[0], cfg) or None
         manual = {axis} | set(bax or ())
-        return jax.shard_map(
+        return compat.shard_map(
             volt, in_specs=(P(bax, axis, None, None), P(bax, axis, None),
                             P(bax, axis, None)),
             out_specs=P(bax, axis, None, None),
@@ -442,7 +481,7 @@ def exchange_attention_mla(
                                causal=causal, scale=scale)
     bax = _manual_batch_axes(q.shape[0], cfg) or None
     manual = {axis} | set(bax or ())
-    return jax.shard_map(
+    return compat.shard_map(
         prism_mla, in_specs=(P(bax, axis, None, None), P(bax, axis, None),
                              P(bax, axis, None)),
         out_specs=P(bax, axis, None, None),
@@ -475,7 +514,10 @@ def mla_decode_attention_sharded(
         lg = jnp.where((gpos < cache_len)[None, None, None, :], lg, NEG_INF)
         return lg
 
-    if cfg.mode == ExchangeMode.LOCAL or cfg.seq_axis is None or cfg.seq_shards == 1:
+    if (cfg.mode in (ExchangeMode.LOCAL, ExchangeMode.PRISM_SIM)
+            or cfg.seq_axis is None or cfg.seq_shards == 1):
+        # PRISM_SIM never uses real collectives; these paths have no
+        # simulation analogue (unsharded cache / memory), so run exact
         lg = partial_attn(q_lat, q_pe, c_cache, pe_cache, 0)
         p = jax.nn.softmax(lg, axis=-1)
         o = jnp.einsum("bhqs,bsr->bqhr", p, c_cache.astype(jnp.float32))
@@ -496,7 +538,7 @@ def mla_decode_attention_sharded(
         o_g = jax.lax.psum(o_p, axis)
         return (o_g / l_g.transpose(0, 2, 1)[..., None]).astype(ql.dtype)
 
-    return jax.shard_map(
+    return compat.shard_map(
         shard_fn,
         in_specs=(P(None, None, None, None), P(None, None, None, None),
                   P(None, axis, None), P(None, axis, None)),
@@ -534,7 +576,10 @@ def decode_attention_sharded(
             ok &= gpos[None, :] >= jnp.reshape(clen, (-1, 1)) - window
         return ok
 
-    if cfg.mode == ExchangeMode.LOCAL or cfg.seq_axis is None or cfg.seq_shards == 1:
+    if (cfg.mode in (ExchangeMode.LOCAL, ExchangeMode.PRISM_SIM)
+            or cfg.seq_axis is None or cfg.seq_shards == 1):
+        # PRISM_SIM never uses real collectives; these paths have no
+        # simulation analogue (unsharded cache / memory), so run exact
         B, S = k_cache.shape[0], k_cache.shape[1]
         valid = _valid(jnp.arange(S), cache_len)
         return reference_attention(q, k_cache, v_cache, kv_mask=valid,
@@ -604,7 +649,7 @@ def decode_attention_sharded(
                              q.dtype) if k_means is None else k_means)
         v_means = (jnp.zeros((B0, Pn, 1, k_cache.shape[2], k_cache.shape[3]),
                              q.dtype) if v_means is None else v_means)
-    out = jax.shard_map(shard_fn, in_specs=in_specs, out_specs=q_spec,
+    out = compat.shard_map(shard_fn, in_specs=in_specs, out_specs=q_spec,
                         axis_names=manual, check_vma=False)(
         q, k_cache, v_cache, clen, k_means, v_means)
     return out

@@ -13,6 +13,9 @@ import os
 from typing import Dict, Iterable, List, Optional, Tuple
 
 
+SCHEMA_VERSION = 1
+
+
 @dataclasses.dataclass(frozen=True)
 class PerfKey:
     mode: str            # "local" | "voltage" | "prism"
@@ -20,13 +23,25 @@ class PerfKey:
     cr: float            # 0.0 for local / voltage
     bandwidth_mbps: float
 
+    def __post_init__(self):
+        if "|" in self.mode:
+            raise ValueError(f"mode {self.mode!r} must not contain '|' "
+                             "(it is the key-encoding separator)")
+
     def encode(self) -> str:
         return f"{self.mode}|{self.batch}|{self.cr:g}|{self.bandwidth_mbps:g}"
 
     @staticmethod
     def decode(s: str) -> "PerfKey":
-        m, b, c, w = s.split("|")
-        return PerfKey(m, int(b), float(c), float(w))
+        parts = s.split("|")
+        if len(parts) != 4:
+            raise ValueError(f"malformed PerfKey string {s!r}: expected "
+                             "'mode|batch|cr|bandwidth'")
+        m, b, c, w = (p.strip() for p in parts)
+        batch = float(b)           # tolerate "8.0"-style batch strings
+        if batch != int(batch):
+            raise ValueError(f"non-integer batch {b!r} in PerfKey {s!r}")
+        return PerfKey(m, int(batch), float(c), float(w))
 
 
 @dataclasses.dataclass
@@ -86,7 +101,9 @@ class PerfMap:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({k: e.to_dict() for k, e in self._d.items()}, f,
+            json.dump({"schema_version": SCHEMA_VERSION,
+                       "entries": {k: e.to_dict()
+                                   for k, e in self._d.items()}}, f,
                       indent=1)
         os.replace(tmp, path)      # atomic
 
@@ -94,8 +111,20 @@ class PerfMap:
     def load(path: str) -> "PerfMap":
         pm = PerfMap()
         with open(path) as f:
-            for k, d in json.load(f).items():
-                pm._d[k] = PerfEntry.from_dict(d)
+            data = json.load(f)
+        if "schema_version" in data:
+            ver = data["schema_version"]
+            if ver != SCHEMA_VERSION:
+                raise ValueError(
+                    f"{path}: performance-map schema version {ver!r} is not "
+                    f"supported (this build reads version {SCHEMA_VERSION}); "
+                    "re-run the profiling sweep to regenerate it")
+            entries = data["entries"]
+        else:                      # pre-versioning flat map (v0 seed format)
+            entries = data
+        for k, d in entries.items():
+            PerfKey.decode(k)      # validate key shape before accepting
+            pm._d[k] = PerfEntry.from_dict(d)
         return pm
 
     def __len__(self) -> int:

@@ -4,6 +4,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.utils.compat import make_auto_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single-pod (256 chips) or 2×16×16 two-pod (512 chips).
@@ -14,12 +16,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 4, n_model: int = 2):
     """Small host-device mesh for tests (requires
     --xla_force_host_platform_device_count ≥ n_data·n_model)."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_auto_mesh((n_data, n_model), ("data", "model"))

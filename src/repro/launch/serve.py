@@ -33,23 +33,26 @@ def main():
     ap.add_argument("--L", type=int, default=4)
     args = ap.parse_args()
 
+    from repro.api import ExecutionPlan
     from repro.configs import get_config
-    from repro.core.exchange import ExchangeMode
     from repro.models import registry, transformer as tfm
     from repro.sharding.specs import (batch_shardings, cache_shardings,
-                                      make_plan, param_shardings)
+                                      param_shardings)
 
     n_model = 2 if args.devices >= 4 else 1
-    mesh = jax.make_mesh((args.devices // n_model, n_model),
-                         ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.utils.compat import make_auto_mesh
+    mesh = make_auto_mesh((args.devices // n_model, n_model),
+                          ("data", "model"))
     cfg = get_config(args.arch).reduced(vocab_size=512)
-    plan = make_plan(mesh, cfg, ExchangeMode(args.mode), L=args.L,
-                     decode=True)
+    eplan = (ExecutionPlan.local() if args.mode == "local" else
+             ExecutionPlan.prism(L=args.L, seq_axis="model",
+                                 seq_shards=n_model))
+    plan = eplan.sharding_plan(mesh, cfg, decode=True)
     S = args.prompt_len + args.tokens
     rng = np.random.RandomState(0)
 
-    with jax.sharding.set_mesh(mesh):
+    from repro.utils.compat import set_mesh as _set_mesh
+    with _set_mesh(mesh):
         params = registry.init_params(cfg, seed=0)
         params = jax.device_put(params, param_shardings(plan, cfg, params))
         cache = tfm.init_decode_cache(cfg, args.batch, S)

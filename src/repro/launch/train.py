@@ -49,15 +49,16 @@ def main():
     from repro.train.train_step import build_train_step
 
     n_model = 2 if args.devices >= 4 else 1
-    mesh = jax.make_mesh((args.devices // n_model, n_model),
-                         ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.utils.compat import make_auto_mesh
+    mesh = make_auto_mesh((args.devices // n_model, n_model),
+                          ("data", "model"))
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced(vocab_size=512)
     plan = make_plan(mesh, cfg, ExchangeMode(args.mode), L=args.L, train=True)
 
-    with jax.sharding.set_mesh(mesh):
+    from repro.utils.compat import set_mesh as _set_mesh
+    with _set_mesh(mesh):
         params = registry.init_params(cfg, seed=0)
         pshard = param_shardings(plan, cfg, params)
         params = jax.device_put(params, pshard)

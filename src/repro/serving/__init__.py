@@ -1,5 +1,12 @@
-from repro.serving.engine import ServeEngine, build_prefill_step, build_decode_step
-from repro.serving.dispatcher import AdaptiveDispatcher
+"""Legacy serving layer — superseded by :mod:`repro.api`.
+
+``AdaptiveDispatcher`` and ``ServeEngine`` are deprecation shims;
+``repro.api.InferenceSession`` is the supported runtime surface. The step
+builders stay canonical for dry-run shape analysis.
+"""
+from repro.serving.dispatcher import AdaptiveDispatcher, DispatchRecord
+from repro.serving.engine import (ServeEngine, build_decode_step,
+                                  build_prefill_step)
 
 __all__ = ["ServeEngine", "build_prefill_step", "build_decode_step",
-           "AdaptiveDispatcher"]
+           "AdaptiveDispatcher", "DispatchRecord"]

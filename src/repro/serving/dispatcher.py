@@ -1,30 +1,32 @@
-"""Adaptive dispatcher: the paper's runtime loop around the policy.
+"""DEPRECATED adaptive dispatcher — superseded by ``repro.api``.
 
-Holds one jitted executable per execution mode (local / prism@CR) and routes
-each arriving request batch to the one the profiled map predicts fastest
-(or most energy-efficient) under current network conditions. Bandwidth is
-observed via an EWMA probe the caller updates (`observe_bandwidth`).
+``repro.api.InferenceSession`` now owns the runtime loop (per-plan
+executables + bandwidth observation + policy dispatch); this class is kept
+as a thin compatibility shim for code that hand-wires ``{"mode@cr": fn}``
+executable tables. New code should do::
+
+    from repro.api import ExecutionPlan, InferenceSession
+    session = InferenceSession.from_config(arch, plans=[...])
+    session.dispatch(batch_inputs)
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional
+import warnings
+from typing import Any, Callable, Dict
 
+from repro.api.session import DispatchRecord          # canonical home
 from repro.core.perfmap import PerfMap
 from repro.core.policy import AdaptivePolicy, Decision, Objective
 
-
-@dataclasses.dataclass
-class DispatchRecord:
-    batch: int
-    bandwidth_mbps: float
-    decision: Decision
-    wall_ms: float
+__all__ = ["AdaptiveDispatcher", "DispatchRecord"]
 
 
 class AdaptiveDispatcher:
-    """Routes batches to per-mode executables per the profiled policy."""
+    """Routes batches to per-mode executables per the profiled policy.
+
+    .. deprecated:: use :class:`repro.api.InferenceSession` instead.
+    """
 
     def __init__(self, perfmap: PerfMap,
                  executables: Dict[str, Callable],
@@ -32,6 +34,9 @@ class AdaptiveDispatcher:
                  bandwidth_alpha: float = 0.3):
         """``executables``: {"local": fn, "prism@9.9": fn, ...} — each fn
         takes the request batch pytree and returns outputs."""
+        warnings.warn("AdaptiveDispatcher is deprecated; use "
+                      "repro.api.InferenceSession", DeprecationWarning,
+                      stacklevel=2)
         self.policy = AdaptivePolicy(perfmap)
         self.execs = executables
         self.objective: Objective = objective
@@ -52,11 +57,22 @@ class AdaptiveDispatcher:
     def dispatch(self, batch_inputs: Any, batch_size: int) -> Any:
         d = self.policy.decide(batch_size, self._bw, self.objective)
         key = self._key(d)
-        if key not in self.execs:           # fall back to any same-mode exec
-            key = next((k for k in self.execs if k.startswith(d.mode)),
-                       "local")
+        substituted = False
+        if key not in self.execs:
+            # fall back to any same-mode executable, then to any executable
+            # at all — never KeyError just because "local" is unregistered
+            # (exact mode match, same semantics as InferenceSession)
+            key = next((k for k in self.execs
+                        if k.split("@")[0] == d.mode), None)
+            if key is None:
+                if not self.execs:
+                    raise LookupError("no executables registered")
+                key = next(iter(self.execs))
+            substituted = True
         t0 = time.perf_counter()
         out = self.execs[key](batch_inputs)
         wall = (time.perf_counter() - t0) * 1e3
-        self.history.append(DispatchRecord(batch_size, self._bw, d, wall))
+        self.history.append(DispatchRecord(batch_size, self._bw, d, wall,
+                                           exec_key=key,
+                                           substituted=substituted))
         return out

@@ -1,10 +1,13 @@
 """Serving engine: prefill / decode step builders + a batched request loop.
 
-``serve_step`` (the dry-run target for ``decode_*``/``long_*`` shapes) is
-one-token decode against a sequence-sharded KV cache. The engine implements
-greedy/temperature sampling, continuous-batch slot management, and threads
-the paper's adaptive policy: each arriving batch is dispatched LOCAL or
-PRISM/VOLTAGE per the profiled performance map (see dispatcher.py).
+NOTE: ``ServeEngine`` is a deprecation shim — ``repro.api.InferenceSession``
+(``session.generate(...)``) is the supported generation surface. The step
+builders (``build_prefill_step`` / ``build_decode_step``) remain the
+canonical jit targets for the dry-run ``decode_*``/``long_*`` shapes.
+
+``serve_step`` is one-token decode against a sequence-sharded KV cache, with
+greedy/temperature sampling; adaptive LOCAL-vs-PRISM routing lives in
+``repro.api.InferenceSession.dispatch``.
 """
 from __future__ import annotations
 
@@ -52,7 +55,10 @@ def sample_token(logits: jnp.ndarray, key, temperature: float = 0.0):
 
 @dataclasses.dataclass
 class ServeEngine:
-    """Minimal batched generation loop over the jitted steps."""
+    """Minimal batched generation loop over the jitted steps.
+
+    .. deprecated:: use ``repro.api.InferenceSession.generate`` instead.
+    """
     cfg: ModelConfig
     xcfg: ExchangeConfig
     params: Any
@@ -60,6 +66,10 @@ class ServeEngine:
     temperature: float = 0.0
 
     def __post_init__(self):
+        import warnings
+        warnings.warn("ServeEngine is deprecated; use "
+                      "repro.api.InferenceSession.generate",
+                      DeprecationWarning, stacklevel=2)
         self._decode = jax.jit(build_decode_step(self.cfg, self.xcfg),
                                donate_argnums=(2,))
 

@@ -2,8 +2,7 @@
 straggler mitigation, elastic re-meshing logic."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_fallback import given, settings, st
 
 import jax.numpy as jnp
 

@@ -3,8 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.train.grad_compress import (compress, compress_with_feedback,
                                        compression_ratio, decompress)
@@ -73,11 +72,12 @@ def test_cross_pod_mean_subprocess():
         out, res = compressed_cross_pod_mean(gin, None, L=8, pod_axis="pod")
         return out
 
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.utils.compat import make_auto_mesh
+    mesh = make_auto_mesh((1,), ("pod",))
     from jax.sharding import PartitionSpec as P
-    with jax.sharding.set_mesh(mesh):
-        out = jax.shard_map(f, in_specs=({"w": P(None, None)},),
+    from repro.utils import compat
+    with compat.set_mesh(mesh):
+        out = compat.shard_map(f, in_specs=({"w": P(None, None)},),
                             out_specs={"w": P(None, None)},
                             axis_names={"pod"}, check_vma=False)(g)
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(g["w"]),

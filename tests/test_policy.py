@@ -3,14 +3,12 @@ import os
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_fallback import given, settings, st
 
+from repro.api import (PAPER_BATCHES, PAPER_BWS, PAPER_CRS, AdaptivePolicy,
+                       PerfEntry, PerfKey, PerfMap, SweepSpec,
+                       profile_simulated, sweep_cost)
 from repro.core.costmodel import EdgeCostModel
-from repro.core.perfmap import PerfEntry, PerfKey, PerfMap
-from repro.core.policy import AdaptivePolicy
-from repro.core.profiler import (PAPER_BATCHES, PAPER_BWS, PAPER_CRS,
-                                 SweepSpec, profile_simulated, sweep_cost)
 
 
 @pytest.fixture(scope="module")

@@ -2,8 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.core.segment_means import (comm_elements_prism,
                                       comm_elements_voltage, comm_reduction,
