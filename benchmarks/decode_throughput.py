@@ -1,0 +1,192 @@
+"""Decode-throughput benchmark: compiled fast path vs the seed per-token
+loop, per execution plan.
+
+Measures, for each plan (local / voltage / prism_sim):
+  * prefill_ms       — time to a primed cache + first-token logits
+  * compiled_tok_s   — decode tokens/s of the scanned on-device loop
+  * legacy_tok_s     — decode tokens/s of the seed implementation (one
+                       jitted decode dispatch + host key split per token)
+  * speedup          — compiled_tok_s / legacy_tok_s
+
+Writes ``BENCH_decode.json`` at the repo root — the decode-throughput
+trajectory artifact; CI runs ``--smoke``.
+
+    PYTHONPATH=src python benchmarks/decode_throughput.py [--smoke]
+
+On a single host, voltage runs its P=1 degenerate layout (the collective
+paths need a real sequence mesh) and prism runs as prism_sim — the same
+math the profiler attributes to "prism".
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, repeats: int = 3):
+    """Median wall seconds of fn(*args) with a synchronized result."""
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree_util.tree_map(
+            lambda a: a.block_until_ready()
+            if hasattr(a, "block_until_ready") else a, out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def bench_plan(cfg, params, plan, prompt, n_new: int, repeats: int):
+    from repro.api import generation as gen
+    from repro.models import transformer as tfm
+    xcfg = plan.to_exchange_config()
+    B, T0 = prompt.shape
+    mode = gen.resolve_prefill_mode(cfg, xcfg, "auto")
+
+    # -- compiled path: separate jitted prefill / decode for honest splits
+    @jax.jit
+    def prefill_fn(p, prompt_tokens):
+        cache = tfm.init_decode_cache(cfg, B, T0 + n_new)
+        if mode == "single_pass":
+            return tfm.prefill(p, {"tokens": prompt_tokens}, cache, cfg,
+                               xcfg)
+        return gen.prefill_by_decode(p, prompt_tokens, cache, cfg, xcfg)
+
+    @jax.jit
+    def decode_fn(p, cache, tok, key):
+        toks, _ = gen.decode_scan(p, cache, tok, T0, key, cfg, xcfg, 0.0,
+                                  n_new - 1)
+        return toks
+
+    logits, cache0 = prefill_fn(params, prompt)     # warm-up / compile
+    tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    key = jax.random.key(0)
+    decode_fn(params, cache0, tok0, key)
+
+    prefill_s = _time(prefill_fn, params, prompt, repeats=repeats)
+    decode_s = _time(decode_fn, params, cache0, tok0, key, repeats=repeats)
+    compiled_tok_s = (n_new - 1) / max(decode_s, 1e-9)
+
+    # -- seed path: one jitted dispatch per token, host-side sampling.
+    # Timed in two regions (prompt consumption / sampled decode) so the
+    # decode-vs-decode comparison is apples-to-apples with the split
+    # compiled timings above.
+    dec_step = jax.jit(
+        lambda p, b, c, i: tfm.decode_step(p, b, c, i, cfg, xcfg))
+
+    def _sync(x):
+        jax.tree_util.tree_map(
+            lambda a: a.block_until_ready()
+            if hasattr(a, "block_until_ready") else a, x)
+
+    def legacy_times():
+        cache = tfm.init_decode_cache(cfg, B, T0 + n_new)
+        k = jax.random.key(0)
+        tok = prompt[:, :1]
+        t0 = time.perf_counter()
+        for t in range(T0 - 1):                     # teacher-forced prompt
+            _, cache = dec_step(params, {"tokens": tok}, cache, t)
+            tok = prompt[:, t + 1:t + 2]
+        _sync(cache)
+        t1 = time.perf_counter()
+        for t in range(T0 - 1, T0 + n_new - 1):     # n_new sampled tokens
+            logits, cache = dec_step(params, {"tokens": tok}, cache, t)
+            k, sub = jax.random.split(k)
+            tok = gen.sample_token(logits, sub, 0.0)[:, 0:1]
+        _sync(tok)
+        t2 = time.perf_counter()
+        return t1 - t0, t2 - t1
+
+    legacy_times()                                   # warm-up / compile
+    pss, dss = zip(*[legacy_times() for _ in range(repeats)])
+    legacy_prefill_s = float(np.median(pss))
+    legacy_decode_s = float(np.median(dss))
+    legacy_tok_s = n_new / max(legacy_decode_s, 1e-9)
+    # charge the compiled path its prefill too for the end-to-end rate
+    e2e_tok_s = n_new / max(prefill_s + decode_s, 1e-9)
+    legacy_e2e_tok_s = n_new / max(legacy_prefill_s + legacy_decode_s, 1e-9)
+
+    return {
+        "prefill_mode": mode,
+        "prefill_ms": prefill_s * 1e3,
+        "compiled_decode_tok_s": compiled_tok_s,
+        "compiled_e2e_tok_s": e2e_tok_s,
+        "legacy_prefill_ms": legacy_prefill_s * 1e3,
+        "legacy_tok_s": legacy_tok_s,
+        "legacy_e2e_tok_s": legacy_e2e_tok_s,
+        "speedup_decode": compiled_tok_s / max(legacy_tok_s, 1e-9),
+        "speedup_e2e": e2e_tok_s / max(legacy_e2e_tok_s, 1e-9),
+    }
+
+
+def run(smoke: bool = True, arch: str = "llama3.2-1b",
+        out_path: str = "BENCH_decode.json"):
+    from repro.api import ExecutionPlan
+    from repro.configs import get_config
+    from repro.kernels import backend_info
+    from repro.models import registry
+
+    if smoke:
+        B, T0, n_new, repeats = 1, 16, 64, 5
+        cfg = get_config(arch).reduced()
+    else:
+        B, T0, n_new, repeats = 4, 64, 128, 5
+        cfg = get_config(arch).reduced(n_layers=4, d_model=256, d_ff=512,
+                                       n_heads=8, n_kv_heads=8, head_dim=32)
+    params = registry.init_params(cfg, seed=0)
+    prompt = jnp.asarray(
+        np.random.RandomState(0).randint(0, cfg.vocab_size, (B, T0)))
+
+    plans = {
+        "local": ExecutionPlan.local(),
+        # single host: degenerate voltage layout (collectives need a mesh)
+        "voltage": ExecutionPlan("voltage", 0.0, 0, None, 1),
+        "prism": ExecutionPlan.prism_sim(L=max(T0 // 8, 1), cr=4.0),
+    }
+    results = {"arch": cfg.name, "batch": B, "prompt_len": T0,
+               "n_new": n_new, "smoke": smoke,
+               "kernel_backend": backend_info(), "plans": {}}
+    for name, plan in plans.items():
+        r = bench_plan(cfg, params, plan, prompt, n_new, repeats)
+        results["plans"][name] = r
+        print(f"{name:8s} prefill {r['prefill_ms']:8.1f} ms "
+              f"({r['prefill_mode']:11s})  decode {r['compiled_decode_tok_s']:8.1f} tok/s "
+              f"(legacy {r['legacy_tok_s']:8.1f})  speedup "
+              f"{r['speedup_decode']:.2f}x decode / {r['speedup_e2e']:.2f}x e2e")
+
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {out_path}")
+    return results
+
+
+def main():
+    import sys
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CPU config (CI)")
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--out", default="BENCH_decode.json")
+    ap.add_argument("--min-speedup", type=float, default=1.0,
+                    help="fail (exit 1) if any plan's decode speedup over "
+                         "the legacy loop is below this")
+    args = ap.parse_args()
+    results = run(smoke=args.smoke, arch=args.arch, out_path=args.out)
+    slow = {k: round(v["speedup_decode"], 2)
+            for k, v in results["plans"].items()
+            if v["speedup_decode"] < args.min_speedup}
+    if slow:
+        print(f"FAIL: decode speedup below {args.min_speedup}x for: {slow}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    main()

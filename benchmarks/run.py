@@ -18,8 +18,9 @@ def main():
     os.makedirs(args.out, exist_ok=True)
     results = {}
 
-    from benchmarks import (explain_adaptive, fig6_bandwidth, profiling_cost,
-                            roofline, table2_breakdown, table3_efficiency,
+    from benchmarks import (decode_throughput, explain_adaptive,
+                            fig6_bandwidth, profiling_cost, roofline,
+                            table2_breakdown, table3_efficiency,
                             table4_gains)
 
     sections = [
@@ -30,6 +31,7 @@ def main():
         ("profiling_cost", profiling_cost.run),
         ("explain_adaptive", explain_adaptive.run),
         ("roofline", roofline.run),
+        ("decode_throughput", decode_throughput.run),
     ]
     if not args.fast:
         from benchmarks import accuracy_prism

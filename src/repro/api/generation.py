@@ -1,0 +1,201 @@
+"""Compiled generation fast path: prefill + scanned decode in ONE jitted
+executable.
+
+The legacy loop (`ServeEngine.generate` / the seed `InferenceSession.
+generate`) dispatched one jitted decode step per prompt token AND per new
+token, plus a host-side `jax.random.split` and an implicit device sync per
+sampled token — per-step Python/dispatch overhead dominated exactly as the
+Jetson profiling literature predicts (arXiv:2508.08430).  Here the whole
+generation — cache init, prompt prefill, `lax.scan` decode with on-device
+sampling — is a single XLA computation, jitted once per
+(plan, batch, prompt-length, n_new) and cached by the caller:
+
+* **Prefill** — ``repro.models.transformer.prefill`` runs the prompt
+  through ``exchange_attention`` once and bulk-writes the KV cache
+  (attention families).  Recurrent families (hybrid/ssm), and PRISM plans
+  under ``prefill_mode="auto"`` (whose compressed prefill is intentionally
+  not equivalent to exact per-token decode), use ``prefill_by_decode`` — a
+  teacher-forced ``lax.scan`` of ``decode_step``: still one executable,
+  just sequential math.
+* **Decode** — ``lax.scan`` of ``decode_step`` + on-device sampling with a
+  threaded PRNG key (no host round-trips); the cache lives in the scan
+  carry so XLA updates it in place.
+
+``dispatch_count()`` counts invocations of compiled generation callables —
+the regression tests assert it stays O(1) in prompt length and n_new.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.exchange import ExchangeConfig, ExchangeMode
+from repro.models import transformer as tfm
+
+_STATS = {"dispatches": 0, "builds": 0}
+
+
+def dispatch_count() -> int:
+    """Compiled generation callables invoked so far (one per generate)."""
+    return _STATS["dispatches"]
+
+
+def build_count() -> int:
+    return _STATS["builds"]
+
+
+def sample_token(logits: jnp.ndarray, key, temperature: float = 0.0):
+    """[B, 1, V] → [B, 1] token ids (greedy at T=0)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / temperature
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+def resolve_prefill_mode(cfg: ModelConfig, xcfg: ExchangeConfig,
+                         mode: str = "auto") -> str:
+    """Pick the prefill implementation: "single_pass" or "scan".
+
+    "auto" chooses single-pass when the family supports it AND the
+    full-sequence math is exact w.r.t. the decode path:
+
+    * PRISM plans prefill through compressed segment means — the paper's
+      distributed-prefill semantics, but not token-for-token equal to the
+      legacy decode loop — so "auto" keeps them scanned; pass
+      ``prefill_mode="single_pass"`` explicitly for the compressed prefill.
+    * MoE full-sequence routing uses a capacity ∝ seq-len and can DROP
+      token-expert assignments that per-token decode (capacity 1/step)
+      never drops, so "auto" keeps MoE scanned too; forcing single-pass
+      gives the forward/training routing semantics.
+    """
+    if mode == "scan":
+        return "scan"
+    supported = tfm.supports_prefill(cfg)
+    if mode == "single_pass":
+        if not supported:
+            raise ValueError(f"family {cfg.family!r} has no single-pass "
+                             f"prefill (supported: {tfm.PREFILL_FAMILIES})")
+        return "single_pass"
+    if mode != "auto":
+        raise ValueError(f"prefill_mode {mode!r}: one of "
+                         f"'auto' | 'single_pass' | 'scan'")
+    exact = ((xcfg.mode in (ExchangeMode.LOCAL, ExchangeMode.VOLTAGE)
+              or xcfg.seq_axis is None or xcfg.seq_shards == 1)
+             and cfg.moe is None)
+    return "single_pass" if (supported and exact) else "scan"
+
+
+def prefill_by_decode(params, prompt_tokens: jnp.ndarray, cache,
+                      cfg: ModelConfig, xcfg: ExchangeConfig):
+    """Teacher-forced prompt consumption as ONE ``lax.scan`` of
+    ``decode_step`` → (last logits [B, 1, V], primed cache).
+
+    Compiled fallback where single-pass prefill doesn't apply; identical
+    math to the legacy per-token loop, minus T0 dispatches.
+    """
+    B, T0 = prompt_tokens.shape
+
+    def step(carry, xs):
+        c, _ = carry
+        tok, idx = xs
+        logits, c = tfm.decode_step(params, {"tokens": tok[:, None]}, c,
+                                    idx, cfg, xcfg)
+        return (c, logits), None
+
+    logits0 = jnp.zeros((B, 1, cfg.vocab_size), jnp.float32)
+    (cache, logits), _ = jax.lax.scan(
+        step, (cache, logits0),
+        (prompt_tokens.T, jnp.arange(T0, dtype=jnp.int32)))
+    return logits, cache
+
+
+def decode_scan(params, cache, tok0: jnp.ndarray, start_index, key,
+                cfg: ModelConfig, xcfg: ExchangeConfig,
+                temperature: float, n_steps: int):
+    """``n_steps`` autoregressive steps from ``tok0`` at ``start_index``,
+    sampling on device with a threaded key → (tokens [B, n_steps], cache).
+    """
+    B = tok0.shape[0]
+    if n_steps <= 0:
+        return jnp.zeros((B, 0), jnp.int32), cache
+
+    def step(carry, _):
+        tok, c, idx, k = carry
+        logits, c = tfm.decode_step(params, {"tokens": tok}, c, idx, cfg,
+                                    xcfg)
+        k, sub = jax.random.split(k)
+        nxt = sample_token(logits, sub, temperature)[:, 0:1]
+        return (nxt, c, idx + 1, k), nxt[:, 0]
+
+    (_, cache, _, _), toks = jax.lax.scan(
+        step, (tok0, cache, jnp.asarray(start_index, jnp.int32), key),
+        None, length=n_steps)
+    return toks.T, cache                               # [B, n_steps]
+
+
+def build_generate_fn(cfg: ModelConfig, xcfg: ExchangeConfig, *,
+                      n_new: int, temperature: float = 0.0,
+                      prefill_mode: str = "auto") -> Callable:
+    """One jitted end-to-end generation callable.
+
+    Returns ``fn(params, prompt_tokens [B, T0], extras, key) → [B, n_new]``
+    (``extras``: the audio/vlm memory inputs, ``{}`` otherwise).  The whole
+    pipeline — cache init, prefill, sampled decode scan — is a single XLA
+    computation: a constant number of dispatches regardless of T0 / n_new,
+    and the cache never round-trips through Python between tokens.
+    """
+    mode = resolve_prefill_mode(cfg, xcfg, prefill_mode)
+
+    def gen(params, prompt_tokens, extras, key):
+        B, T0 = prompt_tokens.shape
+        cache = tfm.init_decode_cache(cfg, B, T0 + n_new)
+        if cfg.family in ("audio", "vlm"):
+            cache = tfm.prefill_memory(
+                params, {"tokens": prompt_tokens, **extras}, cfg, xcfg,
+                cache)
+        if mode == "single_pass":
+            logits, cache = tfm.prefill(
+                params, {"tokens": prompt_tokens, **extras}, cache, cfg,
+                xcfg)
+        else:
+            logits, cache = prefill_by_decode(params, prompt_tokens, cache,
+                                              cfg, xcfg)
+        key, sub = jax.random.split(key)
+        tok = sample_token(logits, sub, temperature)[:, 0:1]
+        rest, _ = decode_scan(params, cache, tok, T0, key, cfg, xcfg,
+                              temperature, n_new - 1)
+        return jnp.concatenate([tok, rest], axis=1)
+
+    jitted = jax.jit(gen)
+    _STATS["builds"] += 1
+
+    def counted(params, prompt_tokens, extras, key):
+        _STATS["dispatches"] += 1
+        return jitted(params, prompt_tokens, extras, key)
+
+    counted.jitted = jitted
+    counted.prefill_mode = mode
+    return counted
+
+
+def generate(params, prompt_tokens: jnp.ndarray, n_new: int,
+             cfg: ModelConfig, xcfg: ExchangeConfig, *,
+             batch_extras: Optional[Dict[str, Any]] = None, seed: int = 0,
+             temperature: float = 0.0, prefill_mode: str = "auto",
+             _cache: Optional[Dict] = None) -> jnp.ndarray:
+    """Convenience one-shot wrapper (sessions/engines keep their own
+    compiled-fn caches; pass ``_cache`` dict to reuse executables)."""
+    B, T0 = prompt_tokens.shape
+    if n_new <= 0:
+        return jnp.zeros((B, 0), jnp.int32)
+    key = (B, T0, int(n_new), float(temperature), prefill_mode)
+    fns = _cache if _cache is not None else {}
+    if key not in fns:
+        fns[key] = build_generate_fn(cfg, xcfg, n_new=n_new,
+                                     temperature=temperature,
+                                     prefill_mode=prefill_mode)
+    return fns[key](params, prompt_tokens, dict(batch_extras or {}),
+                    jax.random.key(seed))

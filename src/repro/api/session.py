@@ -84,7 +84,8 @@ class InferenceSession:
         self.params = params
         self.plans: Dict[str, ExecutionPlan] = {}
         self._execs: Dict[str, Any] = {}
-        self._decode_execs: Dict[str, Any] = {}
+        # plan → {(B, T0, n_new, T, prefill_mode): compiled generate fn}
+        self._decode_execs: Dict[Any, Dict] = {}
         self.objective: Objective = objective
         self.temperature = temperature
         self._allow = allow_modes
@@ -210,6 +211,7 @@ class InferenceSession:
     def dispatch(self, batch_inputs: Any,
                  batch_size: Optional[int] = None) -> Any:
         """Route one batch per the profiled policy and run it."""
+        import jax
         if batch_size is None:
             batch_size = int(next(iter(batch_inputs.values())).shape[0]
                              if isinstance(batch_inputs, dict)
@@ -218,6 +220,11 @@ class InferenceSession:
         key, substituted = self._exec_key_for(d)
         t0 = time.perf_counter()
         out = self._execs[key](batch_inputs)
+        # wall_ms must cover execution, not just the async dispatch —
+        # otherwise PerfMap-vs-observed comparisons flatter the runtime
+        jax.tree_util.tree_map(
+            lambda a: a.block_until_ready()
+            if hasattr(a, "block_until_ready") else a, out)
         wall = (time.perf_counter() - t0) * 1e3
         self.history.append(DispatchRecord(batch_size, self._bw, d, wall,
                                            exec_key=key,
@@ -229,51 +236,28 @@ class InferenceSession:
     def generate(self, prompt_tokens, n_new: int,
                  plan: Optional[ExecutionPlan] = None,
                  batch_extras: Optional[Dict[str, Any]] = None,
-                 seed: int = 0, temperature: Optional[float] = None):
+                 seed: int = 0, temperature: Optional[float] = None,
+                 prefill_mode: str = "auto"):
         """Greedy/temperature generation: prompt [B, T0] → [B, n_new].
 
-        ``plan`` defaults to the local plan (or the first registered one);
-        decode executables are jitted once per plan key and cached.
+        Compiled fast path: single-pass prefill (or a teacher-forced
+        ``lax.scan`` fallback — see ``repro.api.generation``) plus one
+        scanned decode loop with on-device sampling, all inside ONE jitted
+        executable — a constant number of dispatches regardless of prompt
+        length and token count.  Executables are cached per
+        (plan, shape, temperature); ``plan`` defaults to the local plan
+        (or the first registered one).
         """
-        import jax
-        import jax.numpy as jnp
-        from repro.models import transformer as tfm
+        from repro.api import generation as gen
         plan = plan or self.plans.get("local") or next(iter(self.plans.values()))
-        xcfg = plan.to_exchange_config()
         T = self.temperature if temperature is None else temperature
         # cache by the full plan, not plan.key: distinct plans (e.g. two
         # prism_sim L values) can share a key but need distinct executables
-        if plan not in self._decode_execs:
-            self._decode_execs[plan] = jax.jit(
-                lambda p, b, c, i: tfm.decode_step(p, b, c, i, self.cfg,
-                                                   xcfg),
-                donate_argnums=(2,))
-        dec = self._decode_execs[plan]
-
-        B, T0 = prompt_tokens.shape
-        S = T0 + n_new
-        cache = tfm.init_decode_cache(self.cfg, B, S)
-        if self.cfg.family in ("audio", "vlm"):
-            batch = {"tokens": prompt_tokens, **(batch_extras or {})}
-            cache = tfm.prefill_memory(self.params, batch, self.cfg, xcfg,
-                                       cache)
-        from repro.serving.engine import sample_token
-        key = jax.random.key(seed)
-        # teacher-forced prompt consumption token by token (prefill-by-decode)
-        tok = prompt_tokens[:, :1]
-        out = []
-        for t in range(S - 1):
-            logits, cache = dec(self.params, {"tokens": tok}, cache, t)
-            if t + 1 < T0:
-                tok = prompt_tokens[:, t + 1:t + 2]
-            else:
-                key, sub = jax.random.split(key)
-                tok = sample_token(logits, sub, T)[:, 0:1]
-                out.append(tok)
-            if len(out) >= n_new:
-                break
-        return (jnp.concatenate(out, axis=1) if out
-                else jnp.zeros((B, 0), jnp.int32))
+        return gen.generate(self.params, prompt_tokens, n_new, self.cfg,
+                            plan.to_exchange_config(),
+                            batch_extras=batch_extras, seed=seed,
+                            temperature=T, prefill_mode=prefill_mode,
+                            _cache=self._decode_execs.setdefault(plan, {}))
 
     # -- explanation (the paper's reported artifacts) ------------------------
 
@@ -286,7 +270,7 @@ class InferenceSession:
         pol = self.policy
         d = pol.decide(batch, bw, obj)
         key, _ = self._exec_key_for(d)
-        batch_key = pol._nearest_batch(batch)   # same snapping as decide()
+        batch_key = pol.nearest_batch(batch)    # same snapping as decide()
         cands = tuple(self.perfmap.candidates(batch_key, bw))
         return Explanation(
             batch=batch, bandwidth_mbps=bw, decision=d, plan_key=key,

@@ -36,10 +36,9 @@ from repro.core.prism_attention import (
     _grouped_scores,
     _grouped_values,
     _softcap,
-    prism_attention,
     reference_attention,
 )
-from repro.core.segment_means import segment_means, segment_means_masked
+from repro.kernels import dispatch as kdsp
 from repro.utils import compat
 
 
@@ -220,7 +219,8 @@ def prism_prefill_attention(q, k, v, cfg, *, causal=False, window=None,
     """Segment-Means exchange + scaling-aware softmax (the paper's PRISM)."""
     axis = cfg.seq_axis
     Pn = cfg.seq_shards
-    if kv_mask is None:
+    had_mask = kv_mask is not None      # no mask → unmasked segment means
+    if kv_mask is None:                 # (kernel-eligible) and exact log(seg)
         kv_mask = jnp.ones(k.shape[:2], dtype=bool)
     q, k, v = (_pin_seq_sharding(t, axis) for t in (q, k, v))
 
@@ -269,17 +269,24 @@ def prism_prefill_attention(q, k, v, cfg, *, causal=False, window=None,
         seg = Np // L
         # L projected segment means per partition (linearity: no
         # re-projection of remote features — scaling-aware reformulation)
-        km, cnt = segment_means_masked(ks, L, ms, axis=1)  # [B,L,Hk,dh]
-        vm, _ = segment_means_masked(vs, L, ms, axis=1)
+        if had_mask:
+            km, cnt = kdsp.segment_means_masked(ks, L, ms, axis=1)
+            vm, _ = kdsp.segment_means_masked(vs, L, ms, axis=1)
+            cnt_all = jnp.moveaxis(jax.lax.all_gather(cnt, axis), 0, 1)
+        else:
+            km = kdsp.segment_means(ks, L, axis=1)    # [B, L, Hk, dh]
+            vm = kdsp.segment_means(vs, L, axis=1)
+            cnt_all = None                # exact log(seg) scaling bias
         km_all = all_gather_grad_safe(km, axis)       # [P, B, L, Hk, dh]
         vm_all = all_gather_grad_safe(vm, axis)
-        cnt_all = jnp.moveaxis(jax.lax.all_gather(cnt, axis), 0, 1)
         km_all = jnp.moveaxis(km_all, 0, 1)         # [B, P, L, Hk, dh]
         vm_all = jnp.moveaxis(vm_all, 0, 1)
-        return prism_attention(qs, ks, vs, km_all, vm_all, p, seg,
-                               causal=causal, logit_softcap=logit_softcap,
-                               scale=scale, kv_mask=ms,
-                               mean_counts=cnt_all)
+        return kdsp.prism_attention(qs, ks, vs, km_all, vm_all, p, seg,
+                                    causal=causal,
+                                    logit_softcap=logit_softcap,
+                                    scale=scale,
+                                    kv_mask=ms if had_mask else None,
+                                    mean_counts=cnt_all)
     bax = _manual_batch_axes(q.shape[0], cfg)
     return _seq_shard_map(prism, axis, n_masks=1, batch_axes=bax)(
         q, k, v, kv_mask)
@@ -376,15 +383,15 @@ def exchange_cross_attention(
 
     def prism_x(qs, ks, vs, ms):
         p = jax.lax.axis_index(axis)
-        km, cnt = segment_means_masked(ks, L, ms, axis=1)   # [B,L,Hk,dh],[B,L]
-        vm, _ = segment_means_masked(vs, L, ms, axis=1)
+        km, cnt = kdsp.segment_means_masked(ks, L, ms, axis=1)  # [B,L,Hk,dh]
+        vm, _ = kdsp.segment_means_masked(vs, L, ms, axis=1)
         km_all = jnp.moveaxis(jax.lax.all_gather(km, axis), 0, 1)
         vm_all = jnp.moveaxis(jax.lax.all_gather(vm, axis), 0, 1)
         cnt_all = jnp.moveaxis(jax.lax.all_gather(cnt, axis), 0, 1)  # [B,P,L]
-        return prism_attention(qs, ks, vs, km_all, vm_all, p,
-                               seg_size=ks.shape[1] // L, causal=False,
-                               logit_softcap=logit_softcap, scale=scale,
-                               kv_mask=ms, mean_counts=cnt_all)
+        return kdsp.prism_attention(qs, ks, vs, km_all, vm_all, p,
+                                    seg_size=ks.shape[1] // L, causal=False,
+                                    logit_softcap=logit_softcap, scale=scale,
+                                    kv_mask=ms, mean_counts=cnt_all)
     bax = _manual_batch_axes(q.shape[0], cfg) or None
     manual = {axis} | set(bax or ())
     return compat.shard_map(
@@ -468,8 +475,8 @@ def exchange_attention_mla(
         p = jax.lax.axis_index(axis)
         Bl, Np = cs.shape[0], cs.shape[1]     # local (manual-region) shapes
         seg = Np // L
-        cm = segment_means(cs, L, axis=1)            # [Bl, L, r]
-        pm = segment_means(ps, L, axis=1)            # [Bl, L, dr]
+        cm = kdsp.segment_means(cs, L, axis=1)       # [Bl, L, r]
+        pm = kdsp.segment_means(ps, L, axis=1)       # [Bl, L, dr]
         cm_all = jnp.moveaxis(all_gather_grad_safe(cm, axis), 0, 1)
         pm_all = jnp.moveaxis(all_gather_grad_safe(pm, axis), 0, 1)
         k_loc, v_loc = expand(cs, ps)
@@ -477,8 +484,8 @@ def exchange_attention_mla(
                         pm_all.reshape(Bl, Pn * L, -1))
         km = km.reshape(Bl, Pn, L, H, dq)
         vm = vm.reshape(Bl, Pn, L, H, d_v)
-        return prism_attention(qs, k_loc, v_loc, km, vm, p, seg,
-                               causal=causal, scale=scale)
+        return kdsp.prism_attention(qs, k_loc, v_loc, km, vm, p, seg,
+                                    causal=causal, scale=scale)
     bax = _manual_batch_axes(q.shape[0], cfg) or None
     manual = {axis} | set(bax or ())
     return compat.shard_map(
@@ -579,11 +586,13 @@ def decode_attention_sharded(
     if (cfg.mode in (ExchangeMode.LOCAL, ExchangeMode.PRISM_SIM)
             or cfg.seq_axis is None or cfg.seq_shards == 1):
         # PRISM_SIM never uses real collectives; these paths have no
-        # simulation analogue (unsharded cache / memory), so run exact
-        B, S = k_cache.shape[0], k_cache.shape[1]
-        valid = _valid(jnp.arange(S), cache_len)
-        return reference_attention(q, k_cache, v_cache, kv_mask=valid,
-                                   logit_softcap=logit_softcap, scale=scale)
+        # simulation analogue (unsharded cache / memory), so run exact.
+        # Routed through the kernel-dispatch layer: the flash-decode Pallas
+        # kernel when the backend supports it, masked reference otherwise.
+        return kdsp.decode_attention(q, k_cache, v_cache, cache_len,
+                                     window=window,
+                                     logit_softcap=logit_softcap,
+                                     scale=scale)
 
     axis = cfg.seq_axis
     Pn = cfg.seq_shards

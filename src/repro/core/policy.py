@@ -37,7 +37,7 @@ class AdaptivePolicy:
 
     def decide(self, batch: int, bandwidth_mbps: float,
                objective: Objective = "latency") -> Decision:
-        batch_key = self._nearest_batch(batch)
+        batch_key = self.nearest_batch(batch)
         cands = [(k, e) for k, e in self.pm.candidates(batch_key,
                                                        bandwidth_mbps)
                  if k.mode in self.allow]
@@ -48,9 +48,13 @@ class AdaptivePolicy:
         k, e = min(cands, key=lambda kv: metric(kv[1]))
         return Decision(mode=k.mode, cr=k.cr, expected=e, objective=objective)
 
-    def _nearest_batch(self, batch: int) -> int:
+    def nearest_batch(self, batch: int) -> int:
+        """Snap an arriving batch size to the nearest profiled one (ties
+        toward the smaller batch) — the same snapping ``decide()`` uses."""
         bs = self.pm.batches()
         return min(bs, key=lambda b: (abs(b - batch), b))
+
+    _nearest_batch = nearest_batch          # deprecated pre-PR2 spelling
 
     # --- paper-reported artifacts -----------------------------------------
 

@@ -1,3 +1,7 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas kernels for the paper's compute hot-spots + the dispatch layer
+# that routes the runtime's hot paths onto them (reference jnp fallback;
+# REPRO_KERNEL_BACKEND env / set_backend() override).
+from repro.kernels.dispatch import (backend_info, force_backend,
+                                    resolve_backend, set_backend)
+
+__all__ = ["set_backend", "force_backend", "resolve_backend", "backend_info"]

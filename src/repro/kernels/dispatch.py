@@ -1,0 +1,189 @@
+"""Kernel-dispatch layer: route hot ops to the Pallas kernels or the jnp
+reference, per backend.
+
+The compression and decode hot paths (``repro.core.exchange``,
+``repro.models.layers``) call these wrappers instead of binding either
+implementation directly.  Resolution order, first match wins:
+
+1. ``set_backend("pallas" | "reference" | "auto")`` — process-global
+   override (returns the previous value; also usable as a context manager
+   via ``force_backend``).
+2. ``REPRO_KERNEL_BACKEND`` environment variable (same values).
+3. ``"auto"`` — Pallas on TPU, reference elsewhere.  On CPU the kernels
+   only run under ``interpret=True`` (correct but slow), so auto never
+   selects them there; parity tests opt in explicitly.
+
+Every op degrades gracefully: shapes/arguments the kernel does not support
+(non-token segment axes, masked local keys in PRISM attention) silently use
+the reference path, so callers never need to special-case the backend.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prism_attention as ref_attn
+from repro.core import segment_means as ref_sm
+
+_VALID = ("auto", "pallas", "reference")
+_OVERRIDE: Optional[str] = None
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+
+def set_backend(name: Optional[str]) -> Optional[str]:
+    """Set the process-global backend override; returns the previous one.
+    ``None`` clears the override (environment / auto resolution applies)."""
+    global _OVERRIDE
+    if name is not None and name not in _VALID:
+        raise ValueError(f"unknown kernel backend {name!r}; one of {_VALID}")
+    prev, _OVERRIDE = _OVERRIDE, name
+    return prev
+
+
+@contextlib.contextmanager
+def force_backend(name: str):
+    """Temporarily force a backend (parity tests, benchmarks)."""
+    prev = set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+def resolve_backend() -> str:
+    """The backend that would execute right now: "pallas" or "reference"."""
+    choice = _OVERRIDE or os.environ.get(ENV_VAR, "auto")
+    if choice not in _VALID:
+        raise ValueError(f"{ENV_VAR}={choice!r} invalid; one of {_VALID}")
+    if choice == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "reference"
+    return choice
+
+
+def _use_pallas() -> bool:
+    return resolve_backend() == "pallas"
+
+
+def _interpret() -> bool:
+    """Pallas kernels interpret everywhere but real TPU backends."""
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Segment Means (PRISM Eq. 1) — compression hot path
+# ---------------------------------------------------------------------------
+
+def segment_means(x: jnp.ndarray, L: int, axis: int = -2) -> jnp.ndarray:
+    """Column-wise means of L equal segments along ``axis``.
+
+    Kernel path: token axis 1 of a [B, N, ...feature] tensor (the layout of
+    every exchange call site); anything else falls back to the reference.
+    """
+    axis = axis % x.ndim
+    if (_use_pallas() and axis == 1 and x.ndim >= 3
+            and L > 0 and x.shape[1] % L == 0):
+        from repro.kernels.segment_means.ops import segment_means_op
+        return segment_means_op(x, L, interpret=_interpret())
+    return ref_sm.segment_means(x, L, axis=axis)
+
+
+def segment_means_masked(x: jnp.ndarray, L: int, mask: jnp.ndarray,
+                         axis: int = -2
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mask-aware segment means → (means, counts); see the reference for
+    semantics.  The kernel has no mask input, but masked means factor into
+    an unmasked segment-sum (the kernel) and a cheap [B, N] count
+    reduction:  mean = (seg · kernel_mean(x·mask)) / max(count, 1).
+    """
+    axis = axis % x.ndim
+    if (_use_pallas() and axis == 1 and x.ndim >= 3
+            and L > 0 and x.shape[1] % L == 0 and mask.ndim == 2):
+        from repro.kernels.segment_means.ops import segment_means_op
+        B, N = x.shape[:2]
+        seg = N // L
+        mf = mask.astype(jnp.float32)
+        counts = mf.reshape(B, L, seg).sum(axis=-1)               # [B, L]
+        mx = x.astype(jnp.float32) * mf.reshape(
+            (B, N) + (1,) * (x.ndim - 2))
+        sums = segment_means_op(mx, L, interpret=_interpret()) * float(seg)
+        denom = jnp.maximum(counts, 1.0).reshape(
+            (B, L) + (1,) * (x.ndim - 2))
+        return (sums / denom).astype(x.dtype), counts
+    return ref_sm.segment_means_masked(x, L, mask, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# One-token decode attention — the generation hot path
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jnp.ndarray,        # [B, 1, H, dh]
+                     k_cache: jnp.ndarray,  # [B, S, Hk, dh]
+                     v_cache: jnp.ndarray,
+                     cache_len,             # [B] or scalar — valid prefix
+                     *,
+                     offset: int = 0,
+                     window: Optional[int] = None,
+                     logit_softcap: Optional[float] = None,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-token attention against a (device-local) KV cache, masked to
+    the valid ``cache_len`` prefix (optionally sliding-``window``-limited).
+
+    Pallas path: the flash-decode kernel's (o·l, m, l) partials, normalized
+    locally (the single-shard degenerate of the cross-shard LSE merge).
+    """
+    if _use_pallas():
+        from repro.kernels.flash_decode.ops import flash_decode_op
+        o, m, l = flash_decode_op(q, k_cache, v_cache, cache_len,
+                                  offset=offset, window=window, scale=scale,
+                                  softcap=logit_softcap,
+                                  interpret=_interpret())
+        out = o / jnp.maximum(l, 1e-38)[..., None]                # [B, H, dh]
+        return out[:, None].astype(q.dtype)                       # [B,1,H,dh]
+    from repro.kernels.flash_decode.ops import validity_mask
+    valid = validity_mask(q.shape[0], k_cache.shape[1], cache_len,
+                          offset=offset, window=window)
+    return ref_attn.reference_attention(
+        q, k_cache, v_cache, kv_mask=valid,
+        logit_softcap=logit_softcap, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# PRISM prefill attention (scaling-aware softmax over local ‖ remote means)
+# ---------------------------------------------------------------------------
+
+def prism_attention(q, k_local, v_local, k_means, v_means, part_idx,
+                    seg_size: int, *, causal: bool = False,
+                    logit_softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    kv_mask: Optional[jnp.ndarray] = None,
+                    mean_counts: Optional[jnp.ndarray] = None,
+                    q_offset=0) -> jnp.ndarray:
+    """Scaling-aware softmax attention (see ``repro.core.prism_attention``).
+
+    The kernel supports unpadded local keys and a static q-offset of 0; the
+    padded / chunk-recursed cases use the reference.
+    """
+    if (_use_pallas() and kv_mask is None
+            and isinstance(q_offset, int) and q_offset == 0):
+        from repro.kernels.prism_attention.ops import prism_attention_op
+        return prism_attention_op(
+            q, k_local, v_local, k_means, v_means, part_idx, seg_size,
+            causal=causal, scale=scale, softcap=logit_softcap,
+            mean_counts=mean_counts, interpret=_interpret())
+    return ref_attn.prism_attention(
+        q, k_local, v_local, k_means, v_means, part_idx, seg_size,
+        causal=causal, logit_softcap=logit_softcap, scale=scale,
+        kv_mask=kv_mask, mean_counts=mean_counts, q_offset=q_offset)
+
+
+def backend_info() -> dict:
+    """What would run right now (benchmarks / docs / bug reports)."""
+    return {"resolved": resolve_backend(),
+            "override": _OVERRIDE,
+            "env": os.environ.get(ENV_VAR),
+            "jax_backend": jax.default_backend(),
+            "interpret": _interpret()}

@@ -14,16 +14,25 @@ def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-def validity_bias(B: int, S: int, cache_len, offset=0,
+def validity_mask(B: int, S: int, cache_len, offset=0,
                   window: Optional[int] = None) -> jnp.ndarray:
-    """[B, S] additive bias: 0 where the (global) position is a valid cache
-    slot, -inf where empty / outside the sliding window."""
+    """[B, S] bool: True where the (global) position is a valid cache slot
+    and inside the sliding window.  The ONE definition of cache validity —
+    the kernel bias and the reference fallback both derive from it."""
     gpos = offset + jnp.arange(S)[None, :]
     clen = jnp.broadcast_to(jnp.reshape(jnp.asarray(cache_len), (-1, 1)),
                             (B, 1))
     ok = gpos < clen
     if window is not None:
         ok &= gpos >= clen - window
+    return ok
+
+
+def validity_bias(B: int, S: int, cache_len, offset=0,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """[B, S] additive bias: 0 where valid, -inf where empty / outside the
+    sliding window."""
+    ok = validity_mask(B, S, cache_len, offset=offset, window=window)
     return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
 
 

@@ -267,15 +267,13 @@ def attention_decode(
             cache["v"], v_new.astype(cache["v"].dtype), cache_index, axis=1)
     cache_len = cache_index + 1
     if spec.window is not None:
-        # sliding-window cache: only the last `window` positions are valid.
-        S = k_cache.shape[1]
-        lo = jnp.maximum(cache_len - spec.window, 0)
-        gpos = jnp.arange(S)[None, :]
-        kv_mask = (gpos >= lo) & (gpos < cache_len)
-        from repro.core.prism_attention import reference_attention
-        out = reference_attention(q, k_cache, v_cache, kv_mask=kv_mask,
-                                  logit_softcap=spec.logit_softcap,
-                                  scale=spec.scale)
+        # sliding-window cache: only the last `window` positions are valid
+        # (device-local — no sharded merge); kernel-dispatched.
+        from repro.kernels import dispatch as kdsp
+        out = kdsp.decode_attention(q, k_cache, v_cache, cache_len,
+                                    window=spec.window,
+                                    logit_softcap=spec.logit_softcap,
+                                    scale=spec.scale)
     else:
         out = decode_attention_sharded(
             q, k_cache, v_cache, cache_len, xcfg,
@@ -285,6 +283,25 @@ def attention_decode(
     if quant:
         return y, new_cache
     return y, {"k": k_cache, "v": v_cache}
+
+
+def prefill_kv_cache(cache: Dict[str, jnp.ndarray], k_new: jnp.ndarray,
+                     v_new: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Bulk-write projected prompt K/V [B, T0, Hk, hd] into positions
+    [0, T0) of a decode cache (single-pass prefill).  Quantized caches get
+    the same per-(token, head) int8 quantization the per-step path applies,
+    so prefill-then-decode and decode-only caches are bit-identical."""
+    if "k_scale" in cache:
+        k_q, k_s = _quantize_kv(k_new)
+        v_q, v_s = _quantize_kv(v_new)
+        upd = {"k": k_q, "v": v_q, "k_scale": k_s, "v_scale": v_s}
+        return {name: jax.lax.dynamic_update_slice_in_dim(
+                    cache[name], val, 0, axis=1)
+                for name, val in upd.items()}
+    return {"k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new.astype(cache["k"].dtype), 0, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new.astype(cache["v"].dtype), 0, axis=1)}
 
 
 def init_kv_cache(batch: int, seq: int, n_kv: int, head_dim: int, dtype,

@@ -79,6 +79,30 @@ def mla_block(params: Params, x: jnp.ndarray, n_heads: int, cfg: MLACfg,
     return out.reshape(B, N, n_heads * cfg.v_head_dim) @ params["wo"]
 
 
+def mla_prefill(params: Params, x: jnp.ndarray, n_heads: int, cfg: MLACfg,
+                xcfg: ExchangeConfig, cache: Dict[str, jnp.ndarray],
+                *, positions: Optional[jnp.ndarray] = None,
+                rope_theta: float = 10000.0
+                ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence MLA attention that also bulk-writes the latent cache
+    for positions [0, N) — the single-pass prefill analogue of
+    ``mla_block`` (same math) + ``mla_decode``'s cache updates."""
+    B, N, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(N, dtype=jnp.int32)[None, :]
+    q = _project_q(params, x, n_heads, cfg, positions, rope_theta)
+    c_kv, k_pe = _project_kv_latent(params, x, cfg, positions, rope_theta)
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, axis=1)
+    pe_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), 0, axis=1)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    out = exchange_attention_mla(q, c_kv, k_pe, params["w_uk"], params["w_uv"],
+                                 xcfg, causal=True, scale=scale)
+    y = out.reshape(B, N, n_heads * cfg.v_head_dim) @ params["wo"]
+    return y, {"c_kv": c_cache, "k_pe": pe_cache}
+
+
 def mla_decode(params: Params, x: jnp.ndarray, n_heads: int, cfg: MLACfg,
                xcfg: ExchangeConfig, cache: Dict[str, jnp.ndarray],
                cache_index, *, rope_theta: float = 10000.0

@@ -14,8 +14,9 @@ local/global pairs, VLM 1-in-k cross layers, xLSTM 1-in-k sLSTM) scan over
 
 Entry points:
   init_lm(key, cfg)                     → params pytree
-  forward_lm(params, batch, cfg, xcfg)  → (logits, aux)   train / prefill
+  forward_lm(params, batch, cfg, xcfg)  → (logits, aux)   train / full fwd
   init_decode_cache(cfg, B, S)          → cache pytree
+  prefill(params, batch, cache, cfg, xcfg) → (last logits, primed cache)
   decode_step(params, batch, cache, i, cfg, xcfg) → (logits, cache)
 """
 from __future__ import annotations
@@ -36,7 +37,8 @@ from repro.models import ssm as ssm_mod
 from repro.models.layers import (AttnSpec, apply_mlp, apply_norm,
                                  attention_block, attention_decode, embed,
                                  init_attention, init_embedding, init_kv_cache,
-                                 init_mlp, init_norm, project_qkv, unembed)
+                                 init_mlp, init_norm, prefill_kv_cache,
+                                 project_qkv, unembed)
 
 Params = Dict[str, Any]
 
@@ -106,6 +108,35 @@ def _apply_attn_mlp(p: Params, x, cfg: ModelConfig, xcfg, spec: AttnSpec,
     if cfg.post_norms:
         h2 = apply_norm(cfg.norm_type, p["post_mlp"], h2)
     return x + h2, aux
+
+
+def _apply_attn_mlp_prefill(p: Params, x, cfg: ModelConfig, xcfg,
+                            spec: AttnSpec, positions, cache,
+                            mlp_fn=None):
+    """Full-sequence block that also bulk-writes the prompt K/V into the
+    decode cache — the single-pass prefill analogue of ``_apply_attn_mlp``
+    (same math) + ``_apply_attn_mlp_decode``'s cache updates."""
+    x = pin_activations(x, xcfg)
+    xin = apply_norm(cfg.norm_type, p["ln1"], x)
+    q, k, v = project_qkv(p["attn"], xin, spec, positions)
+    new_cache = prefill_kv_cache(cache, k, v)
+    from repro.core.exchange import exchange_attention
+    attn = exchange_attention(q, k, v, xcfg, causal=spec.causal,
+                              window=spec.window,
+                              logit_softcap=spec.logit_softcap,
+                              scale=spec.scale)
+    B, N = x.shape[:2]
+    h = attn.reshape(B, N, spec.n_heads * spec.head_dim) @ p["attn"]["wo"]
+    if cfg.post_norms:
+        h = apply_norm(cfg.norm_type, p["post_attn"], h)
+    x = x + h
+    hin = apply_norm(cfg.norm_type, p["ln2"], x)
+    h2 = mlp_fn(hin) if mlp_fn else apply_mlp(p["mlp"], hin, cfg.act)
+    if isinstance(h2, tuple):
+        h2 = h2[0]
+    if cfg.post_norms:
+        h2 = apply_norm(cfg.norm_type, p["post_mlp"], h2)
+    return x + h2, new_cache
 
 
 def _apply_attn_mlp_decode(p: Params, x, cfg: ModelConfig, xcfg,
@@ -738,6 +769,154 @@ def decode_step(params: Params, batch: Dict[str, jnp.ndarray], cache: Params,
         raise ValueError(fam)
 
     x = apply_norm(cfg.norm_type, params["final_norm"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(head, x, final_softcap=cfg.final_softcap)
+    return logits, new_cache
+
+
+# single-pass prefill is defined for the attention-cached families; the
+# recurrent families (hybrid mamba conv state, xLSTM) prefill via the
+# compiled teacher-forced scan in repro.api.generation instead.
+PREFILL_FAMILIES = ("dense", "moe", "audio", "vlm")
+
+
+def supports_prefill(cfg: ModelConfig) -> bool:
+    return cfg.family in PREFILL_FAMILIES
+
+
+def prefill(params: Params, batch: Dict[str, jnp.ndarray], cache: Params,
+            cfg: ModelConfig, xcfg: ExchangeConfig
+            ) -> Tuple[jnp.ndarray, Params]:
+    """True single-pass prefill: run the whole prompt [B, T0] through
+    ``exchange_attention`` ONCE and bulk-write the KV cache for positions
+    [0, T0) — replacing T0 sequential one-token decode steps.
+
+    Returns (last-position logits [B, 1, V] f32, primed cache).  For
+    audio/vlm the memory slots must be populated first
+    (``prefill_memory``).  Distributed exchanges apply their *prefill*
+    semantics here: under PRISM the prompt attends through compressed
+    segment means (the paper's scheme), which is intentionally not
+    identical to T0 exact decode steps.
+    """
+    if not supports_prefill(cfg):
+        raise ValueError(f"family {cfg.family!r} has no single-pass "
+                         f"prefill; use the scanned decode fallback "
+                         f"(repro.api.generation.prefill_by_decode)")
+    tokens = batch["tokens"]
+    B, T0 = tokens.shape
+    x = embed(params["embed"], tokens, scale_by_sqrt_d=cfg.embed_scale)
+    x = pin_activations(x, xcfg)
+    positions = jnp.broadcast_to(jnp.arange(T0, dtype=jnp.int32)[None],
+                                 (B, T0))
+    fam = cfg.family
+
+    if fam == "dense":
+        if cfg.local_global:
+            def pair(xc, lps, c):
+                lp_l, lp_g = lps
+                c_l, c_g = c
+                x1, nc_l = _apply_attn_mlp_prefill(
+                    lp_l, xc, cfg, xcfg, _attn_spec(cfg, window=cfg.window),
+                    positions, c_l)
+                x2, nc_g = _apply_attn_mlp_prefill(
+                    lp_g, x1, cfg, xcfg, _attn_spec(cfg), positions, c_g)
+                return x2, (nc_l, nc_g)
+            x, (ncl, ncg) = _scan_decode_layers(
+                pair, x, (params["local_layers"], params["global_layers"]),
+                (cache["local"], cache["global"]))
+            new_cache = {"local": ncl, "global": ncg}
+        else:
+            def body(xc, lp, c):
+                return _apply_attn_mlp_prefill(lp, xc, cfg, xcfg,
+                                               _attn_spec(cfg), positions, c)
+            x, nkv = _scan_decode_layers(body, x, params["layers"],
+                                         cache["kv"])
+            new_cache = {"kv": nkv}
+
+    elif fam == "moe":
+        def make_body(dense_mlp):
+            def body(xc, lp, c):
+                if cfg.mla is not None:
+                    xc = pin_activations(xc, xcfg)
+                    h, nc = mla_mod.mla_prefill(
+                        lp["attn"], apply_norm(cfg.norm_type, lp["ln1"], xc),
+                        cfg.n_heads, cfg.mla, xcfg, c, positions=positions,
+                        rope_theta=cfg.rope_theta)
+                    xc = xc + h
+                    hin = apply_norm(cfg.norm_type, lp["ln2"], xc)
+                    if dense_mlp:
+                        y = apply_mlp(lp["mlp"], hin, cfg.act)
+                    else:
+                        y, _ = moe_mod.apply_moe(lp["moe"], hin, cfg.moe,
+                                                 cfg.act)
+                    return xc + y, nc
+                mlp_fn = ((lambda h: apply_mlp(lp["mlp"], h, cfg.act))
+                          if dense_mlp else
+                          (lambda h: moe_mod.apply_moe(lp["moe"], h, cfg.moe,
+                                                       cfg.act)))
+                return _apply_attn_mlp_prefill(lp, xc, cfg, xcfg,
+                                               _attn_spec(cfg), positions, c,
+                                               mlp_fn=mlp_fn)
+            return body
+        x, nfirst = _scan_decode_layers(make_body(True), x,
+                                        params["first_layers"],
+                                        cache["first"])
+        x, nkv = _scan_decode_layers(make_body(False), x, params["layers"],
+                                     cache["kv"])
+        new_cache = {"first": nfirst, "kv": nkv}
+
+    elif fam == "audio":
+        mem_kv, mem_mask = cache["mem_kv"], cache["mem_mask"]
+
+        def body2(xc, lps, c):
+            lp, mkv = lps
+            xin = apply_norm(cfg.norm_type, lp["ln1"], xc)
+            spec = _attn_spec(cfg)
+            q, k, v = project_qkv(lp["attn"], xin, spec, positions)
+            nc = prefill_kv_cache(c, k, v)
+            from repro.core.exchange import exchange_attention
+            h = exchange_attention(q, k, v, xcfg, causal=spec.causal,
+                                   logit_softcap=spec.logit_softcap,
+                                   scale=spec.scale)
+            h = h.reshape(B, T0, spec.n_heads * spec.head_dim) \
+                @ lp["attn"]["wo"]
+            xc = xc + h
+            xc = _cross_attend({"ln1": lp["ln_x"], "xattn": lp["xattn"]},
+                               xc, mkv, mem_mask, cfg, xcfg)
+            h2 = apply_mlp(lp["mlp"],
+                           apply_norm(cfg.norm_type, lp["ln2"], xc), cfg.act)
+            return xc + h2, nc
+        x, nkv = _scan_decode_layers(body2, x,
+                                     (params["dec_layers"], mem_kv),
+                                     cache["kv"])
+        new_cache = {"kv": nkv, "mem_kv": mem_kv, "mem_mask": mem_mask}
+
+    elif fam == "vlm":
+        mem_kv, mem_mask = cache["mem_kv"], cache["mem_mask"]
+
+        def group(xc, lps, c):
+            selfs, crossp, mkv = lps
+
+            def inner(xi, sp, cc):
+                return _apply_attn_mlp_prefill(sp, xi, cfg, xcfg,
+                                               _attn_spec(cfg), positions,
+                                               cc)
+            xc, ncs = _scan_decode_layers(inner, xc, selfs, c)
+            xc = _cross_attend(crossp, xc, mkv, mem_mask, cfg, xcfg)
+            h2 = apply_mlp(crossp["mlp"],
+                           apply_norm(cfg.norm_type, crossp["ln2"], xc),
+                           cfg.act)
+            return xc + h2, ncs
+        x, nself = _scan_decode_layers(
+            group, x, (params["self_layers"], params["cross_layers"], mem_kv),
+            cache["self"])
+        new_cache = {"self": nself, "mem_kv": mem_kv, "mem_mask": mem_mask}
+
+    else:                                  # pragma: no cover — guarded above
+        raise ValueError(fam)
+
+    x = pin_activations(apply_norm(cfg.norm_type, params["final_norm"],
+                                   x[:, -1:]), xcfg)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     logits = unembed(head, x, final_softcap=cfg.final_softcap)
     return logits, new_cache

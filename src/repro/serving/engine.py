@@ -14,7 +14,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
@@ -45,17 +44,15 @@ def build_decode_step(cfg: ModelConfig, xcfg: ExchangeConfig) -> Callable:
     return serve_step
 
 
-def sample_token(logits: jnp.ndarray, key, temperature: float = 0.0):
-    """[B, 1, V] → [B, 1] token ids (greedy at T=0)."""
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    scaled = logits / temperature
-    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+# canonical home is repro.api.generation; re-exported for legacy imports
+from repro.api.generation import sample_token  # noqa: E402,F401
 
 
 @dataclasses.dataclass
 class ServeEngine:
-    """Minimal batched generation loop over the jitted steps.
+    """Legacy generation surface, now a thin veneer over the compiled
+    fast path (`repro.api.generation`) — the per-token Python loop it used
+    to duplicate is gone.
 
     .. deprecated:: use ``repro.api.InferenceSession.generate`` instead.
     """
@@ -70,36 +67,14 @@ class ServeEngine:
         warnings.warn("ServeEngine is deprecated; use "
                       "repro.api.InferenceSession.generate",
                       DeprecationWarning, stacklevel=2)
-        self._decode = jax.jit(build_decode_step(self.cfg, self.xcfg),
-                               donate_argnums=(2,))
+        self._gen_fns: Dict[Any, Any] = {}
 
     def generate(self, prompt_tokens: jnp.ndarray, n_new: int,
                  batch_extras: Optional[Dict[str, jnp.ndarray]] = None,
                  seed: int = 0):
         """prompt_tokens: [B, T0] → generated [B, n_new] (greedy/T)."""
-        B, T0 = prompt_tokens.shape
-        S = T0 + n_new
-        cache = tfm.init_decode_cache(self.cfg, B, S)
-        if self.cfg.family in ("audio", "vlm"):
-            batch = {"tokens": prompt_tokens, **(batch_extras or {})}
-            cache = tfm.prefill_memory(self.params, batch, self.cfg,
-                                       self.xcfg, cache)
-        key = jax.random.key(seed)
-        # teacher-forced prompt consumption token by token (prefill-by-decode;
-        # the batched prefill path is build_prefill_step)
-        tok = prompt_tokens[:, :1]
-        out = []
-        logits = None
-        for t in range(S - 1):
-            logits, cache = self._decode(self.params, {"tokens": tok}, cache,
-                                         t)
-            if t + 1 < T0:
-                tok = prompt_tokens[:, t + 1:t + 2]
-            else:
-                key, sub = jax.random.split(key)
-                tok = sample_token(logits, sub, self.temperature)[:, 0:1]
-                out.append(tok)
-            if len(out) >= n_new:
-                break
-        return jnp.concatenate(out, axis=1) if out else jnp.zeros((B, 0),
-                                                                  jnp.int32)
+        from repro.api import generation as gen
+        return gen.generate(self.params, prompt_tokens, n_new, self.cfg,
+                            self.xcfg, batch_extras=batch_extras, seed=seed,
+                            temperature=self.temperature,
+                            _cache=self._gen_fns)
