@@ -1,8 +1,13 @@
 """Adaptive-runtime explanation through `repro.api`: one `InferenceSession`
 profiles offline and reports, per operating point, what the policy routes
 and why — including the paper's batch-crossover (B=8 @ 400 Mbps) and
-bandwidth-crossover (≈340 Mbps @ B=8) artifacts."""
-from repro.api import ExecutionPlan, InferenceSession
+bandwidth-crossover (≈340 Mbps @ B=8) artifacts, now derived from the
+compiled `PolicyTable`, plus the new objective classes (weighted
+latency/energy tradeoff and SLO-constrained)."""
+import json
+
+from repro.api import (ExecutionPlan, InferenceSession, SLOObjective,
+                       WeightedObjective)
 
 
 def run():
@@ -10,7 +15,7 @@ def run():
         "vit-base-16",
         plans=[ExecutionPlan.local(),
                ExecutionPlan.prism_sim(L=20, cr=9.9)])
-    session.profile()
+    session.profile(backend="simulated")
     print("# Adaptive routing explained (paper §3.3 / §5.1)")
     out = {"points": {}}
     for batch, bw in ((1, 400.0), (8, 400.0), (32, 400.0), (8, 200.0)):
@@ -28,6 +33,27 @@ def run():
     assert (exp.bandwidth_crossover is not None
             and 200 <= exp.bandwidth_crossover <= 500), \
         "bandwidth crossover outside the simulator's accepted band"
+
+    # objective classes beyond the paper's two strings
+    print("# Objectives beyond latency/energy")
+    out["objectives"] = {}
+    for label, obj in (("latency", "latency"), ("energy", "energy"),
+                       ("weighted(1ms=1J)", WeightedObjective(1.0, 1.0)),
+                       ("slo(<=60ms, min energy)", SLOObjective(60.0))):
+        d = session.decide(8, 400.0, objective=obj)
+        print(f"  {label:<24} → {d.mode}"
+              + (f" CR={d.cr:g}" if d.cr else "")
+              + f"  ({d.expected.per_sample_ms:.1f} ms, "
+              f"{d.expected.per_sample_j:.2f} J per sample)")
+        out["objectives"][label] = {"mode": d.mode, "cr": d.cr}
+
+    # off-grid batches are flagged, not silently snapped
+    exp256 = session.explain(256, 400.0)
+    assert exp256.extrapolated
+    out["extrapolated_B256"] = exp256.decision.mode
+
+    with open("BENCH_explain_adaptive.json", "w") as f:
+        json.dump(out, f, indent=1)
     return out
 
 

@@ -1,23 +1,45 @@
-"""Paper §3.3 / §5.5: the one-time profiling sweep cost and the resulting
-performance map + derived crossovers."""
-from repro.api import AdaptivePolicy, SweepSpec, profile_simulated, sweep_cost
+"""Paper §3.3 / §5.5: the one-time profiling sweep cost, the resulting
+performance map + derived crossovers, and the compiled policy-table decide
+latency (must be O(1) — independent of the map size)."""
+import json
+import time
+
+from repro.api import AdaptivePolicy, SweepSpec, sweep_cost
+from repro.profiling import ProfileContext, get_backend
 
 
 def run():
     spec = SweepSpec()
-    pm = profile_simulated(spec=spec)
+    pm = get_backend("simulated").profile(ProfileContext(), spec)
     pol = AdaptivePolicy(pm)
     print("# Profiling sweep (paper §3.3)")
     print(f"grid: |B|={len(spec.batches)} × |CR|={len(spec.crs)} × "
           f"|BW|={len(spec.bandwidths_mbps)} × T={spec.warmup_runs} "
           f"= {sweep_cost(spec)} passes")
-    print(f"performance-map entries: {len(pm)}")
+    print(f"performance-map entries: {len(pm)} "
+          f"(profiled on {pm.hardware.name} / {pm.link.name})")
     bc = pol.batch_crossover(400.0)
     bwc = pol.bandwidth_crossover(8)
     print(f"batch crossover @400 Mbps: {bc} (paper: 8)")
     print(f"bandwidth crossover @B=8: {bwc} Mbps (paper: ≈340)")
-    return {"sweep_passes": sweep_cost(spec), "entries": len(pm),
-            "batch_crossover": bc, "bandwidth_crossover_mbps": bwc}
+
+    # decide() through the compiled table: time grid hits + interpolated
+    # bandwidths; the table is compiled once, so this is pure lookup cost
+    pol.table()                                    # compile outside the loop
+    n = 20000
+    t0 = time.perf_counter()
+    for i in range(n):
+        pol.decide(8, 200.0 + (i % 700))
+    decide_us = (time.perf_counter() - t0) / n * 1e6
+    print(f"decide() via PolicyTable: {decide_us:.1f} µs/call "
+          f"({n} calls, interpolated bandwidths)")
+
+    out = {"sweep_passes": sweep_cost(spec), "entries": len(pm),
+           "batch_crossover": bc, "bandwidth_crossover_mbps": bwc,
+           "decide_us": decide_us, "hardware": pm.hardware.name}
+    with open("BENCH_profiling_cost.json", "w") as f:
+        json.dump(out, f, indent=1)
+    return out
 
 
 if __name__ == "__main__":

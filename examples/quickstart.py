@@ -28,9 +28,12 @@ def main():
                ExecutionPlan.prism_sim(L=20, cr=4.95)])
 
     # --- 1. offline profiling (paper §3.3) -------------------------------
+    # backend="simulated" is the cost-model sweep; "measured" would time
+    # this session's own executables, "trace" replays a saved map
     path = "/tmp/prism_perfmap.json"
-    pm = session.profile(save_path=path)
-    print(f"[1] profiled {len(pm)} configurations → {path}")
+    pm = session.profile(backend="simulated", save_path=path)
+    print(f"[1] profiled {len(pm)} configurations on {pm.hardware.name} "
+          f"→ {path}")
 
     # --- 2. runtime adaptive policy --------------------------------------
     for batch, bw in ((1, 400), (8, 400), (32, 400), (8, 200), (8, 900)):

@@ -8,30 +8,48 @@ One import for the paper's whole runtime loop:
 * :class:`ExchangeStrategy` / :func:`register_strategy` — pluggable exchange
   registry (local / voltage / prism / prism_sim; open to new strategies).
 * :class:`InferenceSession` — owns params, per-plan executables, bandwidth
-  observation, profiling, policy, dispatch, and generation
-  (``profile() / dispatch() / generate() / explain()``).
+  observation, profiling, policy, dispatch, generation, and closed-loop
+  recalibration (``profile() / dispatch() / generate() / explain() /
+  calibrate()``).
 
-The profiling/policy primitives (``PerfMap``, ``AdaptivePolicy``, sweep
-helpers) are re-exported so downstream code needs only ``repro.api``.
+The profiling subsystem (``repro.profiling``: backend registry, hardware
+profiles, objective classes, the compiled ``PolicyTable``) and the policy
+primitives are re-exported so downstream code needs only ``repro.api``.
 """
 from repro.api.plan import ExecutionPlan
-from repro.api.session import (DispatchRecord, Explanation, InferenceSession)
+from repro.api.session import (CalibrationReport, DispatchRecord,
+                               Explanation, InferenceSession)
 from repro.api.strategies import (ExchangeStrategy, get_strategy,
                                   list_strategies, register_strategy)
 from repro.core.exchange import ExchangeConfig, ExchangeMode
 from repro.core.perfmap import PerfEntry, PerfKey, PerfMap
-from repro.core.policy import AdaptivePolicy, Decision, Objective
+from repro.core.policy import (AdaptivePolicy, Decision, EnergyObjective,
+                               LatencyObjective, Objective, ObjectiveLike,
+                               PolicyTable, SLOObjective, WeightedObjective,
+                               resolve_objective)
 from repro.core.profiler import (PAPER_BATCHES, PAPER_BWS, PAPER_CRS,
                                  SweepSpec, profile_measured,
                                  profile_simulated, sweep_cost)
+from repro.profiling import (JETSON_ORIN_NANO, TPU_ICI, TPU_V5E, WIFI_GLOO,
+                             HardwareProfile, LinkProfile, ProfileBackend,
+                             ProfileContext, get_backend, list_backends,
+                             register_backend, workload_from_config)
 
 __all__ = [
     "ExecutionPlan", "InferenceSession", "DispatchRecord", "Explanation",
+    "CalibrationReport",
     "ExchangeStrategy", "register_strategy", "get_strategy",
     "list_strategies",
     "ExchangeConfig", "ExchangeMode",
     "PerfKey", "PerfEntry", "PerfMap",
-    "AdaptivePolicy", "Decision", "Objective",
+    "AdaptivePolicy", "Decision", "PolicyTable",
+    "Objective", "ObjectiveLike", "LatencyObjective", "EnergyObjective",
+    "WeightedObjective", "SLOObjective", "resolve_objective",
+    "ProfileBackend", "ProfileContext", "register_backend", "get_backend",
+    "list_backends",
+    "HardwareProfile", "LinkProfile",
+    "JETSON_ORIN_NANO", "WIFI_GLOO", "TPU_V5E", "TPU_ICI",
+    "workload_from_config",
     "profile_simulated", "profile_measured", "SweepSpec", "sweep_cost",
     "PAPER_BATCHES", "PAPER_CRS", "PAPER_BWS",
 ]

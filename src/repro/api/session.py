@@ -8,10 +8,18 @@ adaptive policy — the paper's whole Fig. 1 loop behind a single object::
         "vit-base-16",
         plans=[ExecutionPlan.local(),
                ExecutionPlan.prism_sim(L=20, cr=4.95)])
-    session.profile()                      # offline sweep → perf map
+    session.profile(backend="simulated")       # offline sweep → perf map
     session.observe_bandwidth(400.0)
     out = session.dispatch({"images": imgs})   # policy-routed execution
     print(session.explain(batch=8, bandwidth_mbps=400.0).summary())
+    session.calibrate()                        # fold observed walls back in
+
+Profiling goes through the pluggable backend registry
+(``repro.profiling``): ``backend="simulated"`` (cost model),
+``"measured"`` (times this session's own registered plan executables),
+``"trace"`` (replay a saved map).  Objectives accept the legacy
+``"latency"``/``"energy"`` strings or any
+:class:`~repro.profiling.objectives.Objective` instance.
 
 Subsumes the legacy ``AdaptiveDispatcher`` + ``ServeEngine`` pair (both kept
 as deprecation shims in ``repro.serving``).
@@ -20,11 +28,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.api.plan import ExecutionPlan
 from repro.core.perfmap import PerfEntry, PerfKey, PerfMap
-from repro.core.policy import AdaptivePolicy, Decision, Objective
+from repro.core.policy import (AdaptivePolicy, Decision, Objective,
+                               ObjectiveLike, resolve_objective)
 
 
 @dataclasses.dataclass
@@ -36,6 +46,20 @@ class DispatchRecord:
     wall_ms: float
     exec_key: str = ""          # executable that actually ran
     substituted: bool = False   # True when the decided key had no executable
+    extrapolated: bool = False  # batch was outside the profiled grid
+
+
+@dataclasses.dataclass
+class CalibrationReport:
+    """What one ``session.calibrate()`` pass did to the performance map."""
+    updated: int = 0                 # entries EWMA-folded
+    skipped_extrapolated: int = 0    # out-of-grid batches (never folded)
+    skipped_offgrid: int = 0         # in-range batches between grid points
+    skipped_unprofiled: int = 0      # ran an executable with no map entry
+    records: int = 0                 # dispatch records consumed
+
+    def __bool__(self) -> bool:
+        return self.updated > 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,13 +73,16 @@ class Explanation:
     candidates: Tuple[Tuple[PerfKey, PerfEntry], ...]
     batch_crossover: Optional[int]                  # paper: 8 @ 400 Mbps
     bandwidth_crossover: Optional[float]            # paper: ≈340 Mbps @ B=8
+    extrapolated: bool = False                      # batch off the grid
 
     def summary(self) -> str:
         lines = [f"B={self.batch} BW={self.bandwidth_mbps:g} Mbps → "
                  f"{self.decision.mode}"
                  + (f" CR={self.decision.cr:g}" if self.decision.cr else "")
                  + f"  ({self.decision.expected.per_sample_ms:.1f} ms/sample"
-                 f" expected, plan {self.plan_key!r})"]
+                 f" expected, plan {self.plan_key!r})"
+                 + (" [EXTRAPOLATED: batch outside the profiled grid]"
+                    if self.extrapolated else "")]
         for k, e in sorted(self.candidates,
                            key=lambda kv: kv[1].per_sample_ms):
             mark = "→" if (k.mode, k.cr) == (self.decision.mode,
@@ -75,7 +102,7 @@ class InferenceSession:
 
     def __init__(self, cfg, params, plans: Sequence[ExecutionPlan] = (),
                  perfmap: Optional[PerfMap] = None,
-                 objective: Objective = "latency",
+                 objective: ObjectiveLike = "latency",
                  allow_modes: Optional[Tuple[str, ...]] = None,
                  bandwidth_alpha: float = 0.3,
                  initial_bandwidth_mbps: float = 400.0,
@@ -86,13 +113,14 @@ class InferenceSession:
         self._execs: Dict[str, Any] = {}
         # plan → {(B, T0, n_new, T, prefill_mode): compiled generate fn}
         self._decode_execs: Dict[Any, Dict] = {}
-        self.objective: Objective = objective
+        self.objective: Objective = resolve_objective(objective)
         self.temperature = temperature
         self._allow = allow_modes
         self._policy: Optional[AdaptivePolicy] = None
         self._bw = initial_bandwidth_mbps
         self._alpha = bandwidth_alpha
         self.history: List[DispatchRecord] = []
+        self._calibrated_upto = 0
         self.perfmap = perfmap
         for p in (plans or [ExecutionPlan.local()]):
             self.add_plan(p)
@@ -147,15 +175,48 @@ class InferenceSession:
 
     # -- profiling -----------------------------------------------------------
 
-    def profile(self, spec=None, *, measured: bool = False,
-                model=None, save_path: Optional[str] = None) -> PerfMap:
-        """Offline sweep (paper §3.3) → performance map, installed on the
-        session (and optionally saved as the on-device JSON artifact)."""
-        from repro.core.profiler import (SweepSpec, profile_measured,
-                                         profile_simulated)
-        spec = spec or SweepSpec()
-        pm = (profile_measured(spec=spec) if measured
-              else profile_simulated(model=model, spec=spec))
+    def profile_context(self, *, hardware=None, link=None, workload=None,
+                        cost_model=None, seq_len: int = 0):
+        """This session's view for a profiling backend: config, params, and
+        the registered plan executables (what ``measured`` actually times)."""
+        from repro.profiling.backends import ProfileContext
+        ctx = ProfileContext(cfg=self.cfg, params=self.params,
+                             plans=dict(self.plans),
+                             execs=dict(self._execs),
+                             workload=workload, cost_model=cost_model,
+                             seq_len=seq_len)
+        if hardware is not None:
+            ctx.hardware = hardware
+        if link is not None:
+            ctx.link = link
+        return ctx
+
+    def profile(self, spec=None, *, backend: Optional[str] = None,
+                hardware=None, link=None, workload=None, seq_len: int = 0,
+                measured: bool = False, model=None,
+                save_path: Optional[str] = None, **backend_opts) -> PerfMap:
+        """Offline sweep (paper §3.3) through a registered profiling backend
+        → performance map, installed on the session (and optionally saved as
+        the on-device JSON artifact).
+
+        ``backend`` names a ``repro.profiling`` backend (default
+        ``"simulated"``); extra keyword arguments are forwarded to it (e.g.
+        ``path=`` for ``"trace"``, ``iters=`` for ``"measured"``).
+        ``hardware``/``link`` select the profiled hardware description
+        (embedded in the map, schema v2).
+        """
+        from repro.profiling import SweepSpec, get_backend
+        if measured:
+            warnings.warn("profile(measured=True) is deprecated; use "
+                          "profile(backend='measured')", DeprecationWarning,
+                          stacklevel=2)
+            backend = backend or "measured"
+        if model is not None and backend in (None, "simulated"):
+            backend_opts.setdefault("model", model)
+        ctx = self.profile_context(hardware=hardware, link=link,
+                                   workload=workload, seq_len=seq_len)
+        pm = get_backend(backend or "simulated").profile(
+            ctx, spec or SweepSpec(), **backend_opts)
         self.set_perfmap(pm)
         if save_path:
             pm.save(save_path)
@@ -188,7 +249,7 @@ class InferenceSession:
     # -- adaptive dispatch ---------------------------------------------------
 
     def decide(self, batch: int, bandwidth_mbps: Optional[float] = None,
-               objective: Optional[Objective] = None) -> Decision:
+               objective: Optional[ObjectiveLike] = None) -> Decision:
         return self.policy.decide(batch,
                                   self._bw if bandwidth_mbps is None
                                   else bandwidth_mbps,
@@ -228,8 +289,74 @@ class InferenceSession:
         wall = (time.perf_counter() - t0) * 1e3
         self.history.append(DispatchRecord(batch_size, self._bw, d, wall,
                                            exec_key=key,
-                                           substituted=substituted))
+                                           substituted=substituted,
+                                           extrapolated=d.extrapolated))
         return out
+
+    # -- closed-loop recalibration -------------------------------------------
+
+    def calibrate(self, alpha: float = 0.3) -> CalibrationReport:
+        """Fold observed dispatch wall times back into the performance map
+        (EWMA per profiled entry) so the profile tracks runtime drift.
+
+        Each uncalibrated :class:`DispatchRecord` whose batch size sits
+        **exactly on the profiled grid** updates the entry of the executable
+        that **actually ran** (``exec_key``, so substituted dispatches
+        inform the right plan) at the nearest profiled bandwidth:
+        ``total_ms ← (1-α)·total_ms + α·wall_ms``, with the latency
+        decomposition and energy rescaled proportionally (the map receives a
+        fresh entry — past ``Decision.expected`` references keep the values
+        the policy actually predicted).  Off-grid batches — extrapolated or
+        between grid points — are skipped: a B=24 wall must not corrupt the
+        B=32 cell it would snap to.  Compiled policy tables are invalidated
+        when anything changed.  Callers should warm executables up first
+        (the first dispatch per shape pays jit compilation).
+        """
+        if self.perfmap is None:
+            raise RuntimeError("no performance map to calibrate: call "
+                               "session.profile() first")
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        rep = CalibrationReport()
+        table = self.policy.table(self.objective)
+        for rec in self.history[self._calibrated_upto:]:
+            rep.records += 1
+            if rec.extrapolated:
+                rep.skipped_extrapolated += 1
+                continue
+            if table.nearest_batch(rec.batch) != rec.batch:
+                rep.skipped_offgrid += 1
+                continue
+            mode, _, cr_s = rec.exec_key.partition("@")
+            cr = float(cr_s) if cr_s else 0.0
+            if mode == "local":
+                key = PerfKey("local", rec.batch, 0.0, 0.0)
+            else:
+                bw = table.nearest_bandwidth(rec.bandwidth_mbps)
+                if bw is None:
+                    rep.skipped_unprofiled += 1
+                    continue
+                key = PerfKey(mode, rec.batch, cr, bw)
+            entry = self.perfmap.get(key)
+            if entry is None or entry.total_ms <= 0:
+                rep.skipped_unprofiled += 1
+                continue
+            new_total = (1 - alpha) * entry.total_ms + alpha * rec.wall_ms
+            f = new_total / entry.total_ms
+            self.perfmap.put(key, dataclasses.replace(
+                entry, total_ms=new_total,
+                per_sample_ms=new_total / rec.batch,
+                compute_ms=entry.compute_ms * f,
+                staging_ms=entry.staging_ms * f,
+                comm_ms=entry.comm_ms * f,
+                per_sample_j=entry.per_sample_j * f,
+                meta=dict(entry.meta,
+                          calibrations=entry.meta.get("calibrations", 0) + 1)))
+            rep.updated += 1
+        self._calibrated_upto = len(self.history)
+        if rep.updated:
+            self._policy = None        # recompile tables against new costs
+        return rep
 
     # -- generation (subsumes ServeEngine) -----------------------------------
 
@@ -262,18 +389,25 @@ class InferenceSession:
     # -- explanation (the paper's reported artifacts) ------------------------
 
     def explain(self, batch: int, bandwidth_mbps: Optional[float] = None,
-                objective: Optional[Objective] = None) -> Explanation:
+                objective: Optional[ObjectiveLike] = None) -> Explanation:
         """Decision + candidate table + both crossover artifacts for one
         (batch, bandwidth) operating point."""
+        from repro.core.policy import PolicyTable
         bw = self._bw if bandwidth_mbps is None else bandwidth_mbps
         obj = objective or self.objective
         pol = self.policy
         d = pol.decide(batch, bw, obj)
         key, _ = self._exec_key_for(d)
-        batch_key = pol.nearest_batch(batch)    # same snapping as decide()
-        cands = tuple(self.perfmap.candidates(batch_key, bw))
+        # candidate rows over ALL profiled modes (voltage included for the
+        # paper's "full exchange loses everywhere" artifact), interpolated
+        # at the queried bandwidth exactly like decide() — never a snapped
+        # column the decision did not actually compare
+        modes = tuple(sorted({k.mode for k, _ in self.perfmap.entries()}))
+        cands = tuple(PolicyTable.compile(self.perfmap, modes, obj)
+                      .candidates(batch, bw))
         return Explanation(
             batch=batch, bandwidth_mbps=bw, decision=d, plan_key=key,
             candidates=cands,
             batch_crossover=pol.batch_crossover(bw, obj),
-            bandwidth_crossover=pol.bandwidth_crossover(batch, obj))
+            bandwidth_crossover=pol.bandwidth_crossover(batch, obj),
+            extrapolated=d.extrapolated)

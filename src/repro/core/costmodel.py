@@ -179,6 +179,11 @@ class EdgeCostModel:
 
     # -- packing -------------------------------------------------------------
 
+    def pack(self, batch, compute_ms, staging_ms, wire_ms, boards):
+        """Compose a latency decomposition + energy into one result row —
+        public so profiling backends can mix measured and modeled terms."""
+        return self._pack(batch, compute_ms, staging_ms, wire_ms, boards)
+
     def _pack(self, batch, compute_ms, staging_ms, wire_ms, boards):
         total = compute_ms + staging_ms + wire_ms
         energy_j = boards * (self.c.power_active_w * compute_ms

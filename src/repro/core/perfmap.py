@@ -3,7 +3,13 @@
 A lightweight JSON store keyed by (mode, batch, CR, bandwidth) holding the
 profiled totals and the three-way latency decomposition (computation,
 communication, CPU–GPU staging — on TPU: compute / wire / staging-or-DCN).
-The runtime policy queries it with nearest-neighbour bandwidth matching.
+Decoded ``PerfKey`` objects are cached alongside the string store, so
+iterating ``entries()``/``candidates()`` never re-parses key strings.
+
+Schema v2 embeds the hardware the map was profiled on (a
+``HardwareProfile``/``LinkProfile`` block, see ``repro.profiling.hardware``)
+so a map is self-describing; v1 and the pre-versioning flat format still
+load (with ``hardware``/``link`` left ``None``).
 """
 from __future__ import annotations
 
@@ -13,7 +19,8 @@ import os
 from typing import Dict, Iterable, List, Optional, Tuple
 
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+_READABLE_VERSIONS = (1, SCHEMA_VERSION)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,16 +74,24 @@ class PerfMap:
 
     def __init__(self):
         self._d: Dict[str, PerfEntry] = {}
+        self._keys: Dict[str, PerfKey] = {}    # decoded-key cache
+        self.hardware = None   # Optional[repro.profiling.HardwareProfile]
+        self.link = None       # Optional[repro.profiling.LinkProfile]
 
     def put(self, key: PerfKey, entry: PerfEntry) -> None:
-        self._d[key.encode()] = entry
+        enc = key.encode()
+        self._d[enc] = entry
+        self._keys[enc] = key
 
     def get(self, key: PerfKey) -> Optional[PerfEntry]:
         return self._d.get(key.encode())
 
     def entries(self) -> Iterable[Tuple[PerfKey, PerfEntry]]:
         for k, v in self._d.items():
-            yield PerfKey.decode(k), v
+            pk = self._keys.get(k)
+            if pk is None:                     # key written via raw access
+                pk = self._keys[k] = PerfKey.decode(k)
+            yield pk, v
 
     # --- runtime queries -----------------------------------------------
 
@@ -99,12 +114,18 @@ class PerfMap:
 
     def save(self, path: str) -> None:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        doc = {"schema_version": SCHEMA_VERSION,
+               "entries": {k: e.to_dict() for k, e in self._d.items()}}
+        hw = {}
+        if self.hardware is not None:
+            hw["device"] = self.hardware.to_dict()
+        if self.link is not None:
+            hw["link"] = self.link.to_dict()
+        if hw:
+            doc["hardware"] = hw
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"schema_version": SCHEMA_VERSION,
-                       "entries": {k: e.to_dict()
-                                   for k, e in self._d.items()}}, f,
-                      indent=1)
+            json.dump(doc, f, indent=1)
         os.replace(tmp, path)      # atomic
 
     @staticmethod
@@ -114,18 +135,37 @@ class PerfMap:
             data = json.load(f)
         if "schema_version" in data:
             ver = data["schema_version"]
-            if ver != SCHEMA_VERSION:
+            if ver not in _READABLE_VERSIONS:
                 raise ValueError(
                     f"{path}: performance-map schema version {ver!r} is not "
-                    f"supported (this build reads version {SCHEMA_VERSION}); "
-                    "re-run the profiling sweep to regenerate it")
+                    f"supported (this build reads versions "
+                    f"{list(_READABLE_VERSIONS)}); re-run the profiling "
+                    "sweep to regenerate it")
             entries = data["entries"]
+            if data.get("hardware") is not None:
+                pm._load_hardware(data["hardware"], path)
         else:                      # pre-versioning flat map (v0 seed format)
             entries = data
         for k, d in entries.items():
-            PerfKey.decode(k)      # validate key shape before accepting
+            key = PerfKey.decode(k)    # validate + cache in one pass
             pm._d[k] = PerfEntry.from_dict(d)
+            pm._keys[k] = key
         return pm
+
+    def _load_hardware(self, block, path: str) -> None:
+        from repro.profiling.hardware import HardwareProfile, LinkProfile
+        try:
+            if not isinstance(block, dict):
+                raise ValueError(f"expected a JSON object, got "
+                                 f"{type(block).__name__}")
+            if "device" in block:
+                self.hardware = HardwareProfile.from_dict(block["device"])
+            if "link" in block:
+                self.link = LinkProfile.from_dict(block["link"])
+        except (TypeError, ValueError) as e:
+            raise ValueError(
+                f"{path}: corrupt hardware block in performance map: {e}"
+            ) from e
 
     def __len__(self) -> int:
         return len(self._d)

@@ -1,30 +1,32 @@
 """Runtime adaptive execution policy (paper §3.3).
 
-Given an arriving batch size and the observed bandwidth, query the perf map
-and pick the execution mode — ``local`` or ``distributed(best CR)`` —
-minimizing per-sample latency or energy. Includes the derived artifacts the
-paper reports: the batch crossover point and the bandwidth crossover.
+Given an arriving batch size and the observed bandwidth, pick the execution
+mode — ``local`` or ``distributed(best CR)`` — minimizing the configured
+:class:`~repro.profiling.objectives.Objective` (latency, energy, weighted
+tradeoff, or SLO-constrained; the legacy ``"latency"``/``"energy"`` strings
+still work).
+
+``AdaptivePolicy`` compiles the performance map into a dense
+:class:`~repro.profiling.table.PolicyTable` per objective (one map walk,
+then O(1) ``decide()`` with bandwidth interpolation between profiled grid
+points) and exposes the paper-reported crossover artifacts derived from it.
+Out-of-grid batches snap to the nearest profiled batch and the decision is
+flagged ``extrapolated``.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Literal, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
-from repro.core.perfmap import PerfEntry, PerfKey, PerfMap
+from repro.core.perfmap import PerfMap
+from repro.profiling.objectives import (EnergyObjective, LatencyObjective,
+                                        Objective, ObjectiveLike,
+                                        SLOObjective, WeightedObjective,
+                                        resolve_objective)
+from repro.profiling.table import Decision, PolicyTable
 
-Objective = Literal["latency", "energy"]
-
-
-@dataclasses.dataclass(frozen=True)
-class Decision:
-    mode: str                  # "local" | "prism" | "voltage"
-    cr: float                  # 0.0 unless prism
-    expected: PerfEntry
-    objective: Objective
-
-    @property
-    def distributed(self) -> bool:
-        return self.mode != "local"
+__all__ = ["AdaptivePolicy", "Decision", "Objective", "ObjectiveLike",
+           "LatencyObjective", "EnergyObjective", "WeightedObjective",
+           "SLOObjective", "resolve_objective", "PolicyTable"]
 
 
 class AdaptivePolicy:
@@ -34,46 +36,45 @@ class AdaptivePolicy:
         profiled for reporting but never selected — it loses everywhere)."""
         self.pm = perfmap
         self.allow = allow_modes
+        self._tables: Dict[Tuple, PolicyTable] = {}
+
+    def table(self, objective: ObjectiveLike = "latency") -> PolicyTable:
+        """The compiled decision table for one objective (cached)."""
+        obj = resolve_objective(objective)
+        key = obj.cache_key()
+        t = self._tables.get(key)
+        if t is None:
+            t = self._tables[key] = PolicyTable.compile(self.pm, self.allow,
+                                                        obj)
+        return t
+
+    def invalidate(self) -> None:
+        """Drop compiled tables (call after mutating the perf map, e.g. a
+        calibration pass)."""
+        self._tables.clear()
 
     def decide(self, batch: int, bandwidth_mbps: float,
-               objective: Objective = "latency") -> Decision:
-        batch_key = self.nearest_batch(batch)
-        cands = [(k, e) for k, e in self.pm.candidates(batch_key,
-                                                       bandwidth_mbps)
-                 if k.mode in self.allow]
-        if not cands:
-            raise LookupError("empty performance map")
-        metric = (lambda e: e.per_sample_ms) if objective == "latency" else \
-                 (lambda e: e.per_sample_j)
-        k, e = min(cands, key=lambda kv: metric(kv[1]))
-        return Decision(mode=k.mode, cr=k.cr, expected=e, objective=objective)
+               objective: ObjectiveLike = "latency") -> Decision:
+        return self.table(objective).decide(batch, bandwidth_mbps)
 
     def nearest_batch(self, batch: int) -> int:
         """Snap an arriving batch size to the nearest profiled one (ties
         toward the smaller batch) — the same snapping ``decide()`` uses."""
-        bs = self.pm.batches()
-        return min(bs, key=lambda b: (abs(b - batch), b))
+        return self.table().nearest_batch(batch)
 
     _nearest_batch = nearest_batch          # deprecated pre-PR2 spelling
 
-    # --- paper-reported artifacts -----------------------------------------
+    # --- paper-reported artifacts (table-derived) --------------------------
 
     def batch_crossover(self, bandwidth_mbps: float,
-                        objective: Objective = "latency") -> Optional[int]:
+                        objective: ObjectiveLike = "latency"
+                        ) -> Optional[int]:
         """Smallest profiled batch at which distributed wins (paper: 8)."""
-        for b in self.pm.batches():
-            if self.decide(b, bandwidth_mbps, objective).distributed:
-                return b
-        return None
+        return self.table(objective).batch_crossover(bandwidth_mbps)
 
     def bandwidth_crossover(self, batch: int,
-                            objective: Objective = "latency"
+                            objective: ObjectiveLike = "latency"
                             ) -> Optional[float]:
         """Smallest profiled bandwidth at which distributed wins at
         ``batch`` (paper: ≈340 Mbps at B=8)."""
-        bws = sorted({k.bandwidth_mbps for k, _ in self.pm.entries()
-                      if k.mode != "local"})
-        for bw in bws:
-            if self.decide(batch, bw, objective).distributed:
-                return bw
-        return None
+        return self.table(objective).bandwidth_crossover(batch)

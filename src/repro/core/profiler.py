@@ -1,108 +1,62 @@
-"""Offline profiling sweep (paper §3.3, Fig. 2).
+"""Offline profiling sweep (paper §3.3, Fig. 2) — back-compat surface.
 
-Sweeps batch size × compression rate × bandwidth and fills the performance
-map. Two backends:
+The canonical implementation now lives in :mod:`repro.profiling` (pluggable
+``ProfileBackend`` registry: ``simulated`` / ``measured`` / ``trace``); this
+module re-exports the sweep grids and keeps the two historic free functions:
 
-* ``profile_simulated`` — the edge cost model (Jetson/GLOO/WiFi constants);
-  reproduces the paper's sweep (~200 inference passes equivalent) instantly.
-* ``profile_measured`` — actually runs the JAX ViT partition forward on this
-  host (batch-swept wall clock via ``timeit_jax``) for the compute term and
-  composes it with the modeled staging/wire terms; this is what a real
-  deployment would run once per fleet.
+* :func:`profile_simulated` — supported thin wrapper over the ``simulated``
+  backend (the paper's instant cost-model sweep).
+* :func:`profile_measured` — **deprecated** shim forwarding to the
+  ``measured`` backend.  It used to hard-code the ``vit-base-16`` forward;
+  profile through ``InferenceSession.profile(backend="measured")`` to
+  measure the session's own config and registered plan executables.  The
+  dead ``n_layers`` parameter (accepted, never used) is gone.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Iterable, Optional, Sequence
+import warnings
+from typing import Optional
 
-from repro.core.costmodel import EdgeCostModel, EdgeWorkload
-from repro.core.perfmap import PerfEntry, PerfKey, PerfMap
-from repro.core.segment_means import cr_to_L
+from repro.core.costmodel import EdgeCostModel
+from repro.core.perfmap import PerfMap
+from repro.profiling.sweep import (PAPER_BATCHES, PAPER_BWS, PAPER_CRS,
+                                   SweepSpec, sweep_cost)
 
-PAPER_BATCHES = (1, 2, 4, 8, 16, 32)
-PAPER_CRS = (3.3, 4.95, 9.9)
-PAPER_BWS = (200, 300, 400, 500, 600, 700, 800, 900)
-
-
-@dataclasses.dataclass(frozen=True)
-class SweepSpec:
-    batches: Sequence[int] = PAPER_BATCHES
-    crs: Sequence[float] = PAPER_CRS
-    bandwidths_mbps: Sequence[float] = PAPER_BWS
-    P: int = 2
-    warmup_runs: int = 20          # T in the paper's cost estimate
-
-
-def sweep_cost(spec: SweepSpec) -> int:
-    """|B|·|CR|·|BW|·T inference passes (paper's one-time profiling cost)."""
-    return (len(spec.batches) * len(spec.crs) * len(spec.bandwidths_mbps)
-            * spec.warmup_runs)
+__all__ = ["PAPER_BATCHES", "PAPER_CRS", "PAPER_BWS", "SweepSpec",
+           "sweep_cost", "profile_simulated", "profile_measured"]
 
 
 def profile_simulated(model: Optional[EdgeCostModel] = None,
                       spec: SweepSpec = SweepSpec()) -> PerfMap:
-    model = model or EdgeCostModel()
-    pm = PerfMap()
-    N = model.w.n_tokens
-    for B in spec.batches:
-        r = model.local(B)
-        pm.put(PerfKey("local", B, 0.0, 0.0), _entry(r))
-        for bw in spec.bandwidths_mbps:
-            rv = model.distributed(B, bw, spec.P, L=None)
-            pm.put(PerfKey("voltage", B, 0.0, bw), _entry(rv))
-            for cr in spec.crs:
-                L = cr_to_L(N, spec.P, cr)
-                rp = model.distributed(B, bw, spec.P, L=L)
-                pm.put(PerfKey("prism", B, cr, bw), _entry(rp, {"L": L}))
-    return pm
+    from repro.profiling.backends import ProfileContext, get_backend
+    return get_backend("simulated").profile(ProfileContext(), spec,
+                                            model=model)
 
 
-def profile_measured(spec: SweepSpec = SweepSpec(),
-                     n_layers: int = 12, iters: int = 3) -> PerfMap:
-    """Measure the compute term by running the real JAX ViT partition forward
-    on this host, scaled to Jetson via the spec ratio; staging/wire modeled."""
-    import jax
-    import jax.numpy as jnp
-    from repro.utils.timing import timeit_jax
-    from repro.configs import get_config
-    from repro.core.exchange import ExchangeConfig, ExchangeMode
-    from repro.models import registry
-
-    cfg = get_config("vit-base-16")
-    params = registry.init_params(cfg, seed=0)
-    fwd = registry.forward_fn(cfg)
-    model = EdgeCostModel()
-    pm = PerfMap()
-    xloc = ExchangeConfig(ExchangeMode.LOCAL)
-
-    # host-measured compute curve (arbitrary units) → normalized so B=1
-    # matches the Jetson-calibrated model; shape of the curve is measured.
-    t1 = None
-    for B in spec.batches:
-        imgs = jnp.zeros((B, 224, 224, 3), jnp.float32)
-        jit_fwd = jax.jit(lambda p, im: fwd(p, {"images": im}, xloc)[0])
-        t = timeit_jax(jit_fwd, params, imgs, iters=iters, warmup=1)
-        t1 = t if t1 is None else t1
-        scale = model.local(1)["compute_ms"] / 1e3 / t1
-        compute_ms = t * scale * 1e3
-        r = dict(model.local(B))
-        r["compute_ms"] = compute_ms
-        r["total_ms"] = compute_ms
-        r["per_sample_ms"] = compute_ms / B
-        r["per_sample_j"] = model.c.power_active_w * compute_ms / 1e3 / B
-        pm.put(PerfKey("local", B, 0.0, 0.0), _entry(r, {"measured": True}))
-        for bw in spec.bandwidths_mbps:
-            rv = model.distributed(B, bw, spec.P, L=None)
-            pm.put(PerfKey("voltage", B, 0.0, bw), _entry(rv))
-            for cr in spec.crs:
-                L = cr_to_L(model.w.n_tokens, spec.P, cr)
-                rp = model.distributed(B, bw, spec.P, L=L)
-                pm.put(PerfKey("prism", B, cr, bw), _entry(rp, {"L": L}))
-    return pm
-
-
-def _entry(r: dict, meta: Optional[dict] = None) -> PerfEntry:
-    return PerfEntry(total_ms=r["total_ms"], per_sample_ms=r["per_sample_ms"],
-                     per_sample_j=r["per_sample_j"],
-                     compute_ms=r["compute_ms"], staging_ms=r["staging_ms"],
-                     comm_ms=r["comm_ms"], meta=meta or {})
+def profile_measured(spec: SweepSpec = SweepSpec(), iters: int = 3,
+                     **legacy) -> PerfMap:
+    """Deprecated: measure through the ``measured`` backend on a fresh
+    ``vit-base-16`` session (the seed's hard-coded behaviour)."""
+    warnings.warn(
+        "profile_measured is deprecated; use InferenceSession.profile("
+        "backend='measured') to profile the session's own config and plans",
+        DeprecationWarning, stacklevel=2)
+    unknown = set(legacy) - {"n_layers"}
+    if unknown:
+        raise TypeError(f"profile_measured got unexpected keyword arguments "
+                        f"{sorted(unknown)}")
+    if "n_layers" in legacy:
+        warnings.warn("profile_measured(n_layers=...) was never used and has "
+                      "been removed; the value is ignored",
+                      DeprecationWarning, stacklevel=2)
+    from repro.api import ExecutionPlan, InferenceSession
+    from repro.core.segment_means import cr_to_L
+    from repro.profiling.sweep import VIT_SEQ_LEN
+    plans = [ExecutionPlan.local()]
+    for cr in spec.crs:
+        plans.append(ExecutionPlan.prism_sim(
+            L=cr_to_L(VIT_SEQ_LEN, spec.P, cr), cr=cr,
+            seq_shards=spec.P))
+    session = InferenceSession.from_config("vit-base-16", reduced=False,
+                                           plans=plans)
+    return session.profile(spec, backend="measured", iters=iters)

@@ -1,7 +1,12 @@
 """Sharded serving launcher: prefill + adaptive batched decode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-        [--mode prism] [--devices 8] [--tokens 16]
+        [--mode prism|local|adaptive] [--devices 8] [--tokens 16] \
+        [--bandwidth 400] [--objective latency|energy]
+
+``--mode adaptive`` profiles through the ``simulated`` backend
+(`repro.profiling`) and routes local-vs-PRISM from the compiled policy
+table at the given ``--bandwidth`` and ``--objective``.
 """
 import argparse
 import os
@@ -25,26 +30,44 @@ import numpy as np
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--mode", default="prism", choices=["prism", "local"])
+    ap.add_argument("--mode", default="prism",
+                    choices=["prism", "local", "adaptive"])
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--L", type=int, default=4)
+    ap.add_argument("--bandwidth", type=float, default=400.0,
+                    help="observed link bandwidth (Mbps) for --mode adaptive")
+    ap.add_argument("--objective", default="latency",
+                    choices=["latency", "energy"])
     args = ap.parse_args()
 
-    from repro.api import ExecutionPlan
+    from repro.api import AdaptivePolicy, ExecutionPlan
     from repro.configs import get_config
     from repro.models import registry, transformer as tfm
     from repro.sharding.specs import (batch_shardings, cache_shardings,
                                       param_shardings)
+
+    mode = args.mode
+    if mode == "adaptive":
+        from repro.profiling import ProfileContext, SweepSpec, get_backend
+        pm = get_backend("simulated").profile(ProfileContext(), SweepSpec())
+        d = AdaptivePolicy(pm).decide(args.batch, args.bandwidth,
+                                      args.objective)
+        mode = "prism" if d.distributed else "local"
+        print(f"adaptive: B={args.batch} BW={args.bandwidth:g} Mbps "
+              f"[{args.objective}] → {d.mode}"
+              + (f" CR={d.cr:g}" if d.cr else "")
+              + f" ({d.expected.per_sample_ms:.1f} ms/sample expected"
+              + (", EXTRAPOLATED batch" if d.extrapolated else "") + ")")
 
     n_model = 2 if args.devices >= 4 else 1
     from repro.utils.compat import make_auto_mesh
     mesh = make_auto_mesh((args.devices // n_model, n_model),
                           ("data", "model"))
     cfg = get_config(args.arch).reduced(vocab_size=512)
-    eplan = (ExecutionPlan.local() if args.mode == "local" else
+    eplan = (ExecutionPlan.local() if mode == "local" else
              ExecutionPlan.prism(L=args.L, seq_axis="model",
                                  seq_shards=n_model))
     plan = eplan.sharding_plan(mesh, cfg, decode=True)
@@ -77,7 +100,7 @@ def main():
         jax.block_until_ready(logits)
         dt = time.perf_counter() - t0
         toks = np.concatenate([np.asarray(t) for t in out], 1)
-        print(f"mesh {dict(mesh.shape)} mode={args.mode}: generated "
+        print(f"mesh {dict(mesh.shape)} mode={mode}: generated "
               f"{toks.shape} in {dt:.2f}s "
               f"({args.batch * args.tokens / dt:.1f} tok/s host wall)")
         print(toks[:2])

@@ -1,0 +1,247 @@
+"""Pluggable profiling backends (paper §3.3 made first-class).
+
+A backend turns a :class:`ProfileContext` (what is deployed: config, params,
+registered plan executables, hardware/link profiles) plus a
+:class:`~repro.profiling.sweep.SweepSpec` (what to sweep) into a
+:class:`~repro.core.perfmap.PerfMap` stamped with the hardware it describes.
+
+Built-ins:
+
+* ``simulated`` — the edge cost model; reproduces the paper's sweep
+  instantly.  Defaults to the paper's ViT-base workload on the Jetson/WiFi
+  preset (so the published crossovers reproduce), overridable with any
+  ``HardwareProfile``/``LinkProfile``/``EdgeWorkload``.
+* ``measured`` — times the **session's own registered plan executables** on
+  this host (the seed's ``profile_measured`` hard-coded ``vit-base-16``),
+  scales the compute curve to the target hardware profile, and composes it
+  with the modeled staging/wire terms for each swept bandwidth.
+* ``trace`` — replays a previously saved performance-map artifact
+  (``path=``) or adopts an in-memory map (``perfmap=``) — the
+  "profile once per fleet, ship the JSON" deployment story.
+
+Register your own with ``@register_backend`` — anything with a ``name`` and
+a ``profile(ctx, spec, **opts)`` returning a PerfMap plugs into
+``InferenceSession.profile(backend=...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Type
+
+from repro.core.costmodel import EdgeCostModel, EdgeWorkload
+from repro.core.perfmap import PerfEntry, PerfKey, PerfMap
+from repro.profiling.hardware import (JETSON_ORIN_NANO, WIFI_GLOO,
+                                      HardwareProfile, LinkProfile,
+                                      to_edge_constants)
+from repro.profiling.sweep import SweepSpec, workload_from_config
+
+
+@dataclasses.dataclass
+class ProfileContext:
+    """Everything a backend may need about the deployed session.
+
+    All fields optional: the simulated backend runs from an empty context;
+    the measured backend requires ``cfg`` + ``execs`` (an
+    ``InferenceSession`` provides them via ``session.profile_context()``).
+    """
+    cfg: Any = None
+    params: Any = None
+    plans: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    execs: Dict[str, Callable] = dataclasses.field(default_factory=dict)
+    hardware: HardwareProfile = JETSON_ORIN_NANO
+    link: LinkProfile = WIFI_GLOO
+    workload: Optional[EdgeWorkload] = None   # analytic workload override
+    cost_model: Optional[EdgeCostModel] = None  # full simulator override
+    seq_len: int = 0                          # token-model profiling length
+
+    def edge_model(self, workload: Optional[EdgeWorkload] = None
+                   ) -> EdgeCostModel:
+        if self.cost_model is not None:
+            return self.cost_model
+        w = workload or self.workload or EdgeWorkload()
+        return EdgeCostModel(to_edge_constants(self.hardware, self.link), w)
+
+
+class ProfileBackend:
+    """Protocol: subclass, set ``name``, implement ``profile``."""
+
+    name = ""
+
+    def profile(self, ctx: ProfileContext, spec: SweepSpec = SweepSpec(),
+                **opts) -> PerfMap:
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, ProfileBackend] = {}
+
+
+def register_backend(cls: Type[ProfileBackend]) -> Type[ProfileBackend]:
+    """Class decorator: instantiate and register under ``cls.name``."""
+    name = getattr(cls, "name", "")
+    if not name:
+        raise ValueError("profile backend must define a non-empty `name`")
+    if name in _REGISTRY:
+        raise ValueError(f"profile backend {name!r} already registered")
+    _REGISTRY[name] = cls()
+    return cls
+
+
+def get_backend(name: str) -> ProfileBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown profile backend {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def list_backends():
+    return sorted(_REGISTRY)
+
+
+def _entry(r: Dict, meta: Optional[Dict] = None) -> PerfEntry:
+    return PerfEntry(total_ms=r["total_ms"], per_sample_ms=r["per_sample_ms"],
+                     per_sample_j=r["per_sample_j"],
+                     compute_ms=r["compute_ms"], staging_ms=r["staging_ms"],
+                     comm_ms=r["comm_ms"], meta=meta or {})
+
+
+def _stamp(pm: PerfMap, ctx: ProfileContext,
+           from_profiles: bool = True) -> PerfMap:
+    """Embed provenance (schema v2) — only when the entries really came
+    from the context's hardware/link profiles.  A caller-supplied
+    ``EdgeCostModel`` has unknown provenance; stamping the preset names on
+    its output would make the map lie about what it was profiled on."""
+    if from_profiles:
+        pm.hardware, pm.link = ctx.hardware, ctx.link
+    return pm
+
+
+# --------------------------------------------------------------------------
+# simulated
+# --------------------------------------------------------------------------
+
+@register_backend
+class SimulatedBackend(ProfileBackend):
+    """Cost-model sweep — the paper's offline profiling pass, instant."""
+
+    name = "simulated"
+
+    def profile(self, ctx: Optional[ProfileContext] = None,
+                spec: SweepSpec = SweepSpec(), *,
+                model: Optional[EdgeCostModel] = None) -> PerfMap:
+        from repro.core.segment_means import cr_to_L
+        ctx = ctx or ProfileContext()
+        custom_model = model is not None or ctx.cost_model is not None
+        model = model or ctx.edge_model()
+        pm = PerfMap()
+        N = model.w.n_tokens
+        for B in spec.batches:
+            pm.put(PerfKey("local", B, 0.0, 0.0), _entry(model.local(B)))
+            for bw in spec.bandwidths_mbps:
+                rv = model.distributed(B, bw, spec.P, L=None)
+                pm.put(PerfKey("voltage", B, 0.0, bw), _entry(rv))
+                for cr in spec.crs:
+                    L = cr_to_L(N, spec.P, cr)
+                    rp = model.distributed(B, bw, spec.P, L=L)
+                    pm.put(PerfKey("prism", B, cr, bw), _entry(rp, {"L": L}))
+        return _stamp(pm, ctx, from_profiles=not custom_model)
+
+
+# --------------------------------------------------------------------------
+# measured
+# --------------------------------------------------------------------------
+
+@register_backend
+class MeasuredBackend(ProfileBackend):
+    """Times the session's registered plan executables on this host.
+
+    The compute curve is **measured** per (plan × batch) and normalized so
+    the anchor plan's first swept batch matches the hardware profile's
+    prediction (host-shape-of-curve × target-absolute-level, as a real
+    fleet would calibrate once); staging/wire are modeled from the link
+    profile at each swept bandwidth.  Distributed plans charge each device
+    ``1/P`` of the measured single-host compute plus the coordination
+    overhead.
+    """
+
+    name = "measured"
+
+    def profile(self, ctx: ProfileContext, spec: SweepSpec = SweepSpec(), *,
+                iters: int = 3, warmup: int = 1) -> PerfMap:
+        from repro.utils.timing import timeit_jax
+        if ctx is None or ctx.cfg is None or not ctx.execs:
+            raise ValueError(
+                "measured backend profiles the session's own executables: "
+                "build the context via InferenceSession.profile_context() "
+                "(register plans first), or pass cfg= and execs=")
+        workload = ctx.workload or workload_from_config(ctx.cfg, ctx.seq_len)
+        model = ctx.edge_model(workload)
+        pm = PerfMap()
+        anchor = "local" if "local" in ctx.execs else next(iter(ctx.execs))
+        arch = getattr(ctx.cfg, "name", "?")
+        scale = None
+        for B in spec.batches:
+            inputs = _dummy_batch(ctx.cfg, B, workload.n_tokens)
+            times = {key: timeit_jax(fn, inputs, iters=iters, warmup=warmup)
+                     for key, fn in ctx.execs.items()}
+            if scale is None:      # anchor: first swept batch of one plan
+                scale = (model.local(B)["compute_ms"] / 1e3) / times[anchor]
+            for key, t in times.items():
+                plan = self._plan_for(ctx, key, workload.n_tokens)
+                compute_ms = t * scale * 1e3
+                meta = {"measured": True, "arch": arch}
+                if not plan.distributed:
+                    r = model.pack(B, compute_ms, 0.0, 0.0, boards=1)
+                    pm.put(plan.to_perf_key(B), _entry(r, meta))
+                    continue
+                P = max(plan.seq_shards, 1)
+                L = plan.L if plan.L > 0 else None
+                per_dev_ms = compute_ms / P + model.c.coord_overhead_ms
+                for bw in spec.bandwidths_mbps:
+                    rm = model.distributed(B, bw, P, L=L)
+                    r = model.pack(B, per_dev_ms, rm["staging_ms"],
+                                   rm["comm_ms"], boards=P)
+                    pm.put(plan.to_perf_key(B, bw),
+                           _entry(r, dict(meta, L=plan.L)))
+        return _stamp(pm, ctx, from_profiles=ctx.cost_model is None)
+
+    @staticmethod
+    def _plan_for(ctx: ProfileContext, key: str, n_tokens: int):
+        plan = ctx.plans.get(key)
+        if plan is None:                        # hand-wired execs table
+            from repro.api.plan import ExecutionPlan
+            plan = ExecutionPlan.parse(key).resolve_L(n_tokens)
+        return plan
+
+
+def _dummy_batch(cfg, batch: int, seq_len: int) -> Dict[str, Any]:
+    """Zero-filled inputs for the deployed config's family — tokens, images,
+    audio frames, or image embeddings as the registry prescribes."""
+    import jax.numpy as jnp
+    from repro.configs.base import ShapeSpec
+    from repro.models import registry
+    shape = ShapeSpec("profiling", seq_len, batch, "prefill")
+    return {k: jnp.zeros(s.shape, s.dtype)
+            for k, s in registry.input_specs(cfg, shape).items()}
+
+
+# --------------------------------------------------------------------------
+# trace replay
+# --------------------------------------------------------------------------
+
+@register_backend
+class TraceBackend(ProfileBackend):
+    """Replay a saved performance-map artifact (no inference runs)."""
+
+    name = "trace"
+
+    def profile(self, ctx: Optional[ProfileContext] = None,
+                spec: SweepSpec = SweepSpec(), *,
+                path: Optional[str] = None,
+                perfmap: Optional[PerfMap] = None) -> PerfMap:
+        if perfmap is not None:
+            return perfmap
+        if path is None:
+            raise ValueError("trace backend replays a recorded profile: "
+                             "pass path=<saved perf-map JSON> or perfmap=")
+        return PerfMap.load(path)

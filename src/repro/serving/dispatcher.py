@@ -74,5 +74,6 @@ class AdaptiveDispatcher:
         wall = (time.perf_counter() - t0) * 1e3
         self.history.append(DispatchRecord(batch_size, self._bw, d, wall,
                                            exec_key=key,
-                                           substituted=substituted))
+                                           substituted=substituted,
+                                           extrapolated=d.extrapolated))
         return out

@@ -1,0 +1,523 @@
+"""The pluggable profiling subsystem: backend registry, hardware profiles
+embedded in the perf map (schema v2), objective classes, the compiled
+PolicyTable (O(1) decide, interpolation, extrapolation flags), and the
+closed-loop calibrate() pass."""
+import json
+import warnings
+
+import jax.numpy as jnp
+import pytest
+
+from repro.api import (AdaptivePolicy, EnergyObjective, ExecutionPlan,
+                       HardwareProfile, InferenceSession, LatencyObjective,
+                       LinkProfile, PerfEntry, PerfKey, PerfMap, PolicyTable,
+                       SLOObjective, SweepSpec, WeightedObjective,
+                       get_backend, list_backends, profile_simulated,
+                       register_backend, resolve_objective)
+from repro.core.perfmap import SCHEMA_VERSION
+from repro.profiling import (JETSON_ORIN_NANO, TPU_V5E, WIFI_GLOO,
+                             ProfileBackend, ProfileContext,
+                             to_edge_constants, workload_from_config)
+from repro.profiling import backends as B
+
+TINY = SweepSpec(batches=(1, 2), crs=(9.9,), bandwidths_mbps=(400.0,),
+                 warmup_runs=1)
+
+
+@pytest.fixture(scope="module")
+def perfmap():
+    return profile_simulated()
+
+
+def _session(arch="llama3.2-1b", **kw):
+    kw.setdefault("reduced", {"vocab_size": 64})
+    kw.setdefault("plans", [ExecutionPlan.local(),
+                            ExecutionPlan.prism_sim(L=4, cr=9.9)])
+    return InferenceSession.from_config(arch, **kw)
+
+
+# --- backend registry -------------------------------------------------------
+
+def test_builtin_backends_registered():
+    assert {"simulated", "measured", "trace"} <= set(list_backends())
+    assert isinstance(get_backend("simulated"), B.SimulatedBackend)
+
+
+def test_unknown_backend_clear_error():
+    with pytest.raises(KeyError, match="unknown profile backend"):
+        get_backend("oracle")
+
+
+def test_register_backend_rejects_duplicates_and_anonymous():
+    with pytest.raises(ValueError, match="already registered"):
+        @register_backend
+        class Dup(ProfileBackend):        # noqa: F811 — intentional clash
+            name = "simulated"
+    with pytest.raises(ValueError, match="non-empty `name`"):
+        @register_backend
+        class Anon(ProfileBackend):
+            name = ""
+
+
+def test_custom_backend_plugs_into_session():
+    @register_backend
+    class ConstantBackend(ProfileBackend):
+        name = "constant-test"
+
+        def profile(self, ctx, spec=SweepSpec(), **opts):
+            pm = PerfMap()
+            for b in spec.batches:
+                pm.put(PerfKey("local", b, 0.0, 0.0),
+                       PerfEntry(10.0 * b, 10.0, 0.1, 10.0 * b, 0.0, 0.0))
+            pm.hardware = ctx.hardware
+            return pm
+    try:
+        sess = _session()
+        pm = sess.profile(TINY, backend="constant-test")
+        assert len(pm) == 2 and sess.decide(1, 400.0).mode == "local"
+    finally:
+        B._REGISTRY.pop("constant-test")
+
+
+# --- simulated backend = legacy sweep --------------------------------------
+
+def test_simulated_backend_matches_legacy_wrapper(perfmap):
+    pm = get_backend("simulated").profile(ProfileContext(), SweepSpec())
+    assert len(pm) == len(perfmap)
+    k = PerfKey("prism", 8, 9.9, 400.0)
+    assert pm.get(k).total_ms == pytest.approx(perfmap.get(k).total_ms)
+    assert pm.hardware == JETSON_ORIN_NANO and pm.link == WIFI_GLOO
+
+
+def test_jetson_preset_reproduces_edge_constants():
+    from repro.core.costmodel import EdgeConstants
+    assert to_edge_constants(JETSON_ORIN_NANO, WIFI_GLOO) == EdgeConstants()
+
+
+def test_tpu_preset_profiles_faster_than_jetson():
+    from repro.core.costmodel import EdgeCostModel
+    jet = EdgeCostModel(to_edge_constants(JETSON_ORIN_NANO, WIFI_GLOO))
+    tpu = EdgeCostModel(to_edge_constants(TPU_V5E, WIFI_GLOO))
+    assert tpu.local(8)["total_ms"] < jet.local(8)["total_ms"] / 10
+
+
+# --- measured backend: profiles the session's own arch + plans --------------
+
+@pytest.mark.parametrize("arch,reduced", [
+    ("vit-base-16", True),
+    ("llama3.2-1b", {"vocab_size": 64}),
+])
+def test_measured_backend_profiles_session_arch(arch, reduced):
+    """The seed hard-coded vit-base-16; the backend must profile whatever
+    the session deploys — and only the plans it registered."""
+    sess = _session(arch, reduced=reduced)
+    pm = sess.profile(TINY, backend="measured", iters=1, warmup=1)
+    assert len(pm) == 4                      # (local + prism@9.9) × 2 batches
+    for b in (1, 2):
+        local = pm.get(PerfKey("local", b, 0.0, 0.0))
+        prism = pm.get(PerfKey("prism", b, 9.9, 400.0))
+        assert local is not None and prism is not None
+        assert local.meta["measured"] and local.meta["arch"] == sess.cfg.name
+        assert local.total_ms > 0 and prism.total_ms > 0
+        # distributed = compute + modeled staging/wire decomposition
+        assert prism.staging_ms > 0 and prism.comm_ms > 0
+    assert pm.hardware == JETSON_ORIN_NANO   # stamped for schema v2
+    assert sess.decide(2, 400.0).mode in ("local", "prism")
+
+
+def test_measured_backend_requires_executables():
+    with pytest.raises(ValueError, match="session's own executables"):
+        get_backend("measured").profile(ProfileContext(), TINY)
+
+
+def test_workload_from_config_tracks_arch():
+    from repro.configs import get_config
+    cfg = get_config("llama3.2-1b").reduced(vocab_size=64)
+    w = workload_from_config(cfg, seq_len=48)
+    assert (w.n_layers, w.d_model, w.d_ff, w.n_tokens) == \
+        (cfg.n_layers, cfg.d_model, cfg.d_ff, 48)
+    vit = workload_from_config(get_config("vit-base-16"))
+    assert vit.n_tokens == 197               # patch grid fixes ViT's length
+
+
+def test_profile_measured_shim_warns_and_forwards(monkeypatch):
+    """Legacy free function: DeprecationWarning + forwards to the backend;
+    the dead n_layers parameter is gone (ignored with its own warning)."""
+    calls = {}
+
+    def fake_profile(self, spec=None, **kw):
+        calls.update(kw, spec=spec)
+        return PerfMap()
+    monkeypatch.setattr(InferenceSession, "profile", fake_profile)
+    from repro.core.profiler import profile_measured
+    with pytest.warns(DeprecationWarning, match="backend='measured'"):
+        pm = profile_measured(TINY)
+    assert isinstance(pm, PerfMap)
+    assert calls["backend"] == "measured" and calls["spec"] == TINY
+    with pytest.warns(DeprecationWarning, match="n_layers"):
+        profile_measured(TINY, n_layers=12)
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        profile_measured(TINY, depth=3)
+
+
+def test_session_profile_measured_kwarg_deprecated(monkeypatch):
+    sess = _session()
+    seen = {}
+    monkeypatch.setattr(
+        B.MeasuredBackend, "profile",
+        lambda self, ctx, spec=None, **kw: seen.setdefault("pm", PerfMap()))
+    with pytest.warns(DeprecationWarning, match="backend='measured'"):
+        sess.profile(TINY, measured=True)
+    assert "pm" in seen
+
+
+# --- trace backend ----------------------------------------------------------
+
+def test_trace_backend_replays_saved_map(tmp_path, perfmap):
+    path = str(tmp_path / "trace.json")
+    perfmap.save(path)
+    sess = _session()
+    pm = sess.profile(backend="trace", path=path)
+    assert len(pm) == len(perfmap)
+    assert pm.hardware == JETSON_ORIN_NANO   # round-tripped, not re-stamped
+    assert sess.perfmap is pm
+    with pytest.raises(ValueError, match="path="):
+        get_backend("trace").profile(ProfileContext())
+
+
+# --- perf-map persistence (schema v2 + hardware block) ----------------------
+
+def test_perfmap_v2_roundtrips_hardware(tmp_path, perfmap):
+    path = str(tmp_path / "pm.json")
+    perfmap.save(path)
+    data = json.load(open(path))
+    assert data["schema_version"] == SCHEMA_VERSION == 2
+    assert data["hardware"]["device"]["name"] == "jetson-orin-nano"
+    loaded = PerfMap.load(path)
+    assert loaded.hardware == JETSON_ORIN_NANO
+    assert loaded.link == WIFI_GLOO
+    assert len(loaded) == len(perfmap)
+
+
+def test_perfmap_legacy_v1_still_loads(tmp_path, perfmap):
+    path = str(tmp_path / "v1.json")
+    perfmap.save(path)
+    data = json.load(open(path))
+    data["schema_version"] = 1
+    del data["hardware"]
+    json.dump(data, open(path, "w"))
+    loaded = PerfMap.load(path)
+    assert len(loaded) == len(perfmap) and loaded.hardware is None
+
+
+def test_perfmap_flat_prehistoric_format_still_loads(tmp_path):
+    entry = PerfEntry(1.0, 1.0, 0.1, 0.5, 0.2, 0.3)
+    path = str(tmp_path / "flat.json")
+    json.dump({PerfKey("local", 1, 0.0, 0.0).encode(): entry.to_dict()},
+              open(path, "w"))
+    pm = PerfMap.load(path)
+    assert pm.get(PerfKey("local", 1, 0.0, 0.0)).total_ms == 1.0
+    assert pm.hardware is None
+
+
+@pytest.mark.parametrize("block", [
+    {"device": {"eff_inf": 1.0}},                      # missing name
+    {"device": {"name": "x", "eff_inf": "fast"}},      # non-numeric field
+    {"device": {"name": "x", "warp_drive": 9}},        # unknown field
+    {"device": [1, 2, 3]},                             # wrong container
+    "not-a-dict",
+])
+def test_perfmap_corrupt_hardware_block_clear_error(tmp_path, block):
+    path = str(tmp_path / "bad.json")
+    json.dump({"schema_version": 2, "hardware": block, "entries": {}},
+              open(path, "w"))
+    with pytest.raises(ValueError, match="corrupt hardware block"):
+        PerfMap.load(path)
+
+
+def test_perfmap_future_schema_version_rejected(tmp_path):
+    path = str(tmp_path / "future.json")
+    json.dump({"schema_version": 3, "entries": {}}, open(path, "w"))
+    with pytest.raises(ValueError, match="schema version"):
+        PerfMap.load(path)
+
+
+def test_hardware_profile_dict_roundtrip():
+    hw = HardwareProfile.from_dict(TPU_V5E.to_dict())
+    assert hw == TPU_V5E
+    link = LinkProfile.from_dict(WIFI_GLOO.to_dict())
+    assert link == WIFI_GLOO
+
+
+# --- objectives -------------------------------------------------------------
+
+def _two_mode_map():
+    """local: slow but frugal; prism: fast but hungry."""
+    pm = PerfMap()
+    pm.put(PerfKey("local", 8, 0.0, 0.0),
+           PerfEntry(100.0, 12.5, 1.0, 100.0, 0.0, 0.0))
+    pm.put(PerfKey("prism", 8, 9.9, 400.0),
+           PerfEntry(64.0, 8.0, 2.0, 40.0, 14.0, 10.0))
+    return pm
+
+
+def test_objective_string_compat():
+    assert resolve_objective("latency") == LatencyObjective()
+    assert resolve_objective("energy") == "energy"
+    obj = WeightedObjective(0.5, 0.5)
+    assert resolve_objective(obj) is obj
+    with pytest.raises(ValueError, match="unknown objective"):
+        resolve_objective("vibes")
+    with pytest.raises(TypeError):
+        resolve_objective(42)
+
+
+def test_weighted_objective_spans_latency_to_energy():
+    pol = AdaptivePolicy(_two_mode_map())
+    assert pol.decide(8, 400.0, WeightedObjective(1.0, 0.0)).mode == "prism"
+    assert pol.decide(8, 400.0, WeightedObjective(0.0, 1.0)).mode == "local"
+
+
+def test_slo_objective_constrains_energy_pick():
+    pol = AdaptivePolicy(_two_mode_map())
+    # generous SLO: both feasible → min energy → local
+    assert pol.decide(8, 400.0, SLOObjective(50.0)).mode == "local"
+    # tight SLO: only prism meets 10 ms/sample → forced off the energy pick
+    assert pol.decide(8, 400.0, SLOObjective(10.0)).mode == "prism"
+    # impossible SLO: least-violating (fastest) wins, flagged infeasible
+    d = pol.decide(8, 400.0, SLOObjective(1.0))
+    assert d.mode == "prism"
+    assert not d.objective.feasible(d.expected)
+    with pytest.raises(ValueError):
+        SLOObjective(-5.0)
+
+
+def test_objective_used_everywhere_objective_goes(perfmap):
+    sess = _session(perfmap=perfmap, objective=EnergyObjective())
+    assert sess.decide(16, 400.0).objective == "energy"
+    exp = sess.explain(16, 400.0, objective=SLOObjective(1000.0))
+    assert exp.decision.objective.name == "slo"
+
+
+# --- PolicyTable ------------------------------------------------------------
+
+def test_table_matches_paper_crossovers(perfmap):
+    table = AdaptivePolicy(perfmap).table()
+    assert isinstance(table, PolicyTable)
+    assert table.batch_crossover(400.0) == 8
+    assert 200 <= table.bandwidth_crossover(8) <= 500
+    art = table.artifacts()
+    assert art["batch_crossover_by_bw"][400.0] == 8
+    assert art["objective"] == "latency"
+
+
+def test_table_interpolates_between_profiled_bandwidths(perfmap):
+    pol = AdaptivePolicy(perfmap)
+    lo = pol.decide(8, 400.0).expected.per_sample_ms
+    hi = pol.decide(8, 500.0).expected.per_sample_ms
+    mid = pol.decide(8, 450.0)
+    assert mid.expected.meta.get("interpolated_bw")
+    assert min(lo, hi) - 1e-9 <= mid.expected.per_sample_ms <= max(lo, hi) + 1e-9
+
+
+def test_table_clamps_out_of_grid_bandwidth(perfmap):
+    pol = AdaptivePolicy(perfmap)
+    assert pol.decide(8, 50.0).mode == pol.decide(8, 200.0).mode
+    assert pol.decide(8, 5000.0).expected.per_sample_ms == \
+        pytest.approx(pol.decide(8, 900.0).expected.per_sample_ms)
+
+
+def test_decide_does_not_redecode_keys(perfmap, monkeypatch):
+    """Regression (satellite): decide() used to parse every key string in
+    the map on every call; the compiled table must never re-decode."""
+    pol = AdaptivePolicy(perfmap)
+    pol.decide(8, 400.0)                     # compile the table
+    calls = []
+    orig = PerfKey.decode
+    monkeypatch.setattr(PerfKey, "decode",
+                        staticmethod(lambda s: calls.append(s) or orig(s)))
+    for i in range(100):
+        pol.decide(8, 200.0 + i * 7.0)       # grid hits + interpolated
+        pol.decide(1, 400.0)
+    assert calls == []
+
+
+def test_perfmap_entries_use_cached_keys(monkeypatch):
+    pm = profile_simulated()                 # put() caches decoded keys
+    calls = []
+    orig = PerfKey.decode
+    monkeypatch.setattr(PerfKey, "decode",
+                        staticmethod(lambda s: calls.append(s) or orig(s)))
+    list(pm.entries())
+    pm.candidates(8, 400.0)
+    assert calls == []
+
+
+def test_perfmap_load_decodes_each_key_once(tmp_path, monkeypatch, perfmap):
+    path = str(tmp_path / "pm.json")
+    perfmap.save(path)
+    calls = []
+    orig = PerfKey.decode
+    monkeypatch.setattr(PerfKey, "decode",
+                        staticmethod(lambda s: calls.append(s) or orig(s)))
+    pm = PerfMap.load(path)
+    n_load = len(calls)
+    assert n_load == len(pm)                 # validation pass, cached
+    list(pm.entries())
+    list(pm.entries())
+    assert len(calls) == n_load              # iteration re-decodes nothing
+
+
+def test_empty_map_still_raises_lookup_error():
+    with pytest.raises(LookupError, match="empty performance map"):
+        AdaptivePolicy(PerfMap()).decide(8, 400.0)
+
+
+# --- extrapolation surfacing ------------------------------------------------
+
+def test_out_of_grid_batch_flagged_extrapolated(perfmap):
+    pol = AdaptivePolicy(perfmap)
+    assert not pol.decide(8, 400.0).extrapolated
+    assert not pol.decide(5, 400.0).extrapolated      # in-grid snap: fine
+    d = pol.decide(256, 400.0)
+    assert d.extrapolated and d.mode in ("local", "prism")
+
+
+def test_dispatch_records_extrapolation(perfmap):
+    sess = _session(perfmap=perfmap)
+    sess._bw = 400.0
+    toks = jnp.ones((64, 32), jnp.int32)     # profiled grid tops out at 32
+    sess.dispatch({"tokens": toks})
+    rec = sess.history[-1]
+    assert rec.extrapolated and rec.decision.extrapolated
+    exp = sess.explain(64, 400.0)
+    assert exp.extrapolated and "EXTRAPOLATED" in exp.summary()
+    sess.dispatch({"tokens": jnp.ones((8, 32), jnp.int32)})
+    assert not sess.history[-1].extrapolated
+
+
+# --- closed-loop calibration ------------------------------------------------
+
+def test_calibrate_folds_observed_walls_ewma():
+    sess = _session()
+    sess.profile(backend="simulated")
+    sess._bw = 400.0
+    toks = jnp.ones((8, 32), jnp.int32)
+    sess.dispatch({"tokens": toks})
+    sess.dispatch({"tokens": toks})
+    key_s = sess.history[-1].exec_key
+    mode, _, cr = key_s.partition("@")
+    key = (PerfKey("local", 8, 0.0, 0.0) if mode == "local"
+           else PerfKey(mode, 8, float(cr), 400.0))
+    old = sess.perfmap.get(key).total_ms
+    for r in sess.history:
+        r.wall_ms = 50.0
+    rep = sess.calibrate(alpha=0.5)
+    assert rep.updated == 2 and rep.records == 2 and bool(rep)
+    expect = 0.5 * (0.5 * old + 0.5 * 50.0) + 0.5 * 50.0
+    e = sess.perfmap.get(key)
+    assert e.total_ms == pytest.approx(expect)
+    assert e.per_sample_ms == pytest.approx(expect / 8)
+    assert e.meta["calibrations"] == 2
+    # decomposition rescaled consistently
+    assert e.compute_ms + e.staging_ms + e.comm_ms == pytest.approx(expect)
+    # already-consumed records are not folded twice
+    assert sess.calibrate().updated == 0
+
+
+def test_calibrate_changes_subsequent_decisions():
+    sess = _session()
+    sess.profile(backend="simulated")
+    sess._bw = 400.0
+    assert sess.decide(8).mode == "prism"    # paper: distributed from B=8
+    toks = jnp.ones((8, 32), jnp.int32)
+    sess.dispatch({"tokens": toks})
+    sess.history[-1].wall_ms = 10_000.0      # observed: prism is terrible
+    assert sess.calibrate(alpha=1.0).updated == 1
+    assert sess.decide(8).mode == "local"    # policy tracked the drift
+
+
+def test_calibrate_skips_extrapolated_records(perfmap):
+    sess = _session(perfmap=perfmap)
+    sess._bw = 400.0
+    sess.dispatch({"tokens": jnp.ones((64, 32), jnp.int32)})
+    sess.history[-1].wall_ms = 1.0
+    snap = {k.encode(): e.total_ms for k, e in sess.perfmap.entries()}
+    rep = sess.calibrate()
+    assert rep.updated == 0 and rep.skipped_extrapolated == 1
+    assert {k.encode(): e.total_ms for k, e in sess.perfmap.entries()} == snap
+
+
+def test_calibrate_skips_interior_offgrid_batches(perfmap):
+    """A B=24 wall must not corrupt the B=32 cell it would snap to — only
+    exact-grid batches are folded."""
+    sess = _session(perfmap=perfmap)
+    sess._bw = 400.0
+    sess.dispatch({"tokens": jnp.ones((24, 32), jnp.int32)})
+    rec = sess.history[-1]
+    assert not rec.extrapolated              # in range, just between points
+    rec.wall_ms = 1.0
+    snap = {k.encode(): e.total_ms for k, e in sess.perfmap.entries()}
+    rep = sess.calibrate()
+    assert rep.updated == 0 and rep.skipped_offgrid == 1
+    assert {k.encode(): e.total_ms for k, e in sess.perfmap.entries()} == snap
+
+
+def test_calibrate_preserves_recorded_expectations():
+    """History keeps the costs the policy actually predicted at dispatch
+    time; calibrate() installs fresh entries instead of mutating them."""
+    sess = _session()
+    sess.profile(backend="simulated")
+    sess._bw = 400.0
+    sess.dispatch({"tokens": jnp.ones((8, 32), jnp.int32)})
+    rec = sess.history[-1]
+    predicted = rec.decision.expected.total_ms
+    rec.wall_ms = 7.0
+    assert sess.calibrate(alpha=1.0).updated == 1
+    assert rec.decision.expected.total_ms == predicted   # untouched
+    mode, _, cr = rec.exec_key.partition("@")
+    key = (PerfKey("local", 8, 0.0, 0.0) if mode == "local"
+           else PerfKey(mode, 8, float(cr), 400.0))
+    assert sess.perfmap.get(key).total_ms == pytest.approx(7.0)
+
+
+def test_objective_hashes_like_its_string_name():
+    """dict/set lookups keyed by the legacy strings keep working."""
+    assert EnergyObjective() in {"latency", "energy"}
+    stats = {"latency": 0, "energy": 0}
+    stats[EnergyObjective()] += 1
+    assert stats["energy"] == 1
+
+
+def test_simulated_custom_model_not_stamped():
+    """A caller-supplied cost model has unknown provenance — the map must
+    not claim the Jetson/WiFi presets produced it."""
+    from repro.core.costmodel import EdgeConstants, EdgeCostModel
+    model = EdgeCostModel(EdgeConstants(eff_inf=9e12))
+    pm = profile_simulated(model=model)
+    assert pm.hardware is None and pm.link is None
+    pm2 = get_backend("simulated").profile(
+        ProfileContext(cost_model=model), SweepSpec())
+    assert pm2.hardware is None
+
+
+def test_explain_consistent_at_offgrid_bandwidth(perfmap):
+    """At an interpolated bandwidth the decision must be the argmin of the
+    candidate rows the explanation prints (same lerp as decide())."""
+    sess = _session(perfmap=perfmap)
+    exp = sess.explain(8, 350.0)
+    allowed = [e.per_sample_ms for k, e in exp.candidates
+               if k.mode in ("local", "prism")]
+    assert exp.decision.expected.per_sample_ms == min(allowed)
+    for k, _ in exp.candidates:              # rows live at the queried bw
+        assert k.bandwidth_mbps in (0.0, 350.0)
+    assert any(k.mode == "voltage" for k, _ in exp.candidates)
+
+
+def test_calibrate_validates_inputs():
+    sess = _session()
+    with pytest.raises(RuntimeError, match="no performance map"):
+        sess.calibrate()
+    sess.profile(backend="simulated")
+    with pytest.raises(ValueError, match="alpha"):
+        sess.calibrate(alpha=0.0)
