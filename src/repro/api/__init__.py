@@ -23,10 +23,10 @@ from repro.api.strategies import (ExchangeStrategy, get_strategy,
                                   list_strategies, register_strategy)
 from repro.core.exchange import ExchangeConfig, ExchangeMode
 from repro.core.perfmap import PerfEntry, PerfKey, PerfMap
-from repro.core.policy import (AdaptivePolicy, Decision, EnergyObjective,
-                               LatencyObjective, Objective, ObjectiveLike,
-                               PolicyTable, SLOObjective, WeightedObjective,
-                               resolve_objective)
+from repro.core.policy import (AdaptivePolicy, BatchPlan, Decision,
+                               EnergyObjective, LatencyObjective, Objective,
+                               ObjectiveLike, PolicyTable, SLOObjective,
+                               WeightedObjective, resolve_objective)
 from repro.core.profiler import (PAPER_BATCHES, PAPER_BWS, PAPER_CRS,
                                  SweepSpec, profile_measured,
                                  profile_simulated, sweep_cost)
@@ -42,7 +42,7 @@ __all__ = [
     "list_strategies",
     "ExchangeConfig", "ExchangeMode",
     "PerfKey", "PerfEntry", "PerfMap",
-    "AdaptivePolicy", "Decision", "PolicyTable",
+    "AdaptivePolicy", "Decision", "PolicyTable", "BatchPlan",
     "Objective", "ObjectiveLike", "LatencyObjective", "EnergyObjective",
     "WeightedObjective", "SLOObjective", "resolve_objective",
     "ProfileBackend", "ProfileContext", "register_backend", "get_backend",

@@ -181,6 +181,187 @@ def build_generate_fn(cfg: ModelConfig, xcfg: ExchangeConfig, *,
     return counted
 
 
+# ---------------------------------------------------------------------------
+# slot-pool serving primitives (continuous batching)
+# ---------------------------------------------------------------------------
+#
+# The serving runtime (repro.serving) keeps ONE pooled decode cache with a
+# slot per in-flight request; requests are admitted into free slots between
+# decode chunks.  Three primitives make that work while staying token-exact
+# with a per-request `generate`:
+#
+# * `cache_batch_axes`   — which axis of each cache leaf is the batch/slot
+#                          axis (the stacked scan layout moves it around).
+# * `build_prefill_fn`   — prime ONE request's cache at the pool length and
+#                          sample its first token (same math as `generate`).
+# * `build_decode_chunk_fn` — `n_steps` decode steps over ALL slots in one
+#                          jitted executable, each slot at its OWN position
+#                          (a per-slot vmap of `decode_step` with a
+#                          threaded per-slot PRNG key).
+
+def cache_batch_axes(cfg: ModelConfig):
+    """Pytree (matching ``init_decode_cache``) of ints: the batch axis of
+    every cache leaf.  Derived structurally — the axis whose size follows
+    the requested batch — so new families need no per-family table."""
+    a = jax.eval_shape(lambda: tfm.init_decode_cache(cfg, 1, 8))
+    b = jax.eval_shape(lambda: tfm.init_decode_cache(cfg, 2, 8))
+
+    def axis(x, y):
+        for i, (p, q) in enumerate(zip(x.shape, y.shape)):
+            if p != q:
+                return i
+        raise ValueError(f"no batch axis in cache leaf {x.shape}")
+    return jax.tree_util.tree_map(axis, a, b)
+
+
+SLOT_POOL_FAMILIES = ("dense", "moe", "hybrid", "ssm")
+
+
+def supports_slot_pool(cfg: ModelConfig) -> bool:
+    """Tokens-only generative families can be slot-pooled.  audio/vlm
+    caches carry per-request memory tensors whose shapes depend on the
+    request extras, and non-generative families (vit) have no decode cache
+    at all — neither can share one pooled pytree."""
+    return cfg.family in SLOT_POOL_FAMILIES
+
+
+def build_prefill_fn(cfg: ModelConfig, xcfg: ExchangeConfig, *,
+                     total_len: int,
+                     prefill_mode: str = "auto") -> Callable:
+    """One jitted request-admission executable.
+
+    ``fn(params, prompt_tokens [B, T0], extras, key, temp) → (tok0 [B, 1],
+    cache, key')`` — cache init at ``total_len`` (the pool's max length),
+    prompt prefill, and the first sampled token, exactly the front half of
+    ``build_generate_fn`` (same key threading, so a slot primed here and
+    decoded by chunks reproduces ``generate`` token-for-token).  ``temp``
+    is a traced scalar (≤0 = greedy), not a compile-time constant — serving
+    traffic carries per-request temperatures and must not recompile the
+    prefill per distinct value.
+    """
+    mode = resolve_prefill_mode(cfg, xcfg, prefill_mode)
+
+    def pf(params, prompt_tokens, extras, key, temp):
+        B, T0 = prompt_tokens.shape
+        cache = tfm.init_decode_cache(cfg, B, total_len)
+        if cfg.family in ("audio", "vlm"):
+            cache = tfm.prefill_memory(
+                params, {"tokens": prompt_tokens, **extras}, cfg, xcfg,
+                cache)
+        if mode == "single_pass":
+            logits, cache = tfm.prefill(
+                params, {"tokens": prompt_tokens, **extras}, cache, cfg,
+                xcfg)
+        else:
+            logits, cache = prefill_by_decode(params, prompt_tokens, cache,
+                                              cfg, xcfg)
+        key, sub = jax.random.split(key)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        sampled = jax.random.categorical(
+            sub, logits / jnp.maximum(temp, 1e-6), axis=-1).astype(jnp.int32)
+        tok = jnp.where(temp > 0.0, sampled, greedy)[:, 0:1]
+        return tok, cache, key
+
+    jitted = jax.jit(pf)
+    _STATS["builds"] += 1
+
+    def counted(params, prompt_tokens, extras, key, temp):
+        _STATS["dispatches"] += 1
+        return jitted(params, prompt_tokens, extras, key, temp)
+
+    counted.jitted = jitted
+    counted.prefill_mode = mode
+    return counted
+
+
+def build_admit_fn(cfg: ModelConfig) -> Callable:
+    """Fused slot admission: ONE jitted executable scatters a primed B=1
+    request cache into row ``slot`` of the pool AND updates the four
+    per-slot state vectors (current token, write position, PRNG key,
+    temperature).  Issuing these as separate eager ops cost ~5 device
+    dispatches per admission — measurably more than the prefill itself.
+
+    ``fn(pool, tok, lengths, keys, temps, req_cache, slot, tok0 [1,1],
+    length0, key0, temp0) → (pool, tok, lengths, keys, temps)``.
+    """
+    axes = cache_batch_axes(cfg)
+
+    def admit(pool, tok, lengths, keys, temps, req_cache, slot, tok0,
+              length0, key0, temp0):
+        pool = jax.tree_util.tree_map(
+            lambda p, r, a: jax.lax.dynamic_update_slice_in_dim(
+                p, r.astype(p.dtype), slot, axis=a),
+            pool, req_cache, axes)
+        tok = tok.at[slot].set(tok0[0, 0])
+        lengths = lengths.at[slot].set(length0)
+        keys = keys.at[slot].set(key0)
+        temps = temps.at[slot].set(temp0)
+        return pool, tok, lengths, keys, temps
+
+    return jax.jit(admit)
+
+
+def build_decode_chunk_fn(cfg: ModelConfig, xcfg: ExchangeConfig, *,
+                          n_steps: int,
+                          max_len: Optional[int] = None) -> Callable:
+    """One jitted continuous-batching decode chunk over a slot pool.
+
+    ``fn(params, pool_cache, tok [S], lengths [S], keys [S], temps [S]) →
+    (tokens [S, n_steps], pool_cache, lengths, keys)``: a ``lax.scan`` of a
+    per-slot ``vmap`` of ``decode_step``, each slot reading/writing its own
+    cache row at its own position with its own PRNG key and sampling
+    temperature — per-slot math is identical to a B=1 ``generate`` decode
+    (greedy at ``temps[i] <= 0``, categorical otherwise, key split every
+    step either way), so pooled decoding stays token-exact per request
+    regardless of what shares the pool.  Slots that are free (or already
+    finished) keep decoding harmlessly: their writes stay inside their own
+    row and admission re-primes the whole row.
+    """
+    axes = cache_batch_axes(cfg)
+
+    def one(params, tok, cache_slot, idx, key, temp):
+        cache_b = jax.tree_util.tree_map(
+            lambda t, a: jnp.expand_dims(t, a), cache_slot, axes)
+        logits, c = tfm.decode_step(params, {"tokens": tok[None, None]},
+                                    cache_b, idx, cfg, xcfg)
+        key, sub = jax.random.split(key)
+        row = logits[0, 0]
+        greedy = jnp.argmax(row, axis=-1).astype(jnp.int32)
+        sampled = jax.random.categorical(
+            sub, row / jnp.maximum(temp, 1e-6)).astype(jnp.int32)
+        nxt = jnp.where(temp > 0.0, sampled, greedy)
+        c = jax.tree_util.tree_map(
+            lambda t, a: jnp.squeeze(t, axis=a), c, axes)
+        return nxt, c, key
+
+    vone = jax.vmap(one, in_axes=(None, 0, axes, 0, 0, 0),
+                    out_axes=(0, axes, 0))
+
+    def chunk(params, cache, tok, lengths, keys, temps):
+        def step(carry, _):
+            tok, cache, lengths, keys = carry
+            nxt, cache, keys = vone(params, tok, cache, lengths, keys,
+                                    temps)
+            lengths = lengths + 1
+            if max_len is not None:
+                lengths = jnp.minimum(lengths, max_len)
+            return (nxt, cache, lengths, keys), nxt
+
+        (tok, cache, lengths, keys), toks = jax.lax.scan(
+            step, (tok, cache, lengths, keys), None, length=n_steps)
+        return toks.T, cache, lengths, keys
+
+    jitted = jax.jit(chunk)
+    _STATS["builds"] += 1
+
+    def counted(params, cache, tok, lengths, keys, temps):
+        _STATS["dispatches"] += 1
+        return jitted(params, cache, tok, lengths, keys, temps)
+
+    counted.jitted = jitted
+    return counted
+
+
 def generate(params, prompt_tokens: jnp.ndarray, n_new: int,
              cfg: ModelConfig, xcfg: ExchangeConfig, *,
              batch_extras: Optional[Dict[str, Any]] = None, seed: int = 0,

@@ -35,6 +35,7 @@ from repro.api.plan import ExecutionPlan
 from repro.core.perfmap import PerfEntry, PerfKey, PerfMap
 from repro.core.policy import (AdaptivePolicy, Decision, Objective,
                                ObjectiveLike, resolve_objective)
+from repro.utils.bandwidth import BandwidthEstimator
 
 
 @dataclasses.dataclass
@@ -117,8 +118,11 @@ class InferenceSession:
         self.temperature = temperature
         self._allow = allow_modes
         self._policy: Optional[AdaptivePolicy] = None
-        self._bw = initial_bandwidth_mbps
-        self._alpha = bandwidth_alpha
+        self._bwest = BandwidthEstimator(initial_bandwidth_mbps,
+                                         bandwidth_alpha)
+        # plan → {(kind, *shape): compiled slot-pool executable}
+        self._serve_execs: Dict[Any, Dict] = {}
+        self._admit_fn = None
         self.history: List[DispatchRecord] = []
         self._calibrated_upto = 0
         self.perfmap = perfmap
@@ -240,11 +244,24 @@ class InferenceSession:
 
     def observe_bandwidth(self, mbps: float) -> None:
         """EWMA bandwidth probe update (the caller measures the link)."""
-        self._bw = self._alpha * mbps + (1 - self._alpha) * self._bw
+        self._bwest.observe(mbps)
 
     @property
     def bandwidth(self) -> float:
-        return self._bw
+        return self._bwest.mbps
+
+    # `_bw` predates BandwidthEstimator; tests pin the EWMA state through it
+    @property
+    def _bw(self) -> float:
+        return self._bwest.mbps
+
+    @_bw.setter
+    def _bw(self, mbps: float) -> None:
+        self._bwest.reset(mbps)
+
+    @property
+    def _alpha(self) -> float:
+        return self._bwest.alpha
 
     # -- adaptive dispatch ---------------------------------------------------
 
@@ -255,19 +272,27 @@ class InferenceSession:
                                   else bandwidth_mbps,
                                   objective or self.objective)
 
-    def _exec_key_for(self, d: Decision) -> Tuple[str, bool]:
-        """Decision → registered executable key, with recorded fallback:
-        same-mode executable at another CR first, then any executable."""
-        key = "local" if d.mode == "local" else f"{d.mode}@{d.cr:g}"
-        if key in self._execs:
-            return key, False
-        same_mode = next((k for k in self._execs if k.split("@")[0] == d.mode),
-                         None)
+    def plan_for_key(self, exec_key: str) -> Tuple[str, ExecutionPlan]:
+        """Executable id → registered plan, with the canonical fallback
+        order: exact key, then same-mode plan at another CR, then any
+        registered plan (used by dispatch and the serving runtime)."""
+        if exec_key in self.plans:
+            return exec_key, self.plans[exec_key]
+        mode = exec_key.split("@")[0]
+        same_mode = next((k for k in self.plans
+                          if k.split("@")[0] == mode), None)
         if same_mode is not None:
-            return same_mode, True
-        if not self._execs:
+            return same_mode, self.plans[same_mode]
+        if not self.plans:
             raise LookupError("no executables registered")
-        return next(iter(self._execs)), True
+        key = next(iter(self.plans))
+        return key, self.plans[key]
+
+    def _exec_key_for(self, d: Decision) -> Tuple[str, bool]:
+        """Decision → registered executable key + whether a fallback plan
+        was substituted for the decided one."""
+        key, _ = self.plan_for_key(d.exec_key)
+        return key, key != d.exec_key
 
     def dispatch(self, batch_inputs: Any,
                  batch_size: Optional[int] = None) -> Any:
@@ -376,7 +401,7 @@ class InferenceSession:
         (or the first registered one).
         """
         from repro.api import generation as gen
-        plan = plan or self.plans.get("local") or next(iter(self.plans.values()))
+        plan = self._plan_or_default(plan)
         T = self.temperature if temperature is None else temperature
         # cache by the full plan, not plan.key: distinct plans (e.g. two
         # prism_sim L values) can share a key but need distinct executables
@@ -385,6 +410,84 @@ class InferenceSession:
                             batch_extras=batch_extras, seed=seed,
                             temperature=T, prefill_mode=prefill_mode,
                             _cache=self._decode_execs.setdefault(plan, {}))
+
+    # -- slot-pool serving primitives (used by repro.serving) ----------------
+
+    def _plan_or_default(self, plan: Optional[ExecutionPlan]) -> ExecutionPlan:
+        return (plan or self.plans.get("local")
+                or next(iter(self.plans.values())))
+
+    def _serve_exec(self, plan: ExecutionPlan, key: Tuple, build):
+        fns = self._serve_execs.setdefault(plan, {})
+        if key not in fns:
+            fns[key] = build()
+        return fns[key]
+
+    def init_slot_pool(self, n_slots: int, max_len: int):
+        """Pooled decode cache with one slot (batch row) per in-flight
+        request — the state `prime_slot`/`decode_chunk` operate on."""
+        from repro.api import generation as gen
+        from repro.models import transformer as tfm
+        if not gen.supports_slot_pool(self.cfg):
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} cannot share a slot pool "
+                f"(supported: {gen.SLOT_POOL_FAMILIES})")
+        return tfm.init_decode_cache(self.cfg, n_slots, max_len)
+
+    def prime_slot(self, prompt_tokens, *, total_len: int,
+                   plan: Optional[ExecutionPlan] = None, seed: int = 0,
+                   temperature: Optional[float] = None,
+                   prefill_mode: str = "auto"):
+        """Prefill ONE request (prompt ``[1, T0]``) against a fresh cache of
+        the pool's length → ``(tok0 [1,1], cache, key)`` — exactly the front
+        half of :meth:`generate`, compiled per (plan, T0, total_len)."""
+        import jax
+        from repro.api import generation as gen
+        if not gen.supports_slot_pool(self.cfg):
+            raise NotImplementedError(
+                f"family {self.cfg.family!r} cannot be slot-primed "
+                f"(supported: {gen.SLOT_POOL_FAMILIES}); audio/vlm need "
+                "per-request memory extras — use session.generate")
+        plan = self._plan_or_default(plan)
+        T = self.temperature if temperature is None else temperature
+        B, T0 = prompt_tokens.shape
+        # temperature is a traced argument, NOT part of the cache key —
+        # per-request temperatures must not recompile the prefill
+        fn = self._serve_exec(
+            plan, ("prefill", B, T0, int(total_len), prefill_mode),
+            lambda: gen.build_prefill_fn(self.cfg, plan.to_exchange_config(),
+                                         total_len=total_len,
+                                         prefill_mode=prefill_mode))
+        return fn(self.params, prompt_tokens, {}, jax.random.key(seed),
+                  float(T))
+
+    def admit_slot(self, pool, tok, lengths, keys, temps, request_cache,
+                   slot: int, tok0, length0: int, key0, temp0: float):
+        """Fused admission (cache scatter + per-slot state updates) in one
+        jitted executable → ``(pool, tok, lengths, keys, temps)``."""
+        from repro.api import generation as gen
+        if self._admit_fn is None:
+            self._admit_fn = gen.build_admit_fn(self.cfg)
+        return self._admit_fn(pool, tok, lengths, keys, temps,
+                              request_cache, slot, tok0, length0, key0,
+                              temp0)
+
+    def decode_chunk(self, pool, tok, lengths, keys, temps, *,
+                     n_steps: int, plan: Optional[ExecutionPlan] = None,
+                     max_len: Optional[int] = None):
+        """``n_steps`` continuous-batching decode steps over every slot →
+        ``(tokens [S, n_steps], pool, lengths, keys)``; compiled once per
+        (plan, slot-count, n_steps) and reused across admissions.
+        ``temps [S]`` carries each slot's sampling temperature (≤0 =
+        greedy), so requests with different temperatures share one pool."""
+        from repro.api import generation as gen
+        plan = self._plan_or_default(plan)
+        fn = self._serve_exec(
+            plan, ("chunk", int(tok.shape[0]), int(n_steps), max_len),
+            lambda: gen.build_decode_chunk_fn(
+                self.cfg, plan.to_exchange_config(), n_steps=n_steps,
+                max_len=max_len))
+        return fn(self.params, pool, tok, lengths, keys, temps)
 
     # -- explanation (the paper's reported artifacts) ------------------------
 

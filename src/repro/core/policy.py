@@ -22,11 +22,12 @@ from repro.profiling.objectives import (EnergyObjective, LatencyObjective,
                                         Objective, ObjectiveLike,
                                         SLOObjective, WeightedObjective,
                                         resolve_objective)
-from repro.profiling.table import Decision, PolicyTable
+from repro.profiling.table import BatchPlan, Decision, PolicyTable
 
-__all__ = ["AdaptivePolicy", "Decision", "Objective", "ObjectiveLike",
-           "LatencyObjective", "EnergyObjective", "WeightedObjective",
-           "SLOObjective", "resolve_objective", "PolicyTable"]
+__all__ = ["AdaptivePolicy", "BatchPlan", "Decision", "Objective",
+           "ObjectiveLike", "LatencyObjective", "EnergyObjective",
+           "WeightedObjective", "SLOObjective", "resolve_objective",
+           "PolicyTable"]
 
 
 class AdaptivePolicy:

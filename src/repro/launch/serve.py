@@ -1,12 +1,23 @@
-"""Sharded serving launcher: prefill + adaptive batched decode.
+"""Serving launcher: policy-driven request traffic over `ServingRuntime`.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-        [--mode prism|local|adaptive] [--devices 8] [--tokens 16] \
+        [--mode prism|local|adaptive] [--requests 12] [--arrival-rate 50] \
+        [--slo-ms 5000] [--slots 4] [--chunk 8] [--tokens 16] \
         [--bandwidth 400] [--objective latency|energy]
 
-``--mode adaptive`` profiles through the ``simulated`` backend
-(`repro.profiling`) and routes local-vs-PRISM from the compiled policy
-table at the given ``--bandwidth`` and ``--objective``.
+The hand-rolled per-token decode loop is gone: requests flow through the
+bounded queue → adaptive scheduler (micro-batches formed from the compiled
+policy table at ``--bandwidth``/``--objective``) → continuous-batching
+slot-pool decode (the compiled ``lax.scan`` fast path).  ``--mode local`` /
+``--mode prism`` pin the executable family; ``--mode adaptive`` lets the
+policy route.  Legacy flags (``--devices --batch --prompt-len --L``) keep
+working: ``--batch`` sizes the slot pool and doubles as the default request
+count.
+
+NOTE: PRISM here runs in its single-host simulation form (``prism_sim`` —
+same math, unpartitioned tensors); the serving slot pool is not
+mesh-sharded yet.  Genuinely sequence-sharded decode over a device mesh is
+exercised by ``scripts/sanity_e2e_distributed.py`` and ``launch/dryrun.py``.
 """
 import argparse
 import os
@@ -22,8 +33,6 @@ if __name__ == "__main__":
 
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 
@@ -32,79 +41,85 @@ def main():
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--mode", default="prism",
                     choices=["prism", "local", "adaptive"])
-    ap.add_argument("--devices", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--devices", type=int, default=8)   # legacy (XLA flag)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="slot-pool size (legacy: batch width)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--L", type=int, default=4)
     ap.add_argument("--bandwidth", type=float, default=400.0,
-                    help="observed link bandwidth (Mbps) for --mode adaptive")
+                    help="observed link bandwidth (Mbps) for the policy")
     ap.add_argument("--objective", default="latency",
                     choices=["latency", "energy"])
+    ap.add_argument("--requests", type=int, default=0,
+                    help="number of requests to simulate (default: --batch)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrival rate, req/s (0 = burst at t=0)")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="per-request latency SLO (0 = best effort)")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="slot-pool size (default: --batch)")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="decode steps per continuous-batching chunk")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    from repro.api import AdaptivePolicy, ExecutionPlan
-    from repro.configs import get_config
-    from repro.models import registry, transformer as tfm
-    from repro.sharding.specs import (batch_shardings, cache_shardings,
-                                      param_shardings)
+    from repro.api import ExecutionPlan, InferenceSession
+    from repro.serving import ServingRuntime
 
-    mode = args.mode
-    if mode == "adaptive":
-        from repro.profiling import ProfileContext, SweepSpec, get_backend
-        pm = get_backend("simulated").profile(ProfileContext(), SweepSpec())
-        d = AdaptivePolicy(pm).decide(args.batch, args.bandwidth,
-                                      args.objective)
-        mode = "prism" if d.distributed else "local"
-        print(f"adaptive: B={args.batch} BW={args.bandwidth:g} Mbps "
-              f"[{args.objective}] → {d.mode}"
-              + (f" CR={d.cr:g}" if d.cr else "")
-              + f" ({d.expected.per_sample_ms:.1f} ms/sample expected"
-              + (", EXTRAPOLATED batch" if d.extrapolated else "") + ")")
+    allow = {"local": ("local",), "prism": ("prism",),
+             "adaptive": None}[args.mode]
+    session = InferenceSession.from_config(
+        args.arch, reduced={"vocab_size": 512},
+        plans=[ExecutionPlan.local(),
+               ExecutionPlan.prism_sim(L=args.L, cr=9.9)],
+        objective=args.objective, allow_modes=allow,
+        initial_bandwidth_mbps=args.bandwidth)
+    session.profile(backend="simulated")        # paper's offline sweep
+    d = session.decide(args.batch)
+    print(f"policy: B={args.batch} BW={args.bandwidth:g} Mbps "
+          f"[{args.objective}] → {d.mode}"
+          + (f" CR={d.cr:g}" if d.cr else "")
+          + f" ({d.expected.per_sample_ms:.1f} ms/sample expected"
+          + (", EXTRAPOLATED batch" if d.extrapolated else "") + ")")
 
-    n_model = 2 if args.devices >= 4 else 1
-    from repro.utils.compat import make_auto_mesh
-    mesh = make_auto_mesh((args.devices // n_model, n_model),
-                          ("data", "model"))
-    cfg = get_config(args.arch).reduced(vocab_size=512)
-    eplan = (ExecutionPlan.local() if mode == "local" else
-             ExecutionPlan.prism(L=args.L, seq_axis="model",
-                                 seq_shards=n_model))
-    plan = eplan.sharding_plan(mesh, cfg, decode=True)
-    S = args.prompt_len + args.tokens
-    rng = np.random.RandomState(0)
+    n_req = args.requests or args.batch
+    n_slots = args.slots or args.batch
+    rng = np.random.RandomState(args.seed)
+    # three prompt-length buckets, not a continuum: prime_slot compiles one
+    # prefill per distinct (length, pool) shape, and mid-traffic compiles
+    # would swamp the reported latencies
+    buckets = sorted({max(args.prompt_len // 2, 1), args.prompt_len,
+                      args.prompt_len + args.prompt_len // 2})
+    lens = [buckets[rng.randint(len(buckets))] for _ in range(n_req)]
+    gaps = (rng.exponential(1.0 / args.arrival_rate, n_req)
+            if args.arrival_rate > 0 else np.zeros(n_req))
+    arrivals = np.cumsum(gaps)
+    prompts = [rng.randint(0, session.cfg.vocab_size, t) for t in lens]
+    max_len = max(buckets) + args.tokens
+    rt = ServingRuntime(session, n_slots=n_slots, chunk=args.chunk,
+                        max_len=max_len)
 
-    from repro.utils.compat import set_mesh as _set_mesh
-    with _set_mesh(mesh):
-        params = registry.init_params(cfg, seed=0)
-        params = jax.device_put(params, param_shardings(plan, cfg, params))
-        cache = tfm.init_decode_cache(cfg, args.batch, S)
-        cache = jax.device_put(cache, cache_shardings(plan, cfg, cache))
-        dec = jax.jit(lambda p, b, c, i: tfm.decode_step(p, b, c, i, cfg,
-                                                         plan.xcfg),
-                      donate_argnums=(2,))
-        prompt = jnp.asarray(rng.randint(0, cfg.vocab_size,
-                                         (args.batch, args.prompt_len)))
-        tok = prompt[:, :1]
-        out = []
-        t0 = time.perf_counter()
-        for t in range(S - 1):
-            logits, cache = dec(params, {"tokens": tok}, cache, t)
-            if t + 1 < args.prompt_len:
-                tok = prompt[:, t + 1:t + 2]
-            else:
-                tok = jnp.argmax(logits, -1).astype(jnp.int32)
-                out.append(tok)
-            if len(out) >= args.tokens:
-                break
-        jax.block_until_ready(logits)
-        dt = time.perf_counter() - t0
-        toks = np.concatenate([np.asarray(t) for t in out], 1)
-        print(f"mesh {dict(mesh.shape)} mode={mode}: generated "
-              f"{toks.shape} in {dt:.2f}s "
-              f"({args.batch * args.tokens / dt:.1f} tok/s host wall)")
-        print(toks[:2])
-        print("SERVE OK")
+    t_start = time.monotonic()
+    comps = rt.drive(prompts, arrivals, args.tokens,
+                     slo_ms=args.slo_ms or None, poll_s=0.01)
+    dt = time.monotonic() - t_start
+
+    lats = [c.latency_ms for c in comps]
+    total_toks = sum(len(c.tokens) for c in comps)
+    by_plan = {}
+    for c in comps:
+        by_plan[c.plan_key] = by_plan.get(c.plan_key, 0) + 1
+    print(f"served {len(comps)} requests ({total_toks} tokens) in {dt:.2f}s "
+          f"→ {total_toks / dt:.1f} tok/s host wall")
+    print(f"latency p50 {np.percentile(lats, 50):.0f} ms  "
+          f"p99 {np.percentile(lats, 99):.0f} ms  "
+          f"plans {by_plan}  max concurrent {rt.stats['max_concurrent']}")
+    if args.slo_ms:
+        met = sum(1 for c in comps if c.slo_met)
+        print(f"SLO {args.slo_ms:g} ms: {met}/{len(comps)} met")
+    print(np.stack([c.tokens for c in comps[:2]]))
+    print("SERVE OK")
 
 
 if __name__ == "__main__":

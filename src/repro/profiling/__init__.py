@@ -27,7 +27,7 @@ from repro.profiling.objectives import (EnergyObjective, LatencyObjective,
 from repro.profiling.sweep import (PAPER_BATCHES, PAPER_BWS, PAPER_CRS,
                                    SweepSpec, sweep_cost,
                                    workload_from_config)
-from repro.profiling.table import Decision, PolicyTable
+from repro.profiling.table import BatchPlan, Decision, PolicyTable
 from repro.profiling.backends import (MeasuredBackend, ProfileBackend,
                                       ProfileContext, SimulatedBackend,
                                       TraceBackend, get_backend,
@@ -41,7 +41,7 @@ __all__ = [
     "PRESET_HARDWARE", "PRESET_LINKS",
     "Objective", "ObjectiveLike", "LatencyObjective", "EnergyObjective",
     "WeightedObjective", "SLOObjective", "resolve_objective",
-    "PolicyTable", "Decision",
+    "PolicyTable", "Decision", "BatchPlan",
     "SweepSpec", "sweep_cost", "workload_from_config",
     "PAPER_BATCHES", "PAPER_CRS", "PAPER_BWS",
 ]

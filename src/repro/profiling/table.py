@@ -26,6 +26,23 @@ Candidate = Tuple[str, float]         # (mode, cr)
 
 
 @dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """One scheduler query: how to serve ``n_queued`` requests next.
+
+    ``batch`` is the profiled grid point to form (pad with ``padded`` empty
+    slots when the queue is shorter than the cheapest grid batch);
+    ``n_admit`` requests actually ride it.  ``extrapolated`` mirrors
+    :class:`Decision` — the queue depth fell outside the profiled grid.
+    """
+    batch: int                  # profiled grid batch to form
+    n_admit: int                # requests admitted (≤ batch)
+    padded: int                 # empty slots in the formed batch
+    decision: "Decision"        # mode/CR chosen at that grid point
+    per_request_cost: float     # objective cost per admitted request
+    extrapolated: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
 class Decision:
     mode: str                  # "local" | "prism" | "voltage"
     cr: float                  # 0.0 unless prism
@@ -36,6 +53,13 @@ class Decision:
     @property
     def distributed(self) -> bool:
         return self.mode != "local"
+
+    @property
+    def exec_key(self) -> str:
+        """Canonical executable id this decision routes to — the ONE home
+        of the ``"local"`` / ``"mode@cr"`` convention (matches
+        ``ExecutionPlan.key``)."""
+        return self.mode if self.cr <= 0 else f"{self.mode}@{self.cr:g}"
 
 
 def _lerp_entry(a: PerfEntry, b: PerfEntry, t: float) -> PerfEntry:
@@ -187,6 +211,44 @@ class PolicyTable:
                 label = bandwidth_mbps
         return [(PerfKey(m, b, cr, 0.0 if m == "local" else label), e)
                 for (m, cr), e in cell.items()]
+
+    # -- batch formation (serving scheduler) ----------------------------------
+
+    def plan_batch(self, n_queued: int, bandwidth_mbps: float,
+                   max_batch: Optional[int] = None) -> BatchPlan:
+        """Pick the profiled batch size (and its mode/CR decision) that
+        minimizes this table's objective cost **per queued request**.
+
+        Grid batches larger than the queue are still candidates — their
+        padded slots are charged to the admitted requests
+        (``cost·batch/n_admit``), so a nearly-full grid batch can win while
+        a mostly-empty one cannot.  ``max_batch`` caps the candidate set
+        (e.g. to the runtime's free slot count); queue depths outside the
+        profiled grid mark the plan ``extrapolated``.
+        """
+        if n_queued <= 0:
+            raise ValueError("plan_batch needs n_queued >= 1")
+        if max_batch is not None and max_batch <= 0:
+            raise ValueError("plan_batch needs max_batch >= 1 (or None)")
+        cands = [b for b in self.batches
+                 if max_batch is None or b <= max_batch]
+        if not cands:
+            # no grid batch fits under max_batch: form the smallest grid
+            # point (executables exist only at grid shapes) but admit no
+            # more than the caller's cap
+            cands = [self.batches[0]]
+        best: Optional[BatchPlan] = None
+        for b in cands:
+            d = self.decide(b, bandwidth_mbps)
+            n_admit = min(b, n_queued,
+                          max_batch if max_batch is not None else b)
+            cost = self.objective.cost(d.expected) * b / n_admit
+            if best is None or cost < best.per_request_cost:
+                best = BatchPlan(batch=b, n_admit=n_admit,
+                                 padded=b - n_admit, decision=d,
+                                 per_request_cost=cost,
+                                 extrapolated=self.is_extrapolated(n_queued))
+        return best
 
     # -- table-derived crossover artifacts ------------------------------------
 

@@ -38,9 +38,36 @@ class ElasticMeshManager:
         mesh = jax.sharding.Mesh(devs, axis_names)
         return mesh, make_plan(mesh, self.cfg, self.mode, L=self.L)
 
-    def drop(self, n_failed: int):
-        """Remove failed devices and return the largest viable mesh."""
-        self.devices = self.devices[:len(self.devices) - n_failed]
+    def drop(self, failed, rebuild: bool = True):
+        """Remove failed devices and return the largest viable mesh.
+
+        ``failed`` is either an iterable of failed devices (device objects
+        — matched by identity/equality — or their ``.id``s) or — the
+        legacy overload — an int count, which truncates the tail of the
+        device list.  Passing explicit ids matters: the tail-truncation
+        heuristic used to evict *healthy* devices whenever the failed one
+        was not last.  ``rebuild=False`` skips mesh construction (callers
+        that only track membership, e.g. tests without a real fleet).
+        """
+        if isinstance(failed, (int, np.integer)):
+            if failed < 0 or failed > len(self.devices):
+                raise ValueError(f"cannot drop {failed} of "
+                                 f"{len(self.devices)} devices")
+            self.devices = self.devices[:len(self.devices) - failed]
+        else:
+            failed = list(failed)
+            dead_idx = set()
+            for f in failed:
+                hit = [i for i, d in enumerate(self.devices)
+                       if d is f or d == f or getattr(d, "id", None) == f]
+                if not hit:
+                    raise ValueError(f"failed device {f!r} is not in the "
+                                     "healthy device set")
+                dead_idx.update(hit)
+            self.devices = [d for i, d in enumerate(self.devices)
+                            if i not in dead_idx]
+        if not rebuild:
+            return None
         return self.best_mesh()
 
     def best_mesh(self):

@@ -44,6 +44,17 @@ class HeartbeatMonitor:
     def fail(self, node: str) -> None:
         self._failed.add(node)
 
+    def revive(self, node: str) -> None:
+        """The controller replaced/recovered the node: clear its failure
+        and restart its deadline."""
+        self._failed.discard(node)
+        self.beat(node)
+
+    def remove(self, node: str) -> None:
+        """Drop the node from tracking entirely (it left the fleet)."""
+        self._failed.discard(node)
+        self._last.pop(node, None)
+
     def dead_nodes(self) -> List[str]:
         now = self._clock()
         out = [n for n, t in self._last.items()
@@ -107,8 +118,7 @@ class FaultTolerantLoop:
                     state = self.ckpt.restore(state)
                     step = latest
                 for n in dead:       # controller replaces / drops the node
-                    self.monitor._failed.discard(n)
-                    self.monitor.beat(n)
+                    self.monitor.revive(n)
                 self.events.append(FaultEvent("restart",
                                               f"resume step {step}", step))
             batch = self.batch_fn(step)

@@ -43,11 +43,34 @@ class StragglerMitigator:
 
     def rebalanced_partitions(self, n_tokens: int, seg_size: int
                               ) -> List[int]:
-        """Token counts per device ∝ measured speed, quantized to segments."""
+        """Token counts per device ∝ measured speed, quantized to segments.
+
+        Every device keeps at least one segment and the counts always sum to
+        ``(n_tokens // seg_size) · seg_size`` (= ``n_tokens`` when it is
+        segment-aligned): rounding drift is repaired by largest-remainder
+        allocation instead of dumping a possibly-negative correction on the
+        fastest device (which under extreme skew used to drive its partition
+        to zero or below).
+        """
+        total = n_tokens // seg_size
+        if total < self.n_devices:
+            raise ValueError(
+                f"{n_tokens} tokens / seg_size {seg_size} yield {total} "
+                f"segments — fewer than {self.n_devices} devices (every "
+                "device needs at least one segment)")
         speed = 1.0 / np.maximum(self._ema, 1e-9)
-        share = speed / speed.sum() * n_tokens
-        segs = np.maximum(np.round(share / seg_size).astype(int), 1)
-        # fix rounding drift onto the fastest device
-        drift = n_tokens // seg_size - segs.sum()
-        segs[int(np.argmax(speed))] += drift
+        share = speed / speed.sum() * total
+        segs = np.maximum(np.floor(share).astype(int), 1)
+        frac = share - np.floor(share)
+        # grant leftover segments by largest fractional remainder
+        # (fastest-first on ties); reclaim overdraft from the devices with
+        # the most segments (slowest-first on ties), never below one
+        while segs.sum() < total:
+            i = int(np.lexsort((-speed, -frac))[0])
+            segs[i] += 1
+            frac[i] = -1.0
+        while segs.sum() > total:
+            donors = np.where(segs > 1)[0]
+            i = donors[int(np.lexsort((speed[donors], -segs[donors]))[0])]
+            segs[i] -= 1
         return list(segs * seg_size)

@@ -1,12 +1,31 @@
-"""Legacy serving layer — superseded by :mod:`repro.api`.
+"""`repro.serving` — the policy-driven serving runtime.
 
-``AdaptiveDispatcher`` and ``ServeEngine`` are deprecation shims;
-``repro.api.InferenceSession`` is the supported runtime surface. The step
-builders stay canonical for dry-run shape analysis.
+Request traffic goes queue → scheduler → runtime:
+
+* :class:`Request` / :class:`RequestQueue` — bounded intake with arrival
+  timestamps and per-request SLO deadlines.
+* :class:`AdaptiveScheduler` — micro-batch formation from the compiled
+  policy table (batch size AND mode/CR chosen per the active objective).
+* :class:`ServingRuntime` — continuous-batching decode on a slot-based
+  KV-cache pool (admit between chunks, evict finished, one executable per
+  (plan, slot-count)), with fault/straggler hooks.
+
+``AdaptiveDispatcher`` and ``ServeEngine`` are deprecation shims slated for
+removal (``repro.api.InferenceSession`` / :class:`ServingRuntime` replace
+them); the step builders stay canonical for dry-run shape analysis.
 """
 from repro.serving.dispatcher import AdaptiveDispatcher, DispatchRecord
-from repro.serving.engine import (ServeEngine, build_decode_step,
+from repro.serving.engine import (Completion, ServeEngine, ServingRuntime,
+                                  SlotPool, build_decode_step,
                                   build_prefill_step)
+from repro.serving.queue import QueueFull, Request, RequestQueue
+from repro.serving.scheduler import (AdaptiveScheduler, FailoverEvent,
+                                     FaultHook, MicroBatch, RebalanceEvent,
+                                     StragglerHook)
 
-__all__ = ["ServeEngine", "build_prefill_step", "build_decode_step",
+__all__ = ["Request", "RequestQueue", "QueueFull",
+           "AdaptiveScheduler", "MicroBatch",
+           "ServingRuntime", "SlotPool", "Completion",
+           "FaultHook", "StragglerHook", "FailoverEvent", "RebalanceEvent",
+           "ServeEngine", "build_prefill_step", "build_decode_step",
            "AdaptiveDispatcher", "DispatchRecord"]

@@ -34,25 +34,29 @@ class AdaptiveDispatcher:
                  bandwidth_alpha: float = 0.3):
         """``executables``: {"local": fn, "prism@9.9": fn, ...} — each fn
         takes the request batch pytree and returns outputs."""
-        warnings.warn("AdaptiveDispatcher is deprecated; use "
-                      "repro.api.InferenceSession", DeprecationWarning,
-                      stacklevel=2)
+        warnings.warn("AdaptiveDispatcher is deprecated and will be removed "
+                      "in the next release; use repro.api.InferenceSession",
+                      DeprecationWarning, stacklevel=2)
+        from repro.utils.bandwidth import BandwidthEstimator
         self.policy = AdaptivePolicy(perfmap)
         self.execs = executables
         self.objective: Objective = objective
-        self._bw = 400.0
-        self._alpha = bandwidth_alpha
+        self._bwest = BandwidthEstimator(400.0, bandwidth_alpha)
         self.history: list[DispatchRecord] = []
 
     def observe_bandwidth(self, mbps: float) -> None:
-        self._bw = self._alpha * mbps + (1 - self._alpha) * self._bw
+        self._bwest.observe(mbps)
 
     @property
     def bandwidth(self) -> float:
-        return self._bw
+        return self._bwest.mbps
+
+    @property
+    def _bw(self) -> float:
+        return self._bwest.mbps
 
     def _key(self, d: Decision) -> str:
-        return "local" if d.mode == "local" else f"{d.mode}@{d.cr:g}"
+        return d.exec_key
 
     def dispatch(self, batch_inputs: Any, batch_size: int) -> Any:
         d = self.policy.decide(batch_size, self._bw, self.objective)

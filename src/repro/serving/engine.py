@@ -1,25 +1,43 @@
-"""Serving engine: prefill / decode step builders + a batched request loop.
+"""Serving runtime: continuous-batching decode on a slot-based KV-cache pool.
 
-NOTE: ``ServeEngine`` is a deprecation shim — ``repro.api.InferenceSession``
-(``session.generate(...)``) is the supported generation surface. The step
-builders (``build_prefill_step`` / ``build_decode_step``) remain the
-canonical jit targets for the dry-run ``decode_*``/``long_*`` shapes.
+``ServingRuntime`` is the request-level serving loop the ROADMAP's
+"heavy traffic" north-star needs: a bounded :class:`RequestQueue` feeds an
+:class:`AdaptiveScheduler` that forms micro-batches from the compiled policy
+table; admitted requests are prefilled one-by-one (``session.prime_slot``,
+exactly ``generate``'s front half) and scattered into free rows of a pooled
+decode cache; decode then runs in fixed-size chunks over ALL slots in one
+jitted executable per (plan, slot-count) — new requests are admitted into
+freed slots *between* chunks, finished sequences are evicted, and per-slot
+PRNG keys keep every request token-exact with a sequential
+``session.generate`` (greedy or sampled).
 
-``serve_step`` is one-token decode against a sequence-sharded KV cache, with
-greedy/temperature sampling; adaptive LOCAL-vs-PRISM routing lives in
-``repro.api.InferenceSession.dispatch``.
+Fault/straggler wiring: a :class:`FaultHook` (heartbeat miss → elastic
+re-mesh → re-admit in-flight requests) and a :class:`StragglerHook`
+(observed per-device step times → partition rebalance proposal) plug into
+``step()``.
+
+The legacy step builders (``build_prefill_step``/``build_decode_step``)
+remain the canonical jit targets for dry-run shape analysis.  ``ServeEngine``
+is a deprecation shim scheduled for removal (use
+``InferenceSession.generate`` / ``ServingRuntime``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.exchange import ExchangeConfig
 from repro.models import registry
 from repro.models import transformer as tfm
+from repro.serving.queue import Request, RequestQueue
+from repro.serving.scheduler import (AdaptiveScheduler, FaultHook,
+                                     MicroBatch, StragglerHook)
 
 
 def build_prefill_step(cfg: ModelConfig, xcfg: ExchangeConfig) -> Callable:
@@ -49,12 +67,357 @@ from repro.api.generation import sample_token  # noqa: E402,F401
 
 
 @dataclasses.dataclass
+class Completion:
+    """One finished request with its serving telemetry."""
+    request_id: int
+    tokens: np.ndarray                 # [n_new] generated token ids
+    plan_key: str                      # executable family that decoded it
+    arrival_ts: float
+    admitted_ts: float
+    finished_ts: float
+    slo_ms: Optional[float] = None
+    extrapolated: bool = False         # scheduled off the profiled grid
+
+    @property
+    def latency_ms(self) -> float:
+        return 1e3 * (self.finished_ts - self.arrival_ts)
+
+    @property
+    def queue_ms(self) -> float:
+        return 1e3 * (self.admitted_ts - self.arrival_ts)
+
+    @property
+    def slo_met(self) -> Optional[bool]:
+        if self.slo_ms is None:
+            return None
+        return self.latency_ms <= self.slo_ms
+
+
+@dataclasses.dataclass
+class _Active:
+    """Host-side bookkeeping for one occupied slot.
+
+    ``first_tok`` stays a device scalar until completion — pulling it at
+    admission would insert a host sync between prefill and the next decode
+    chunk.  ``tokens`` holds the chunk-produced tokens (the first generated
+    token is ``first_tok``, sampled by prefill)."""
+    request: Request
+    admitted_ts: float
+    exec_key: str
+    extrapolated: bool
+    first_tok: Any = None                  # [1, 1] device array
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def emitted(self) -> int:
+        return 1 + len(self.tokens)
+
+    @property
+    def done(self) -> bool:
+        return self.emitted >= self.request.n_new
+
+    def token_array(self) -> np.ndarray:
+        out = [int(np.asarray(self.first_tok)[0, 0])]
+        out.extend(self.tokens[:self.request.n_new - 1])
+        return np.asarray(out, np.int32)
+
+
+class SlotPool:
+    """One pooled decode cache + per-slot device state for one plan.
+
+    Slot state lives in four device arrays (pooled cache, current token
+    [S], write position [S], PRNG key [S]) so a decode chunk is ONE
+    executable; the request-to-slot map stays on the host.
+    """
+
+    def __init__(self, session, plan, n_slots: int, max_len: int):
+        self.session = session
+        self.plan = plan
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = session.init_slot_pool(n_slots, max_len)
+        self.tok = jnp.zeros((n_slots,), jnp.int32)
+        self.lengths = jnp.zeros((n_slots,), jnp.int32)
+        self.keys = jnp.stack([jax.random.key(0)] * n_slots)
+        self.temps = jnp.zeros((n_slots,), jnp.float32)
+        self.slots: List[Optional[_Active]] = [None] * n_slots
+
+    # -- occupancy -----------------------------------------------------------
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    # -- admission / eviction ------------------------------------------------
+
+    def admit(self, req: Request, slot: int, exec_key: str,
+              extrapolated: bool, now: float) -> _Active:
+        """Prefill one request and scatter it into ``slot``: after this the
+        slot decodes exactly like ``session.generate(prompt[None], ...)``."""
+        if self.slots[slot] is not None:
+            raise RuntimeError(f"slot {slot} is occupied")
+        if req.total_len > self.max_len:
+            raise ValueError(
+                f"request needs {req.total_len} positions but the pool is "
+                f"sized for {self.max_len}; raise ServingRuntime(max_len=)")
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        tok0, cache, key = self.session.prime_slot(
+            prompt, total_len=self.max_len, plan=self.plan, seed=req.seed,
+            temperature=req.temperature)
+        (self.cache, self.tok, self.lengths, self.keys, self.temps) = \
+            self.session.admit_slot(self.cache, self.tok, self.lengths,
+                                    self.keys, self.temps, cache, slot,
+                                    tok0, req.prompt_len, key,
+                                    req.temperature)
+        active = _Active(request=req, admitted_ts=now, exec_key=exec_key,
+                         extrapolated=extrapolated, first_tok=tok0)
+        self.slots[slot] = active
+        return active
+
+    def evict(self, slot: int) -> _Active:
+        act, self.slots[slot] = self.slots[slot], None
+        return act
+
+    def drain(self) -> List[Request]:
+        """Drop every in-flight request (fault re-admission path)."""
+        reqs = [s.request for s in self.slots if s is not None]
+        self.slots = [None] * self.n_slots
+        return reqs
+
+    # -- decode --------------------------------------------------------------
+
+    def decode_chunk(self, n_steps: int) -> float:
+        """One chunk over all slots; appends tokens to active requests and
+        returns the wall ms the chunk took (straggler signal)."""
+        t0 = time.perf_counter()
+        toks, self.cache, self.lengths, self.keys = \
+            self.session.decode_chunk(self.cache, self.tok, self.lengths,
+                                      self.keys, self.temps,
+                                      n_steps=n_steps, plan=self.plan,
+                                      max_len=self.max_len)
+        self.tok = toks[:, -1]
+        out = np.asarray(toks)
+        wall_ms = 1e3 * (time.perf_counter() - t0)
+        for i, act in enumerate(self.slots):
+            if act is None or act.done:
+                continue
+            need = act.request.n_new - act.emitted
+            act.tokens.extend(int(t) for t in out[i, :need])
+        return wall_ms
+
+
+class ServingRuntime:
+    """Policy-driven request serving over an :class:`InferenceSession`.
+
+    One ``step()`` = failover check → admissions (scheduler-formed
+    micro-batch into free slots) → one decode chunk per active pool →
+    evictions.  ``run()`` steps until queue and pools are empty.  Per-plan
+    pools keep decode executables at one per (plan, slot-count); all pools
+    share the session's params.
+
+    Memory note: every plan that receives traffic lazily allocates its own
+    ``n_slots``-row cache pool even though global concurrency is capped at
+    ``n_slots`` — with K plans in rotation the resident decode-cache HBM
+    is up to K× what the admitted load can use.  Budget-aware per-pool
+    sizing would need one chunk executable per (plan, residual-slot-count);
+    deliberately not done yet.
+    """
+
+    def __init__(self, session, *, n_slots: int = 4, chunk: int = 8,
+                 max_len: int = 256, queue_size: int = 1024,
+                 scheduler: Optional[AdaptiveScheduler] = None,
+                 fault_hook: Optional[FaultHook] = None,
+                 straggler_hook: Optional[StragglerHook] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        if n_slots <= 0 or chunk <= 0:
+            raise ValueError("n_slots and chunk must be >= 1")
+        self.session = session
+        self.n_slots = n_slots
+        self.chunk = chunk
+        self.max_len = max_len
+        self.queue = RequestQueue(queue_size)
+        self.scheduler = scheduler or AdaptiveScheduler(session)
+        self.fault_hook = fault_hook
+        self.straggler_hook = straggler_hook
+        self.clock = clock
+        self.pools: Dict[str, SlotPool] = {}
+        self.completions: List[Completion] = []
+        self.stats = {"steps": 0, "chunks": 0, "admitted": 0,
+                      "requeued": 0, "max_concurrent": 0}
+
+    # -- request intake ------------------------------------------------------
+
+    def submit(self, prompt, n_new: int, *, slo_ms: Optional[float] = None,
+               seed: int = 0, temperature: float = 0.0) -> Request:
+        return self.submit_request(
+            Request(prompt=np.asarray(prompt), n_new=n_new, slo_ms=slo_ms,
+                    seed=seed, temperature=temperature,
+                    arrival_ts=self.clock()))
+
+    def submit_request(self, req: Request) -> Request:
+        if req.total_len > self.max_len:
+            raise ValueError(
+                f"request needs {req.total_len} positions but max_len is "
+                f"{self.max_len}")
+        return self.queue.put(req)
+
+    # -- plan / pool resolution ----------------------------------------------
+
+    def _pool(self, exec_key: str) -> SlotPool:
+        key, plan = self.session.plan_for_key(exec_key)
+        pool = self.pools.get(key)
+        if pool is None:
+            pool = self.pools[key] = SlotPool(self.session, plan,
+                                              self.n_slots, self.max_len)
+        return pool
+
+    def _free_slots(self) -> int:
+        used = sum(p.n_active for p in self.pools.values())
+        # pools share the slot budget conceptually; a fresh plan's pool
+        # allocates lazily, so "free" is the budget minus what is in flight
+        return max(self.n_slots - used, 0)
+
+    @property
+    def idle(self) -> bool:
+        """True when no request is in flight in any pool."""
+        return all(p.n_active == 0 for p in self.pools.values())
+
+    # -- the serving loop ----------------------------------------------------
+
+    def step(self) -> List[Completion]:
+        """One scheduling + decode round; returns completions it produced."""
+        self.stats["steps"] += 1
+        now = self.clock()
+        self._check_faults()
+        self._admit(now)
+        done: List[Completion] = []
+        for key, pool in self.pools.items():
+            if pool.n_active == 0:
+                continue
+            wall_ms = pool.decode_chunk(self.chunk)
+            self.stats["chunks"] += 1
+            self._observe_stragglers(pool, wall_ms)
+            fin = self.clock()
+            for i, act in enumerate(pool.slots):
+                if act is not None and act.done:
+                    pool.evict(i)
+                    done.append(Completion(
+                        request_id=act.request.id,
+                        tokens=act.token_array(),
+                        plan_key=key, arrival_ts=act.request.arrival_ts,
+                        admitted_ts=act.admitted_ts, finished_ts=fin,
+                        slo_ms=act.request.slo_ms,
+                        extrapolated=act.extrapolated))
+        self.completions.extend(done)
+        return done
+
+    def run(self, max_steps: int = 100_000) -> List[Completion]:
+        """Serve until the queue and every pool are empty."""
+        start = len(self.completions)
+        steps = 0
+        while (self.queue or not self.idle):
+            self.step()
+            steps += 1
+            if steps >= max_steps:
+                raise RuntimeError(f"run() exceeded {max_steps} steps")
+        return self.completions[start:]
+
+    def drive(self, prompts: Sequence, arrivals: Sequence[float], n_new,
+              *, seeds: Optional[Sequence[int]] = None,
+              slo_ms: Optional[float] = None,
+              temperatures: Optional[Sequence[float]] = None,
+              poll_s: float = 0.005) -> List[Completion]:
+        """Replay a real-time arrival schedule: submit request ``i`` once
+        ``arrivals[i]`` seconds have elapsed (``clock``-relative), stepping
+        the runtime in between and sleeping only when there is nothing to
+        do.  ``n_new`` is an int or a per-request sequence.  Returns the
+        completions this drive produced — the one arrival loop shared by
+        ``launch/serve.py`` and ``benchmarks/serve_throughput.py``."""
+        start = len(self.completions)
+        t0 = self.clock()
+        pending = list(range(len(prompts)))
+        while pending or self.queue or not self.idle:
+            now = self.clock() - t0
+            while pending and arrivals[pending[0]] <= now:
+                if len(self.queue) >= self.queue.max_size:
+                    break      # backpressure: resubmit after the next step
+                i = pending.pop(0)
+                self.submit(
+                    prompts[i],
+                    n_new[i] if not isinstance(n_new, int) else n_new,
+                    seed=seeds[i] if seeds is not None else i,
+                    slo_ms=slo_ms,
+                    temperature=(temperatures[i] if temperatures is not None
+                                 else 0.0))
+            if self.queue or not self.idle:
+                self.step()
+            elif pending:
+                time.sleep(min(max(arrivals[pending[0]] - now, 0.0),
+                               poll_s))
+        return self.completions[start:]
+
+    # -- admission -----------------------------------------------------------
+
+    def _admit(self, now: float) -> Optional[MicroBatch]:
+        free = self._free_slots()
+        mb = self.scheduler.next_batch(self.queue, free, idle=self.idle,
+                                       now=now)
+        if mb is None:
+            return None
+        pool = self._pool(mb.exec_key)
+        free_ids = pool.free_slots()
+        for req, slot in zip(mb.requests, free_ids):
+            pool.admit(req, slot, mb.exec_key, mb.extrapolated, now)
+            self.stats["admitted"] += 1
+        overflow = mb.requests[len(free_ids):]
+        for req in overflow:               # should not happen; be safe
+            self.queue.put(req, force=True)
+        self.stats["max_concurrent"] = max(
+            self.stats["max_concurrent"],
+            sum(p.n_active for p in self.pools.values()))
+        return mb
+
+    # -- hooks ---------------------------------------------------------------
+
+    def heartbeat(self, node: str) -> None:
+        if self.fault_hook is not None:
+            self.fault_hook.beat(node)
+
+    def _check_faults(self) -> None:
+        if self.fault_hook is None:
+            return
+        dead = self.fault_hook.check()
+        if not dead:
+            return
+        requeued = 0
+        for pool in self.pools.values():
+            for req in pool.drain():       # re-admit from scratch; these
+                # were already admitted once — the bound must not drop them
+                self.queue.put(req, force=True)
+                requeued += 1
+        self.stats["requeued"] += requeued
+        self.fault_hook.record(dead, requeued)
+
+    def _observe_stragglers(self, pool: SlotPool, wall_ms: float) -> None:
+        if self.straggler_hook is None:
+            return
+        # chunk walls are telemetry only — genuinely per-device step times
+        # must come from the fleet via hook.observe(times, n_tokens=...)
+        self.straggler_hook.observe_chunk(wall_ms, self.chunk)
+
+
+@dataclasses.dataclass
 class ServeEngine:
     """Legacy generation surface, now a thin veneer over the compiled
     fast path (`repro.api.generation`) — the per-token Python loop it used
     to duplicate is gone.
 
-    .. deprecated:: use ``repro.api.InferenceSession.generate`` instead.
+    .. deprecated:: superseded by ``repro.api.InferenceSession.generate``
+       (single batches) and :class:`ServingRuntime` (request traffic);
+       removed in the next release.
     """
     cfg: ModelConfig
     xcfg: ExchangeConfig
@@ -64,8 +427,10 @@ class ServeEngine:
 
     def __post_init__(self):
         import warnings
-        warnings.warn("ServeEngine is deprecated; use "
-                      "repro.api.InferenceSession.generate",
+        warnings.warn("ServeEngine is deprecated and will be removed in "
+                      "the next release; use "
+                      "repro.api.InferenceSession.generate or "
+                      "repro.serving.ServingRuntime",
                       DeprecationWarning, stacklevel=2)
         self._gen_fns: Dict[Any, Any] = {}
 

@@ -1,0 +1,123 @@
+"""Request queue for the serving runtime.
+
+A :class:`Request` is one generation job (prompt → ``n_new`` tokens) with an
+arrival timestamp and an optional per-request SLO deadline; the bounded
+:class:`RequestQueue` holds admitted-but-unscheduled requests and hands the
+scheduler deadline-ordered candidates.  PRISM-style systems treat
+distributed edge inference as a *request-serving* problem (arXiv
+2507.12145) — this module is the front door of that framing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Deque, List, Optional
+
+import numpy as np
+
+_ids = itertools.count()
+
+
+class QueueFull(RuntimeError):
+    """The bounded request queue rejected an arrival (backpressure)."""
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation job.
+
+    ``prompt`` is a 1-D token id array (length T0); ``slo_ms`` is the
+    per-request latency objective measured from ``arrival_ts`` (None = best
+    effort).  ``seed``/``temperature`` pin the sampling chain so a served
+    request is token-exact with ``session.generate(prompt[None], n_new,
+    seed=seed)``.
+    """
+    prompt: np.ndarray
+    n_new: int
+    slo_ms: Optional[float] = None
+    seed: int = 0
+    temperature: float = 0.0
+    arrival_ts: float = dataclasses.field(default_factory=time.monotonic)
+    id: int = dataclasses.field(default_factory=lambda: next(_ids))
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt)
+        if self.prompt.ndim == 2 and self.prompt.shape[0] == 1:
+            self.prompt = self.prompt[0]
+        if self.prompt.ndim != 1 or self.prompt.size == 0:
+            raise ValueError("prompt must be a non-empty 1-D token array, "
+                             f"got shape {self.prompt.shape}")
+        if self.n_new <= 0:
+            raise ValueError(f"n_new must be >= 1, got {self.n_new}")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.n_new
+
+    def deadline(self) -> float:
+        """Absolute deadline (monotonic clock); +inf when best-effort."""
+        if self.slo_ms is None:
+            return float("inf")
+        return self.arrival_ts + self.slo_ms / 1e3
+
+
+class RequestQueue:
+    """Bounded FIFO with earliest-deadline-first scheduling order.
+
+    ``put`` raises :class:`QueueFull` beyond ``max_size`` — serving systems
+    need explicit backpressure, not an unbounded buffer.  ``pop`` hands out
+    the earliest-deadline request (arrival order among equals), which is
+    what the scheduler admits into free slots.
+    """
+
+    def __init__(self, max_size: int = 1024):
+        if max_size <= 0:
+            raise ValueError("max_size must be >= 1")
+        self.max_size = max_size
+        self._q: Deque[Request] = deque()
+
+    def put(self, req: Request, force: bool = False) -> Request:
+        """``force=True`` bypasses the bound — reserved for the runtime
+        re-queuing work it already admitted (failover, overflow); dropping
+        an in-flight request to enforce backpressure would lose it."""
+        if not force and len(self._q) >= self.max_size:
+            raise QueueFull(f"queue at capacity ({self.max_size})")
+        self._q.append(req)
+        return req
+
+    def pop(self) -> Request:
+        """Earliest deadline first; FIFO among equal deadlines."""
+        if not self._q:
+            raise IndexError("pop from empty RequestQueue")
+        best_i = min(range(len(self._q)),
+                     key=lambda i: (self._q[i].deadline(),
+                                    self._q[i].arrival_ts))
+        self._q.rotate(-best_i)
+        req = self._q.popleft()
+        self._q.rotate(best_i)
+        return req
+
+    def pop_many(self, n: int) -> List[Request]:
+        return [self.pop() for _ in range(min(n, len(self._q)))]
+
+    def oldest_wait_ms(self, now: Optional[float] = None) -> float:
+        """Milliseconds the longest-waiting request has queued (0 if empty)."""
+        if not self._q:
+            return 0.0
+        now = time.monotonic() if now is None else now
+        return 1e3 * (now - min(r.arrival_ts for r in self._q))
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+    def __iter__(self):
+        return iter(self._q)

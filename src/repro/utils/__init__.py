@@ -1,4 +1,6 @@
+from repro.utils.bandwidth import BandwidthEstimator
 from repro.utils.tree import param_count, param_bytes, tree_norm
 from repro.utils.timing import Timer
 
-__all__ = ["param_count", "param_bytes", "tree_norm", "Timer"]
+__all__ = ["param_count", "param_bytes", "tree_norm", "Timer",
+           "BandwidthEstimator"]

@@ -1,0 +1,43 @@
+"""Shared EWMA bandwidth estimator.
+
+The paper's runtime probes the link and alpha-blends observations into a
+running estimate the policy queries.  The blend used to be duplicated in
+``AdaptiveDispatcher.observe_bandwidth`` and ``InferenceSession`` (same
+formula, two drifting copies); :class:`BandwidthEstimator` is now the one
+implementation both consume — and the serving scheduler reads it too.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class BandwidthEstimator:
+    """EWMA link-bandwidth estimate: ``bw ← α·obs + (1-α)·bw``."""
+
+    initial_mbps: float = 400.0
+    alpha: float = 0.3
+
+    def __post_init__(self):
+        if not 0.0 < self.alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {self.alpha}")
+        self._mbps = float(self.initial_mbps)
+        self._n = 0
+
+    def observe(self, mbps: float) -> float:
+        """Fold one observation in; returns the updated estimate."""
+        self._mbps = self.alpha * float(mbps) + (1 - self.alpha) * self._mbps
+        self._n += 1
+        return self._mbps
+
+    def reset(self, mbps: float) -> None:
+        """Pin the estimate (e.g. a fresh probe after a re-mesh)."""
+        self._mbps = float(mbps)
+
+    @property
+    def mbps(self) -> float:
+        return self._mbps
+
+    @property
+    def observations(self) -> int:
+        return self._n

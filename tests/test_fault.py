@@ -7,7 +7,7 @@ from _hypothesis_fallback import given, settings, st
 import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.runtime.elastic import largest_mesh_shape
+from repro.runtime.elastic import ElasticMeshManager, largest_mesh_shape
 from repro.runtime.fault import FaultTolerantLoop, HeartbeatMonitor
 from repro.runtime.straggler import StragglerMitigator
 
@@ -91,3 +91,72 @@ def test_rebalance_total_invariant(times):
     parts = mit.rebalanced_partitions(n_tokens=len(times) * 160, seg_size=8)
     assert sum(parts) == len(times) * 160
     assert all(p >= 8 for p in parts)
+
+
+@given(st.lists(st.floats(1e-4, 1e4), min_size=2, max_size=16),
+       st.integers(1, 16), st.integers(0, 64))
+@settings(max_examples=60, deadline=None)
+def test_rebalance_properties_extreme_skew(times, seg_size, extra_segs):
+    """Partitions stay positive, segment-quantized, and sum to n_tokens even
+    under extreme speed skew, where naive rounding used to overdraw the
+    fastest device's share (negative drift → zero/negative partition)."""
+    n = len(times)
+    n_tokens = (n + extra_segs) * seg_size
+    mit = StragglerMitigator(n_devices=n)
+    mit.observe(np.asarray(times))
+    parts = mit.rebalanced_partitions(n_tokens=n_tokens, seg_size=seg_size)
+    assert len(parts) == n
+    assert all(p > 0 for p in parts), parts
+    assert all(p % seg_size == 0 for p in parts), parts
+    assert sum(parts) == n_tokens, parts
+
+
+def test_rebalance_negative_drift_regression():
+    """The seed's drift fix subtracted the overdraft from the fastest
+    device; with one dominant device and many slow ones at the minimum, it
+    went non-positive.  Now the overdraft is reclaimed one segment at a
+    time from the largest allocations."""
+    mit = StragglerMitigator(n_devices=8)
+    mit.observe(np.array([1e-4] + [10.0] * 7))   # one device ~owns the fleet
+    parts = mit.rebalanced_partitions(n_tokens=160, seg_size=10)
+    assert sum(parts) == 160
+    assert all(p > 0 for p in parts)
+    assert parts[0] == max(parts)                # fast device keeps the bulk
+
+
+def test_rebalance_too_few_segments_rejected():
+    mit = StragglerMitigator(n_devices=4)
+    mit.observe(np.ones(4))
+    with pytest.raises(ValueError, match="fewer than"):
+        mit.rebalanced_partitions(n_tokens=30, seg_size=10)
+
+
+# --- elastic drop: explicit failed ids --------------------------------------
+
+def test_elastic_drop_explicit_ids():
+    mgr = ElasticMeshManager(cfg=None, mode=None,
+                             devices=["d0", "d1", "d2", "d3"])
+    mgr.drop(["d1"], rebuild=False)
+    assert mgr.devices == ["d0", "d2", "d3"]     # not the tail!
+    mgr.drop(["d3", "d0"], rebuild=False)
+    assert mgr.devices == ["d2"]
+    with pytest.raises(ValueError, match="not in the healthy"):
+        mgr.drop(["nope"], rebuild=False)
+
+
+def test_elastic_drop_int_overload_and_device_ids():
+    class Dev:                                   # duck-typed jax device
+        def __init__(self, i):
+            self.id = i
+
+        def __repr__(self):
+            return f"Dev({self.id})"
+
+    devs = [Dev(i) for i in range(4)]
+    mgr = ElasticMeshManager(cfg=None, mode=None, devices=list(devs))
+    mgr.drop(1, rebuild=False)                   # legacy count overload
+    assert mgr.devices == devs[:3]
+    mgr.drop([0], rebuild=False)                 # match by .id
+    assert mgr.devices == devs[1:3]
+    with pytest.raises(ValueError, match="cannot drop"):
+        mgr.drop(7, rebuild=False)

@@ -1,0 +1,398 @@
+"""Serving runtime: queue/scheduler semantics, policy-table batch
+formation, continuous-batching token-exactness vs sequential
+``session.generate``, and the fault/straggler hook wiring."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.api import ExecutionPlan, InferenceSession
+from repro.api import generation as gen
+from repro.core.policy import AdaptivePolicy, PolicyTable
+from repro.profiling import ProfileContext, SweepSpec, get_backend
+from repro.serving import (AdaptiveScheduler, FaultHook, QueueFull, Request,
+                           RequestQueue, ServingRuntime, StragglerHook)
+from repro.utils import BandwidthEstimator
+
+
+@pytest.fixture(scope="module")
+def perfmap():
+    return get_backend("simulated").profile(ProfileContext(), SweepSpec())
+
+
+@pytest.fixture(scope="module")
+def session():
+    s = InferenceSession.from_config(
+        "llama3.2-1b", reduced={"vocab_size": 64},
+        plans=[ExecutionPlan.local(), ExecutionPlan.prism_sim(L=4, cr=9.9)])
+    s.profile(backend="simulated")
+    return s
+
+
+def _prompt(T0, seed=0):
+    return np.random.RandomState(seed).randint(0, 64, T0)
+
+
+# --- queue ------------------------------------------------------------------
+
+def test_queue_edf_order():
+    q = RequestQueue(max_size=8)
+    a = q.put(Request(_prompt(4), 4, slo_ms=None, arrival_ts=1.0))
+    b = q.put(Request(_prompt(4), 4, slo_ms=50.0, arrival_ts=2.0))
+    c = q.put(Request(_prompt(4), 4, slo_ms=5000.0, arrival_ts=3.0))
+    # tightest deadline first, then the looser SLO, then best-effort FIFO
+    assert [q.pop().id for _ in range(3)] == [b.id, c.id, a.id]
+
+
+def test_queue_fifo_among_equals_and_bounds():
+    q = RequestQueue(max_size=2)
+    a = q.put(Request(_prompt(4), 4, arrival_ts=1.0))
+    b = q.put(Request(_prompt(4), 4, arrival_ts=2.0))
+    with pytest.raises(QueueFull):
+        q.put(Request(_prompt(4), 4))
+    assert q.pop().id == a.id
+    assert q.pop().id == b.id
+    with pytest.raises(IndexError):
+        q.pop()
+
+
+def test_queue_oldest_wait():
+    q = RequestQueue()
+    assert q.oldest_wait_ms() == 0.0
+    q.put(Request(_prompt(4), 4, arrival_ts=10.0))
+    q.put(Request(_prompt(4), 4, arrival_ts=11.0))
+    assert q.oldest_wait_ms(now=10.5) == pytest.approx(500.0)
+
+
+def test_request_validation():
+    r = Request(np.ones((1, 5), np.int64), 3)      # [1, T0] squeezed
+    assert r.prompt.shape == (5,) and r.total_len == 8
+    assert r.deadline() == float("inf")
+    with pytest.raises(ValueError):
+        Request(np.ones(4, np.int64), 0)
+    with pytest.raises(ValueError):
+        Request(np.ones((2, 3), np.int64), 4)
+
+
+# --- policy-table batch formation ------------------------------------------
+
+def test_plan_batch_prefers_cheapest_grid_batch(perfmap):
+    table = PolicyTable.compile(perfmap, ("local", "prism"), "latency")
+    bp = table.plan_batch(32, 400.0)
+    # per-sample latency falls with batch on this profile → take the full
+    # grid batch, no padding
+    assert bp.batch == 32 and bp.n_admit == 32 and bp.padded == 0
+    assert not bp.extrapolated
+    assert bp.decision.mode in ("local", "prism")
+
+
+def test_plan_batch_admits_partially_when_cheaper(perfmap):
+    """A short queue need not be padded up: serving min(batch, queue) at
+    the cheapest grid point and leaving the rest queued is a valid (and
+    here cheaper) formation."""
+    table = PolicyTable.compile(perfmap, ("local", "prism"), "latency")
+    bp = table.plan_batch(3, 400.0)
+    assert bp.batch in table.batches
+    assert bp.n_admit == min(bp.batch, 3)
+    assert bp.padded == bp.batch - bp.n_admit
+    d = table.decide(bp.batch, 400.0)
+    assert bp.per_request_cost == pytest.approx(
+        table.objective.cost(d.expected) * bp.batch / bp.n_admit)
+
+
+def test_plan_batch_pads_to_cheaper_grid_point():
+    """When a larger profiled batch is cheap enough, the queue is padded up
+    to it and the waste is charged to the admitted requests."""
+    from repro.core.perfmap import PerfEntry, PerfKey, PerfMap
+    pm = PerfMap()
+    for b, ps in ((1, 100.0), (4, 10.0)):
+        pm.put(PerfKey("local", b, 0.0, 0.0),
+               PerfEntry(total_ms=ps * b, per_sample_ms=ps,
+                         per_sample_j=1.0, compute_ms=ps * b,
+                         staging_ms=0.0, comm_ms=0.0))
+    table = PolicyTable.compile(pm, ("local",), "latency")
+    bp = table.plan_batch(3, 400.0)
+    assert bp.batch == 4 and bp.n_admit == 3 and bp.padded == 1
+    assert bp.per_request_cost == pytest.approx(10.0 * 4 / 3)
+    assert not bp.extrapolated                 # 3 is inside the grid range
+
+
+def test_plan_batch_extrapolated_and_capped(perfmap):
+    table = PolicyTable.compile(perfmap, ("local", "prism"), "latency")
+    assert table.plan_batch(1000, 400.0).extrapolated
+    bp = table.plan_batch(1000, 400.0, max_batch=4)
+    assert bp.batch <= 4
+    with pytest.raises(ValueError):
+        table.plan_batch(0, 400.0)
+    with pytest.raises(ValueError):
+        table.plan_batch(4, 400.0, max_batch=0)
+
+
+def test_plan_batch_fallback_respects_max_batch():
+    """When no grid batch fits under max_batch, the formed batch stays a
+    grid shape but admissions never exceed the caller's free-slot cap."""
+    from repro.core.perfmap import PerfEntry, PerfKey, PerfMap
+    pm = PerfMap()
+    pm.put(PerfKey("local", 8, 0.0, 0.0),
+           PerfEntry(total_ms=80.0, per_sample_ms=10.0, per_sample_j=1.0,
+                     compute_ms=80.0, staging_ms=0.0, comm_ms=0.0))
+    table = PolicyTable.compile(pm, ("local",), "latency")
+    bp = table.plan_batch(8, 400.0, max_batch=2)
+    assert bp.batch == 8                       # only executable grid shape
+    assert bp.n_admit == 2                     # but the cap holds
+    assert bp.padded == 6
+
+
+def test_scheduler_forms_and_holds(perfmap):
+    import types
+    sess = types.SimpleNamespace(policy=AdaptivePolicy(perfmap),
+                                 bandwidth=400.0, objective="latency")
+    sched = AdaptiveScheduler(sess, max_wait_ms=1e9)
+    q = RequestQueue()
+    assert sched.next_batch(q, free_slots=4) is None        # empty queue
+    for i in range(3):
+        q.put(Request(_prompt(4), 4, arrival_ts=float(i)))
+    assert sched.next_batch(q, free_slots=0) is None        # no slots
+    # busy pool + huge max_wait + short queue → hold for a fuller batch
+    held = sched.next_batch(q, free_slots=8, idle=False, now=100.0)
+    if held is None:                    # policy wanted a bigger batch
+        assert len(q) == 3
+    mb = sched.next_batch(q, free_slots=8, idle=True, now=100.0)
+    assert mb is not None and 1 <= len(mb.requests) <= 3
+    assert mb.exec_key.split("@")[0] in ("local", "prism")
+    assert sched.history[-1] is mb
+
+
+# --- continuous-batching exactness -----------------------------------------
+
+def test_runtime_token_exact_vs_sequential_generate(session):
+    """The acceptance bar: every request served by the continuous-batching
+    runtime must match ``session.generate`` token-for-token (greedy AND
+    sampled, same seed), with more requests than slots so admission into
+    freed slots actually happens."""
+    rt = ServingRuntime(session, n_slots=2, chunk=3, max_len=24)
+    reqs = []
+    for i, (T0, n_new, temp) in enumerate(
+            [(4, 6, 0.0), (6, 5, 1.0), (4, 7, 0.0), (6, 4, 1.0),
+             (4, 5, 0.0)]):
+        reqs.append(rt.submit(_prompt(T0, seed=i), n_new, seed=i,
+                              temperature=temp))
+    done = rt.run()
+    assert len(done) == len(reqs)
+    assert rt.stats["max_concurrent"] == 2
+    for req in reqs:
+        comp = next(c for c in done if c.request_id == req.id)
+        ref = session.generate(jnp.asarray(req.prompt)[None], req.n_new,
+                               seed=req.seed, temperature=req.temperature)
+        np.testing.assert_array_equal(comp.tokens, np.asarray(ref)[0])
+        assert comp.latency_ms >= comp.queue_ms >= 0.0
+
+
+def test_runtime_prism_pool_token_exact():
+    """A PRISM-routed pool decodes with the plan's exchange semantics and
+    still matches the per-request compiled generate on that plan."""
+    sess = InferenceSession.from_config(
+        "llama3.2-1b", reduced={"vocab_size": 64},
+        plans=[ExecutionPlan.prism_sim(L=2, cr=9.9)],
+        allow_modes=("prism",))
+    sess.profile(backend="simulated")
+    rt = ServingRuntime(sess, n_slots=2, chunk=4, max_len=16)
+    reqs = [rt.submit(_prompt(4, seed=i), 5, seed=i) for i in range(3)]
+    done = rt.run()
+    plan = sess.plans["prism@9.9"]
+    for req in reqs:
+        comp = next(c for c in done if c.request_id == req.id)
+        assert comp.plan_key == "prism@9.9"
+        ref = sess.generate(jnp.asarray(req.prompt)[None], req.n_new,
+                            plan=plan, seed=req.seed)
+        np.testing.assert_array_equal(comp.tokens, np.asarray(ref)[0])
+
+
+def test_runtime_one_executable_per_plan_slot_count(session):
+    """Admissions into freed slots must NOT build new decode executables:
+    one compiled chunk fn per (plan, slot-count), reused for the whole
+    run."""
+    rt = ServingRuntime(session, n_slots=2, chunk=4, max_len=16)
+    for i in range(4):
+        rt.submit(_prompt(4, seed=i), 5, seed=i)
+    rt.run()                                   # warm build
+    before = gen.build_count()
+    rt2 = ServingRuntime(session, n_slots=2, chunk=4, max_len=16)
+    for i in range(6):
+        rt2.submit(_prompt(4, seed=10 + i), 5, seed=i)
+    rt2.run()
+    assert gen.build_count() == before         # everything cache-hit
+    assert rt2.stats["admitted"] == 6
+
+
+def test_prime_slot_forwards_prefill_mode(session):
+    """prefill_mode must reach the built executable (and key its cache):
+    a local dense plan resolves to single_pass under "auto" but must honor
+    an explicit "scan"."""
+    prompt = jnp.asarray(_prompt(4))[None]
+    session.prime_slot(prompt, total_len=16)
+    session.prime_slot(prompt, total_len=16, prefill_mode="scan")
+    plan = session.plans["local"]
+    fns = session._serve_execs[plan]
+    modes = {fn.prefill_mode for k, fn in fns.items() if k[0] == "prefill"
+             and k[2] == 4 and k[3] == 16}
+    assert modes == {"single_pass", "scan"}
+
+
+def test_decision_exec_key_is_canonical(perfmap):
+    table = PolicyTable.compile(perfmap, ("local", "prism"), "latency")
+    d = table.decide(1, 200.0)
+    assert d.exec_key == ("local" if d.mode == "local"
+                          else f"{d.mode}@{d.cr:g}")
+    d32 = table.decide(32, 900.0)
+    assert d32.exec_key.startswith(d32.mode)
+
+
+def test_runtime_rejects_oversized_request(session):
+    rt = ServingRuntime(session, n_slots=2, chunk=4, max_len=16)
+    with pytest.raises(ValueError, match="max_len"):
+        rt.submit(_prompt(12), 8)
+
+
+def test_slot_pool_rejects_unsupported_families():
+    """Non-generative (vit) and extras-needing (audio/vlm) families get a
+    clear NotImplementedError at the gate, not an opaque crash deeper in."""
+    sess = InferenceSession.from_config("vit-base-16",
+                                        reduced={"n_layers": 1})
+    with pytest.raises(NotImplementedError, match="slot"):
+        sess.init_slot_pool(2, 16)
+    with pytest.raises(NotImplementedError, match="slot"):
+        sess.prime_slot(jnp.zeros((1, 4), jnp.int32), total_len=16)
+
+
+# --- fault / straggler hooks ------------------------------------------------
+
+def test_fault_hook_requeues_and_completes(session):
+    from repro.runtime.elastic import ElasticMeshManager
+    mgr = ElasticMeshManager(cfg=None, mode=None,
+                             devices=["n0", "n1", "n2"])
+    hook = FaultHook(nodes=["n0", "n1", "n2"], timeout_s=1e9,
+                     mesh_manager=mgr)
+    rt = ServingRuntime(session, n_slots=2, chunk=3, max_len=24,
+                        fault_hook=hook)
+    reqs = [rt.submit(_prompt(4, seed=i), 6, seed=i) for i in range(3)]
+    rt.step()                                  # admit + first chunk
+    hook.monitor.fail("n1")                    # heartbeat miss mid-flight
+    done = rt.run()
+    assert rt.stats["requeued"] >= 1           # in-flight work re-admitted
+    assert [e.dead for e in hook.events] == [["n1"]]
+    assert hook.events[0].requeued == rt.stats["requeued"]
+    assert mgr.devices == ["n0", "n2"]         # explicit id, not the tail
+    # re-admitted requests still finish token-exact
+    all_done = rt.completions
+    assert len(all_done) == len(reqs)
+    for req in reqs:
+        comp = next(c for c in all_done if c.request_id == req.id)
+        ref = session.generate(jnp.asarray(req.prompt)[None], req.n_new,
+                               seed=req.seed)
+        np.testing.assert_array_equal(comp.tokens, np.asarray(ref)[0])
+
+
+def test_fault_requeue_bypasses_queue_bound(session):
+    """Failover must never drop in-flight work because the intake queue is
+    full — internal re-queues bypass the backpressure bound."""
+    hook = FaultHook(nodes=["n0"], timeout_s=1e9)
+    rt = ServingRuntime(session, n_slots=2, chunk=3, max_len=24,
+                        queue_size=1, fault_hook=hook)
+    reqs = [rt.submit(_prompt(4, seed=i), 6, seed=i) for i in range(1)]
+    rt.step()                                  # in flight, queue empty
+    rt.queue.put(Request(_prompt(4, seed=9), 6, seed=9))   # fill the bound
+    reqs.append(list(rt.queue)[0])
+    hook.monitor.fail("n0")
+    rt.run()                                   # must not raise QueueFull
+    assert len(rt.completions) == 2
+
+
+def test_drive_applies_backpressure_on_bounded_queue(session):
+    """drive() must defer submissions when the intake queue is at
+    capacity (resubmitting after the next step) instead of raising
+    QueueFull mid-replay."""
+    rt = ServingRuntime(session, n_slots=2, chunk=3, max_len=24,
+                        queue_size=1)
+    prompts = [_prompt(4, seed=i) for i in range(5)]
+    comps = rt.drive(prompts, [0.0] * 5, 6)    # burst >> queue bound
+    assert len(comps) == 5
+    got = {c.request_id: c.tokens for c in comps}
+    for i, rid in enumerate(sorted(got)):      # submitted in arrival order
+        ref = session.generate(jnp.asarray(prompts[i])[None], 6, seed=i)
+        np.testing.assert_array_equal(got[rid], np.asarray(ref)[0])
+
+
+def test_prime_slot_temperature_is_traced(session):
+    """Per-request temperatures must reuse ONE compiled prefill (the
+    serving path would otherwise recompile per distinct float)."""
+    prompt = jnp.asarray(_prompt(5))[None]
+    session.prime_slot(prompt, total_len=16, temperature=0.0)
+    before = gen.build_count()
+    for T in (0.3, 0.7, 1.1):
+        session.prime_slot(prompt, total_len=16, temperature=T)
+    assert gen.build_count() == before
+
+
+def test_straggler_hook_skips_tiny_workloads():
+    """A workload with fewer segments than devices yields no rebalance
+    proposal instead of raising inside the serving loop."""
+    hook = StragglerHook(n_devices=8, seg_size=64)
+    for _ in range(10):
+        ev = hook.observe([1.0] * 7 + [9.0], n_tokens=256)
+    assert ev is None and not hook.events
+
+
+def test_straggler_hook_emits_rebalance():
+    hook = StragglerHook(n_devices=4, seg_size=2)
+    for _ in range(10):
+        ev = hook.observe([1.0, 1.0, 1.0, 3.0], n_tokens=64)
+    assert ev is not None and ev.stragglers == [3]
+    assert sum(ev.partitions) == 64
+    assert all(p % 2 == 0 and p > 0 for p in ev.partitions)
+    assert ev.partitions[3] == min(ev.partitions)
+    assert hook.events
+
+
+def test_runtime_feeds_straggler_hook(session):
+    hook = StragglerHook(n_devices=2, seg_size=2)
+    rt = ServingRuntime(session, n_slots=2, chunk=3, max_len=16,
+                        straggler_hook=hook)
+    rt.submit(_prompt(4), 5)
+    rt.run()
+    assert hook.chunk_walls_ms                 # chunk telemetry recorded
+    # chunk walls must NOT masquerade as per-device times: the mitigator
+    # only sees what the fleet feeds via hook.observe()
+    assert hook.mitigator._seen == 0
+    hook.observe([1.0, 3.0], n_tokens=16)      # a real per-device sample
+    assert hook.mitigator._seen == 1
+
+
+# --- shared bandwidth estimator ---------------------------------------------
+
+def test_bandwidth_estimator_shared_impl():
+    est = BandwidthEstimator(400.0, alpha=0.5)
+    assert est.observe(200.0) == pytest.approx(300.0)
+    assert est.observe(300.0) == pytest.approx(300.0)
+    est.reset(100.0)
+    assert est.mbps == 100.0 and est.observations == 2
+    with pytest.raises(ValueError):
+        BandwidthEstimator(400.0, alpha=0.0)
+
+
+def test_session_and_dispatcher_share_estimator(perfmap):
+    sess = InferenceSession.from_config("llama3.2-1b",
+                                        reduced={"vocab_size": 64},
+                                        perfmap=perfmap, bandwidth_alpha=0.5)
+    assert isinstance(sess._bwest, BandwidthEstimator)
+    sess.observe_bandwidth(200.0)
+    assert sess.bandwidth == pytest.approx(300.0)
+    sess._bw = 123.0                           # legacy pin still works
+    assert sess.bandwidth == 123.0
+    from repro.serving import AdaptiveDispatcher
+    with pytest.warns(DeprecationWarning):
+        disp = AdaptiveDispatcher(perfmap, {"local": lambda b: b},
+                                  bandwidth_alpha=0.5)
+    assert isinstance(disp._bwest, BandwidthEstimator)
+    disp.observe_bandwidth(200.0)
+    assert disp.bandwidth == pytest.approx(300.0)
