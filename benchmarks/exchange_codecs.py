@@ -1,0 +1,104 @@
+"""Bytes-on-wire + exchange latency per codec — the transport artifact.
+
+For one K/V partition layout (P sequence shards at equal tokens) this
+measures, per registered exchange codec:
+
+* **wire bytes** — exact encoded payload size one device ships per layer
+  (K + V), via ``codec.wire_bytes`` (asserted equal to the summed payload
+  ``nbytes`` — the accounting cannot drift from the arrays);
+* **compression ratio** vs the full-tensor (``identity``) payload;
+* **exchange latency** — wall time of the jitted single-host exchange
+  oracle (``simulate_voltage`` / ``simulate_prism`` / ``codec_sim``).
+
+Writes ``BENCH_exchange.json``.  ``--smoke --min-ratio 4.0`` is the CI
+gate: compressed exchange (segment means at the paper's CR, and int4) must
+move at least ``min-ratio``× fewer bytes than full-tensor at equal tokens.
+"""
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes + enforce --min-ratio")
+    ap.add_argument("--min-ratio", type=float, default=4.0,
+                    help="required bytes reduction of compressed codecs "
+                         "vs full-tensor exchange")
+    ap.add_argument("--iters", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_exchange.json")
+    args = ap.parse_args()
+
+    import jax.numpy as jnp
+    from repro.core.partition import (simulate_prism_attention,
+                                      simulate_voltage_attention)
+    from repro.transport import (CodecSpec, codec_sim_attention, get_codec,
+                                 payload_nbytes)
+
+    P = 2
+    B, N, H, dh = (2, 64, 4, 32) if args.smoke else (2, 256, 8, 64)
+    iters = args.iters or (2 if args.smoke else 5)
+    Np = N // P
+    L = max(Np // 8, 1)                       # segment-means CR = Np/L ≈ 8
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(B, N, H, dh), jnp.float32)
+    k = jnp.asarray(rng.randn(B, N, H, dh), jnp.float32)
+    v = jnp.asarray(rng.randn(B, N, H, dh), jnp.float32)
+    part_shape = (B, Np, H, dh)               # what one device ships (K or V)
+
+    codecs = [("identity", CodecSpec()),
+              ("segment_means", CodecSpec(L=L)),
+              ("int8", CodecSpec()),
+              ("int4", CodecSpec()),
+              ("topk", CodecSpec(param=max(dh // 8, 1)))]
+
+    def runner(name, spec):
+        import jax
+        if name == "identity":
+            return jax.jit(lambda a, b, c: simulate_voltage_attention(
+                a, b, c, P, causal=True))
+        if name == "segment_means":
+            return jax.jit(lambda a, b, c: simulate_prism_attention(
+                a, b, c, P, spec.L, causal=True))
+        return jax.jit(lambda a, b, c: codec_sim_attention(
+            a, b, c, P, name, spec, causal=True))
+
+    results = {}
+    for name, spec in codecs:
+        codec = get_codec(name)
+        wire = 2 * codec.wire_bytes(part_shape, jnp.float32, spec)  # K + V
+        payload = 2 * payload_nbytes(codec.encode(k[:, :Np], spec))
+        assert wire == payload, (name, wire, payload)
+        fn = runner(name, spec)
+        fn(q, k, v).block_until_ready()                  # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            fn(q, k, v).block_until_ready()
+        ms = (time.perf_counter() - t0) / iters * 1e3
+        results[name] = {"wire_bytes": int(wire), "exchange_ms": ms}
+        print(f"{name:14s} wire={wire:9d} B  exchange={ms:7.2f} ms")
+
+    full = results["identity"]["wire_bytes"]
+    for name in results:
+        results[name]["ratio_vs_full"] = full / results[name]["wire_bytes"]
+    doc = {"shape": {"B": B, "N": N, "H": H, "dh": dh, "P": P, "L": L},
+           "iters": iters, "codecs": results}
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {args.out}")
+
+    if args.smoke:
+        for name in ("segment_means", "int4"):
+            r = results[name]["ratio_vs_full"]
+            assert r >= args.min_ratio, (
+                f"{name} moves only {r:.2f}x fewer bytes than full-tensor "
+                f"exchange (required: {args.min_ratio}x)")
+        print(f"SMOKE OK: compressed exchange ≥{args.min_ratio}x fewer "
+              "bytes than full-tensor at equal tokens")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ from repro.core.exchange import exchange_attention, decode_attention_sharded
 from repro.core.partition import (simulate_prism_attention,
                                   simulate_voltage_attention)
 from repro.core.prism_attention import reference_attention
+from repro.transport import CodecSpec, codec_sim_attention
 from repro.utils import compat
 
 mesh = jax.make_mesh((4, 2), ("seq", "model"))
@@ -47,6 +48,31 @@ with compat.set_mesh(mesh):
     ref = reference_attention(q, k, v, causal=False)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
     print("prism seg=1 == full OK")
+
+    # chunked ring executor (compute/comm overlap) == full attention
+    for causal in (False, True):
+        for nch in (1, 2):
+            cfgr = ExecutionPlan("voltage", seq_axis="seq", seq_shards=4,
+                                 overlap_chunks=nch).to_exchange_config()
+            out = jax.jit(lambda a, b, c: exchange_attention(
+                a, b, c, cfgr, causal=causal))(qs, ks, vs)
+            ref = reference_attention(q, k, v, causal=causal)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       atol=3e-5)
+            print(f"ring chunks={nch} causal={causal} OK")
+
+    # sharded codec exchange == single-host codec oracle
+    for codec, param in (("int8", 0), ("int4", 0), ("topk", 8)):
+        cfgc = ExecutionPlan("prism", seq_axis="seq", seq_shards=4,
+                             codec=codec,
+                             codec_param=param).to_exchange_config()
+        out = jax.jit(lambda a, b, c: exchange_attention(
+            a, b, c, cfgc, causal=True))(qs, ks, vs)
+        ref = codec_sim_attention(q, k, v, 4, codec, CodecSpec(param=param),
+                                  causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5)
+        print(f"codec {codec} sharded == sim oracle OK")
 
     # decode
     S = 64

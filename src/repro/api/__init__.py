@@ -34,6 +34,10 @@ from repro.profiling import (JETSON_ORIN_NANO, TPU_ICI, TPU_V5E, WIFI_GLOO,
                              HardwareProfile, LinkProfile, ProfileBackend,
                              ProfileContext, get_backend, list_backends,
                              register_backend, workload_from_config)
+from repro.transport import (CodecSpec, ExchangeCodec, LinkCost,
+                             TransportLink, exchange_cost, get_codec,
+                             get_link, list_codecs, list_links,
+                             plan_wire_bytes, register_codec, register_link)
 
 __all__ = [
     "ExecutionPlan", "InferenceSession", "DispatchRecord", "Explanation",
@@ -52,4 +56,8 @@ __all__ = [
     "workload_from_config",
     "profile_simulated", "profile_measured", "SweepSpec", "sweep_cost",
     "PAPER_BATCHES", "PAPER_CRS", "PAPER_BWS",
+    "ExchangeCodec", "CodecSpec", "register_codec", "get_codec",
+    "list_codecs",
+    "TransportLink", "LinkCost", "register_link", "get_link", "list_links",
+    "exchange_cost", "plan_wire_bytes",
 ]

@@ -26,6 +26,33 @@ from repro.core.perfmap import PerfKey
 from repro.core.segment_means import L_to_cr, cr_to_L
 
 
+def split_key(key: str) -> Tuple[str, float, str]:
+    """Decompose an executable id ``"mode[@cr][+codec]"`` → (mode, cr,
+    codec) — the ONE parser for the key convention (used by
+    ``ExecutionPlan.parse``, ``InferenceSession.plan_for_key`` and
+    ``calibrate``)."""
+    mode, _, cr_s = key.partition("@")
+    if cr_s:
+        try:
+            # a codec-less key first: "%g" can emit an exponent whose '+'
+            # (e.g. "prism@1e+06") must not be read as a codec separator
+            # — codec names start with a letter (enforced at registration)
+            return mode, float(cr_s), ""
+        except ValueError:
+            pass
+    base, _, codec = key.partition("+")
+    mode, _, cr_s = base.partition("@")
+    if cr_s:
+        try:
+            cr = float(cr_s)
+        except ValueError:
+            raise ValueError(f"malformed plan key {key!r}: compression "
+                             f"rate {cr_s!r} is not a number") from None
+    else:
+        cr = 0.0
+    return mode, cr, codec
+
+
 @dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
     """Mode + compression + sequence-partition layout for one executable.
@@ -35,6 +62,15 @@ class ExecutionPlan:
     sequence length.  They are related by ``CR = N/(L·P)`` but may be set
     independently when the smoke-test sequence length differs from the
     profiled workload's.
+
+    ``codec`` names a registered :mod:`repro.transport` codec ("" = the
+    strategy's default — ``segment_means`` for prism, so pre-codec plans
+    keep their identity); ``codec_param`` is its knob (quantization tile /
+    top-k).  ``link`` names the transport link the cost accounting charges
+    ("" = staged, the paper's GLOO path); ``overlap_chunks`` > 0 runs the
+    exchange through the chunked ring executor (compute/comm overlap).
+    Neither ``link`` nor ``overlap_chunks`` changes the math, so neither
+    is part of the plan's identity (``key``).
     """
     mode: str = "local"              # registered strategy name
     cr: float = 0.0                  # profiled compression rate (0 = n/a)
@@ -42,10 +78,16 @@ class ExecutionPlan:
     seq_axis: Optional[str] = None   # mesh axis carrying sequence partitions
     seq_shards: int = 1              # P — number of sequence partitions
     batch_axes: Tuple[str, ...] = ()  # mesh axes sharding the batch dim
+    codec: str = ""                  # exchange codec ("" = strategy default)
+    codec_param: int = 0             # codec knob (quant tile / topk k)
+    link: str = ""                   # transport link ("" = staged)
+    overlap_chunks: int = 0          # ring-executor chunks (0 = gather)
 
     def __post_init__(self):
         from repro.api.strategies import get_strategy
         strategy = get_strategy(self.mode)     # raises on unknown mode
+        if self.codec == strategy.default_codec:
+            object.__setattr__(self, "codec", "")   # canonical identity
         strategy.validate_plan(self)
 
     # -- identity -----------------------------------------------------------
@@ -58,11 +100,18 @@ class ExecutionPlan:
         return get_strategy(self.mode).perf_mode
 
     @property
+    def effective_codec(self) -> str:
+        """The codec that actually runs: the plan's, or the strategy's
+        default ("" for strategies with no exchange payload)."""
+        from repro.api.strategies import get_strategy
+        return self.codec or get_strategy(self.mode).default_codec
+
+    @property
     def key(self) -> str:
         """Canonical executable id — replaces hand-rolled "mode@cr" keys."""
-        if self.cr > 0:
-            return f"{self.perf_mode}@{self.cr:g}"
-        return self.perf_mode
+        base = (f"{self.perf_mode}@{self.cr:g}" if self.cr > 0
+                else self.perf_mode)
+        return f"{base}+{self.codec}" if self.codec else base
 
     @property
     def distributed(self) -> bool:
@@ -98,19 +147,14 @@ class ExecutionPlan:
 
     @staticmethod
     def parse(key: str, *, seq_axis: str = "seq", seq_shards: int = 2,
-              L: int = 0) -> "ExecutionPlan":
-        """Parse a legacy dispatcher key: ``"local"`` / ``"prism@9.9"``."""
-        if "@" in key:
-            mode, cr_s = key.split("@", 1)
-            try:
-                cr = float(cr_s)
-            except ValueError:
-                raise ValueError(f"malformed plan key {key!r}: "
-                                 f"compression rate {cr_s!r} is not a number")
-            return ExecutionPlan(mode, cr, L, seq_axis, seq_shards)
-        if key == "local":
+              L: int = 0, codec_param: int = 0) -> "ExecutionPlan":
+        """Parse an executable id: ``"local"`` / ``"prism@9.9"`` /
+        ``"prism@4+int8"``."""
+        mode, cr, codec = split_key(key)
+        if mode == "local" and not codec:
             return ExecutionPlan.local()
-        return ExecutionPlan(key, 0.0, L, seq_axis, seq_shards)
+        return ExecutionPlan(mode, cr, L, seq_axis, seq_shards,
+                             codec=codec, codec_param=codec_param)
 
     # -- conversions ---------------------------------------------------------
 
@@ -120,7 +164,9 @@ class ExecutionPlan:
                               self.seq_axis if self.mode != "local" else None,
                               self.seq_shards if self.mode != "local" else 1,
                               L=self.L, batch_axes=tuple(self.batch_axes),
-                              strategy=self.mode)
+                              strategy=self.mode, codec=self.codec,
+                              codec_param=self.codec_param,
+                              overlap_chunks=self.overlap_chunks)
 
     @staticmethod
     def from_exchange_config(xcfg: ExchangeConfig,
@@ -134,32 +180,41 @@ class ExecutionPlan:
                   if (n_tokens and xcfg.L > 0 and xcfg.seq_shards > 0)
                   else 0.0)
         return ExecutionPlan(mode, cr, xcfg.L, xcfg.seq_axis,
-                             xcfg.seq_shards, tuple(xcfg.batch_axes))
+                             xcfg.seq_shards, tuple(xcfg.batch_axes),
+                             codec=xcfg.codec, codec_param=xcfg.codec_param,
+                             overlap_chunks=xcfg.overlap_chunks)
 
     def to_perf_key(self, batch: int, bandwidth_mbps: float = 0.0) -> PerfKey:
         if not self.distributed:
             return PerfKey(self.perf_mode, batch, 0.0, 0.0)
-        return PerfKey(self.perf_mode, batch, self.cr, bandwidth_mbps)
+        return PerfKey(self.perf_mode, batch, self.cr, bandwidth_mbps,
+                       self.codec)
 
     @staticmethod
     def from_perf_key(key: PerfKey, *, seq_axis: str = "seq",
                       seq_shards: int = 2, n_tokens: Optional[int] = None,
-                      simulated: bool = False) -> "ExecutionPlan":
+                      simulated: bool = False,
+                      codec_param: int = 0) -> "ExecutionPlan":
         """``n_tokens`` resolves the physical L from the profiled CR;
-        ``simulated`` maps "prism" onto the single-host prism_sim strategy."""
+        ``simulated`` maps "prism" onto the single-host prism_sim strategy.
+        Codec-bearing keys carry the codec through; parameterized codecs
+        (``topk``) additionally need ``codec_param``."""
         mode = key.mode
         if mode == "local":
             return ExecutionPlan.local()
         if mode == "prism" and simulated:
             mode = "prism_sim"
         L = (cr_to_L(n_tokens, seq_shards, key.cr)
-             if (n_tokens and key.cr > 0) else 0)
-        return ExecutionPlan(mode, key.cr, L, seq_axis, seq_shards)
+             if (n_tokens and key.cr > 0 and not key.codec) else 0)
+        return ExecutionPlan(mode, key.cr, L, seq_axis, seq_shards,
+                             codec=key.codec, codec_param=codec_param)
 
     def resolve_L(self, n_tokens: int) -> "ExecutionPlan":
         """Fill in the physical L for a deployment sequence length from the
-        profiled CR (no-op for non-PRISM plans or when L is already set)."""
-        if self.L > 0 or self.cr <= 0 or not self.distributed:
+        profiled CR (no-op for non-PRISM plans, non-default codecs, or when
+        L is already set)."""
+        if (self.L > 0 or self.cr <= 0 or not self.distributed
+                or self.codec):
             return self
         return dataclasses.replace(
             self, L=cr_to_L(n_tokens, self.seq_shards, self.cr))

@@ -21,8 +21,9 @@ Profiling goes through the pluggable backend registry
 ``"latency"``/``"energy"`` strings or any
 :class:`~repro.profiling.objectives.Objective` instance.
 
-Subsumes the legacy ``AdaptiveDispatcher`` + ``ServeEngine`` pair (both kept
-as deprecation shims in ``repro.serving``).
+Subsumes the legacy ``AdaptiveDispatcher`` + ``ServeEngine`` pair (both
+now removed from ``repro.serving``; request traffic lives in
+``repro.serving.ServingRuntime``).
 """
 from __future__ import annotations
 
@@ -48,6 +49,8 @@ class DispatchRecord:
     exec_key: str = ""          # executable that actually ran
     substituted: bool = False   # True when the decided key had no executable
     extrapolated: bool = False  # batch was outside the profiled grid
+    codec: str = ""             # exchange codec that ran ("" = no exchange)
+    wire_bytes: int = 0         # modeled bytes-on-wire this dispatch moved
 
 
 @dataclasses.dataclass
@@ -58,6 +61,8 @@ class CalibrationReport:
     skipped_offgrid: int = 0         # in-range batches between grid points
     skipped_unprofiled: int = 0      # ran an executable with no map entry
     records: int = 0                 # dispatch records consumed
+    bandwidth_updates: int = 0       # bytes/wall EWMA folds into the link
+                                     # bandwidth estimate
 
     def __bool__(self) -> bool:
         return self.updated > 0
@@ -75,20 +80,27 @@ class Explanation:
     batch_crossover: Optional[int]                  # paper: 8 @ 400 Mbps
     bandwidth_crossover: Optional[float]            # paper: ≈340 Mbps @ B=8
     extrapolated: bool = False                      # batch off the grid
+    codec: str = ""                                 # exchange codec chosen
+    wire_bytes: int = 0                             # modeled bytes-on-wire
 
     def summary(self) -> str:
         lines = [f"B={self.batch} BW={self.bandwidth_mbps:g} Mbps → "
                  f"{self.decision.mode}"
                  + (f" CR={self.decision.cr:g}" if self.decision.cr else "")
+                 + (f" codec={self.codec}" if self.codec else "")
                  + f"  ({self.decision.expected.per_sample_ms:.1f} ms/sample"
-                 f" expected, plan {self.plan_key!r})"
+                 f" expected, plan {self.plan_key!r}"
+                 + (f", {self.wire_bytes / 1e6:.2f} MB on wire"
+                    if self.wire_bytes else "") + ")"
                  + (" [EXTRAPOLATED: batch outside the profiled grid]"
                     if self.extrapolated else "")]
         for k, e in sorted(self.candidates,
                            key=lambda kv: kv[1].per_sample_ms):
-            mark = "→" if (k.mode, k.cr) == (self.decision.mode,
-                                             self.decision.cr) else " "
-            lines.append(f"  {mark} {k.mode:<8} CR={k.cr:<5g} "
+            mark = "→" if (k.mode, k.cr, k.codec) == (
+                self.decision.mode, self.decision.cr,
+                self.decision.codec) else " "
+            label = f"{k.mode}+{k.codec}" if k.codec else k.mode
+            lines.append(f"  {mark} {label:<13} CR={k.cr:<5g} "
                          f"{e.per_sample_ms:8.1f} ms/sample "
                          f"{e.per_sample_j:7.2f} J/sample")
         lines.append(f"  batch crossover @ {self.bandwidth_mbps:g} Mbps: "
@@ -157,9 +169,11 @@ class InferenceSession:
         key = plan.key
         if key in self.plans:
             raise ValueError(f"plan {key!r} already registered")
-        if get_strategy(plan.mode).requires_L and plan.L <= 0:
+        if (get_strategy(plan.mode).requires_L and plan.L <= 0
+                and not plan.codec):
             # a cr-only plan (e.g. from parse()/from_perf_key without
-            # n_tokens) has no physical segment count to execute with
+            # n_tokens) has no physical segment count to execute with;
+            # non-default codecs carry their own parameters instead of L
             raise ValueError(
                 f"plan {key!r} has cr={plan.cr:g} but no physical L; call "
                 "plan.resolve_L(n_tokens) before registering it")
@@ -274,15 +288,18 @@ class InferenceSession:
 
     def plan_for_key(self, exec_key: str) -> Tuple[str, ExecutionPlan]:
         """Executable id → registered plan, with the canonical fallback
-        order: exact key, then same-mode plan at another CR, then any
-        registered plan (used by dispatch and the serving runtime)."""
+        order: exact key, then a same-mode+codec plan at another CR, then
+        any same-mode plan, then any registered plan (used by dispatch and
+        the serving runtime)."""
+        from repro.api.plan import split_key
         if exec_key in self.plans:
             return exec_key, self.plans[exec_key]
-        mode = exec_key.split("@")[0]
-        same_mode = next((k for k in self.plans
-                          if k.split("@")[0] == mode), None)
-        if same_mode is not None:
-            return same_mode, self.plans[same_mode]
+        mode, _, codec = split_key(exec_key)
+        for match in (lambda k: split_key(k)[::2] == (mode, codec),
+                      lambda k: split_key(k)[0] == mode):
+            found = next((k for k in self.plans if match(k)), None)
+            if found is not None:
+                return found, self.plans[found]
         if not self.plans:
             raise LookupError("no executables registered")
         key = next(iter(self.plans))
@@ -294,16 +311,30 @@ class InferenceSession:
         key, _ = self.plan_for_key(d.exec_key)
         return key, key != d.exec_key
 
+    def _input_tokens(self, batch_inputs: Any) -> int:
+        """Token count of one request batch: dim 1 of the token input (or
+        of a rank-2 array); 0 → the accounting falls back to the profiled
+        workload's sequence length (images etc. have no token dim)."""
+        lead = batch_inputs
+        if isinstance(batch_inputs, dict):
+            if "tokens" not in batch_inputs:
+                return 0
+            lead = batch_inputs["tokens"]
+        shape = getattr(lead, "shape", ())
+        return int(shape[1]) if len(shape) == 2 else 0
+
     def dispatch(self, batch_inputs: Any,
                  batch_size: Optional[int] = None) -> Any:
         """Route one batch per the profiled policy and run it."""
         import jax
+        from repro.transport import plan_wire_bytes
         if batch_size is None:
             batch_size = int(next(iter(batch_inputs.values())).shape[0]
                              if isinstance(batch_inputs, dict)
                              else batch_inputs.shape[0])
         d = self.decide(batch_size)
         key, substituted = self._exec_key_for(d)
+        plan = self.plans[key]
         t0 = time.perf_counter()
         out = self._execs[key](batch_inputs)
         # wall_ms must cover execution, not just the async dispatch —
@@ -312,10 +343,12 @@ class InferenceSession:
             lambda a: a.block_until_ready()
             if hasattr(a, "block_until_ready") else a, out)
         wall = (time.perf_counter() - t0) * 1e3
-        self.history.append(DispatchRecord(batch_size, self._bw, d, wall,
-                                           exec_key=key,
-                                           substituted=substituted,
-                                           extrapolated=d.extrapolated))
+        wire = plan_wire_bytes(plan, self.cfg, batch_size,
+                               self._input_tokens(batch_inputs))
+        self.history.append(DispatchRecord(
+            batch_size, self._bw, d, wall, exec_key=key,
+            substituted=substituted, extrapolated=d.extrapolated,
+            codec=plan.effective_codec if wire else "", wire_bytes=wire))
         return out
 
     # -- closed-loop recalibration -------------------------------------------
@@ -342,6 +375,7 @@ class InferenceSession:
                                "session.profile() first")
         if not 0.0 < alpha <= 1.0:
             raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        from repro.api.plan import split_key
         rep = CalibrationReport()
         table = self.policy.table(self.objective)
         for rec in self.history[self._calibrated_upto:]:
@@ -352,8 +386,7 @@ class InferenceSession:
             if table.nearest_batch(rec.batch) != rec.batch:
                 rep.skipped_offgrid += 1
                 continue
-            mode, _, cr_s = rec.exec_key.partition("@")
-            cr = float(cr_s) if cr_s else 0.0
+            mode, cr, codec = split_key(rec.exec_key)
             if mode == "local":
                 key = PerfKey("local", rec.batch, 0.0, 0.0)
             else:
@@ -361,11 +394,30 @@ class InferenceSession:
                 if bw is None:
                     rep.skipped_unprofiled += 1
                     continue
-                key = PerfKey(mode, rec.batch, cr, bw)
+                key = PerfKey(mode, rec.batch, cr, bw, codec)
             entry = self.perfmap.get(key)
+            if entry is None and codec and mode != "local":
+                # codec plans register at cr=0 but the sweep keys them at
+                # the achieved ratio — fold into the unique profiled cell
+                # with the same (mode, batch, bandwidth, codec)
+                matches = [(k2, e2) for k2, e2 in self.perfmap.entries()
+                           if (k2.mode, k2.batch, k2.codec,
+                               k2.bandwidth_mbps) == (mode, rec.batch,
+                                                      codec, bw)]
+                if len(matches) == 1:
+                    key, entry = matches[0]
             if entry is None or entry.total_ms <= 0:
                 rep.skipped_unprofiled += 1
                 continue
+            # bytes-on-wire refine the LINK estimate, not just the map:
+            # the entry's profiled comm share apportions the observed wall
+            # to wire time, and bytes/wall EWMA-folds into the bandwidth
+            # probe the policy queries
+            if rec.wire_bytes > 0 and entry.comm_ms > 0:
+                comm_wall = rec.wall_ms * entry.comm_ms / entry.total_ms
+                if comm_wall > 0:
+                    self._bwest.observe_transfer(rec.wire_bytes, comm_wall)
+                    rep.bandwidth_updates += 1
             new_total = (1 - alpha) * entry.total_ms + alpha * rec.wall_ms
             f = new_total / entry.total_ms
             self.perfmap.put(key, dataclasses.replace(
@@ -496,11 +548,13 @@ class InferenceSession:
         """Decision + candidate table + both crossover artifacts for one
         (batch, bandwidth) operating point."""
         from repro.core.policy import PolicyTable
+        from repro.transport import plan_wire_bytes
         bw = self._bw if bandwidth_mbps is None else bandwidth_mbps
         obj = objective or self.objective
         pol = self.policy
         d = pol.decide(batch, bw, obj)
         key, _ = self._exec_key_for(d)
+        plan = self.plans[key]
         # candidate rows over ALL profiled modes (voltage included for the
         # paper's "full exchange loses everywhere" artifact), interpolated
         # at the queried bandwidth exactly like decide() — never a snapped
@@ -508,9 +562,12 @@ class InferenceSession:
         modes = tuple(sorted({k.mode for k, _ in self.perfmap.entries()}))
         cands = tuple(PolicyTable.compile(self.perfmap, modes, obj)
                       .candidates(batch, bw))
+        wire = plan_wire_bytes(plan, self.cfg, batch) or d.wire_bytes
         return Explanation(
             batch=batch, bandwidth_mbps=bw, decision=d, plan_key=key,
             candidates=cands,
             batch_crossover=pol.batch_crossover(bw, obj),
             bandwidth_crossover=pol.bandwidth_crossover(batch, obj),
-            extrapolated=d.extrapolated)
+            extrapolated=d.extrapolated,
+            codec=plan.effective_codec if plan.distributed else "",
+            wire_bytes=wire)

@@ -60,6 +60,8 @@ class ExchangeStrategy:
     distributed: bool = False                  # needs >1 sequence partition
     selectable: bool = True                    # may the adaptive policy pick it
     requires_L: bool = False                   # needs segment means per shard
+    default_codec: str = ""                    # repro.transport codec a plan
+                                               # with codec="" resolves to
 
     @property
     def perf_mode(self) -> str:
@@ -72,6 +74,11 @@ class ExchangeStrategy:
         if self.distributed and plan.seq_shards > 1 and plan.seq_axis is None:
             raise ValueError(f"{self.name} plan with seq_shards="
                              f"{plan.seq_shards} needs a seq_axis")
+        if plan.codec and plan.codec != self.default_codec:
+            from repro.transport import CodecSpec, get_codec
+            codec = get_codec(plan.codec)          # raises on unknown codec
+            codec.validate_spec(CodecSpec(L=plan.L, param=plan.codec_param))
+            return                    # non-default codec owns its parameters
         if self.requires_L and plan.L <= 0 and plan.cr <= 0:
             raise ValueError(f"{self.name} plan needs L > 0 or cr > 0 "
                              f"(got L={plan.L}, cr={plan.cr})")
@@ -114,6 +121,7 @@ class VoltageStrategy(ExchangeStrategy):
     exchange_mode = ExchangeMode.VOLTAGE
     distributed = True
     selectable = False
+    default_codec = "identity"
 
     def _prefill(self, q, k, v, cfg, **kw):
         return xchg.voltage_prefill_attention(q, k, v, cfg, **kw)
@@ -121,13 +129,21 @@ class VoltageStrategy(ExchangeStrategy):
 
 @register_strategy
 class PrismStrategy(ExchangeStrategy):
-    """Segment-Means exchange + scaling-aware softmax (the paper's PRISM)."""
+    """Compressed exchange + local-exact attention.  The codec is an axis:
+    the default ``segment_means`` is the paper's PRISM (scaling-aware
+    softmax over remote means — byte-identical to the pre-codec path); any
+    other registered codec (``int8``/``int4``/``topk``) exchanges encoded
+    K/V partitions and reconstructs remote context before attention."""
     name = "prism"
     exchange_mode = ExchangeMode.PRISM
     distributed = True
     requires_L = True
+    default_codec = "segment_means"
 
     def _prefill(self, q, k, v, cfg, **kw):
+        if cfg.codec and cfg.codec != self.default_codec:
+            from repro.transport.executor import codec_prefill_attention
+            return codec_prefill_attention(q, k, v, cfg, **kw)
         return xchg.prism_prefill_attention(q, k, v, cfg, **kw)
 
 
@@ -139,10 +155,14 @@ class PrismSimStrategy(ExchangeStrategy):
     exchange_mode = ExchangeMode.PRISM_SIM
     distributed = True
     requires_L = True
+    default_codec = "segment_means"
 
     @property
     def perf_mode(self) -> str:
         return "prism"
 
     def _prefill(self, q, k, v, cfg, **kw):
+        if cfg.codec and cfg.codec != self.default_codec:
+            from repro.transport.executor import codec_sim_prefill_attention
+            return codec_sim_prefill_attention(q, k, v, cfg, **kw)
         return xchg.prism_sim_prefill_attention(q, k, v, cfg, **kw)

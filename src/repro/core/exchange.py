@@ -91,6 +91,13 @@ class ExchangeConfig:
     strategy: Optional[str] = None   # registry name when it differs from the
                                      # mode (custom strategies reusing a
                                      # built-in ExchangeMode); None → mode
+    codec: str = ""                  # repro.transport codec; "" = the
+                                     # strategy's default (segment_means
+                                     # for PRISM)
+    codec_param: int = 0             # codec knob (quant tile / topk k)
+    overlap_chunks: int = 0          # >0: ring exchange with this many
+                                     # ppermute chunks per block transfer
+                                     # (compute/comm overlap); 0 = gather
 
     def with_mode(self, mode: ExchangeMode) -> "ExchangeConfig":
         return dataclasses.replace(self, mode=mode, strategy=None)
@@ -187,7 +194,16 @@ def prism_sim_prefill_attention(q, k, v, cfg, *, causal=False, window=None,
 
 def voltage_prefill_attention(q, k, v, cfg, *, causal=False, window=None,
                               logit_softcap=None, scale=None, kv_mask=None):
-    """Full-tensor K/V all-gather (the paper's Voltage baseline)."""
+    """Full-tensor K/V all-gather (the paper's Voltage baseline).
+
+    With ``cfg.overlap_chunks > 0`` (and no sliding window) the exchange
+    runs through the chunked ring executor instead: ``ppermute`` block
+    transfers double-buffered under per-block attention compute."""
+    if cfg.overlap_chunks > 0 and window is None:
+        from repro.transport.executor import ring_prefill_attention
+        return ring_prefill_attention(q, k, v, cfg, causal=causal,
+                                      logit_softcap=logit_softcap,
+                                      scale=scale, kv_mask=kv_mask)
     axis = cfg.seq_axis
     if kv_mask is None:
         kv_mask = jnp.ones(k.shape[:2], dtype=bool)

@@ -29,26 +29,32 @@ class PerfKey:
     batch: int
     cr: float            # 0.0 for local / voltage
     bandwidth_mbps: float
+    codec: str = ""      # exchange codec; "" = the mode's default
+                         # (segment_means for prism — pre-codec maps load
+                         # unchanged)
 
     def __post_init__(self):
-        if "|" in self.mode:
-            raise ValueError(f"mode {self.mode!r} must not contain '|' "
-                             "(it is the key-encoding separator)")
+        for field, val in (("mode", self.mode), ("codec", self.codec)):
+            if "|" in val:
+                raise ValueError(f"{field} {val!r} must not contain '|' "
+                                 "(it is the key-encoding separator)")
 
     def encode(self) -> str:
-        return f"{self.mode}|{self.batch}|{self.cr:g}|{self.bandwidth_mbps:g}"
+        base = f"{self.mode}|{self.batch}|{self.cr:g}|{self.bandwidth_mbps:g}"
+        return f"{base}|{self.codec}" if self.codec else base
 
     @staticmethod
     def decode(s: str) -> "PerfKey":
         parts = s.split("|")
-        if len(parts) != 4:
+        if len(parts) not in (4, 5):
             raise ValueError(f"malformed PerfKey string {s!r}: expected "
-                             "'mode|batch|cr|bandwidth'")
-        m, b, c, w = (p.strip() for p in parts)
+                             "'mode|batch|cr|bandwidth[|codec]'")
+        m, b, c, w = (p.strip() for p in parts[:4])
+        codec = parts[4].strip() if len(parts) == 5 else ""
         batch = float(b)           # tolerate "8.0"-style batch strings
         if batch != int(batch):
             raise ValueError(f"non-integer batch {b!r} in PerfKey {s!r}")
-        return PerfKey(m, int(batch), float(c), float(w))
+        return PerfKey(m, int(batch), float(c), float(w), codec)
 
 
 @dataclasses.dataclass

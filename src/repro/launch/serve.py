@@ -47,6 +47,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--L", type=int, default=4)
+    ap.add_argument("--codec", default="none",
+                    choices=["none", "int8", "int4", "topk"],
+                    help="register an extra compressed-exchange plan with "
+                         "this repro.transport codec and add it to the "
+                         "profiling sweep (the policy may then select it)")
     ap.add_argument("--bandwidth", type=float, default=400.0,
                     help="observed link bandwidth (Mbps) for the policy")
     ap.add_argument("--objective", default="latency",
@@ -69,17 +74,27 @@ def main():
 
     allow = {"local": ("local",), "prism": ("prism",),
              "adaptive": None}[args.mode]
+    plans = [ExecutionPlan.local(), ExecutionPlan.prism_sim(L=args.L, cr=9.9)]
+    codecs = ()
+    if args.codec != "none":
+        from repro.transport import get_codec
+        plans.append(ExecutionPlan("prism_sim", seq_axis="seq",
+                                   seq_shards=2, codec=args.codec,
+                                   codec_param=get_codec(
+                                       args.codec).default_param))
+        codecs = (args.codec,)
     session = InferenceSession.from_config(
-        args.arch, reduced={"vocab_size": 512},
-        plans=[ExecutionPlan.local(),
-               ExecutionPlan.prism_sim(L=args.L, cr=9.9)],
+        args.arch, reduced={"vocab_size": 512}, plans=plans,
         objective=args.objective, allow_modes=allow,
         initial_bandwidth_mbps=args.bandwidth)
-    session.profile(backend="simulated")        # paper's offline sweep
+    from repro.profiling import SweepSpec
+    session.profile(SweepSpec(codecs=codecs),
+                    backend="simulated")        # paper's offline sweep
     d = session.decide(args.batch)
     print(f"policy: B={args.batch} BW={args.bandwidth:g} Mbps "
           f"[{args.objective}] → {d.mode}"
           + (f" CR={d.cr:g}" if d.cr else "")
+          + (f" codec={d.codec}" if d.codec else "")
           + f" ({d.expected.per_sample_ms:.1f} ms/sample expected"
           + (", EXTRAPOLATED batch" if d.extrapolated else "") + ")")
 
@@ -112,9 +127,15 @@ def main():
         by_plan[c.plan_key] = by_plan.get(c.plan_key, 0) + 1
     print(f"served {len(comps)} requests ({total_toks} tokens) in {dt:.2f}s "
           f"→ {total_toks / dt:.1f} tok/s host wall")
+    by_codec = {}
+    for c in comps:
+        name = c.codec or "-"
+        by_codec[name] = by_codec.get(name, 0) + 1
     print(f"latency p50 {np.percentile(lats, 50):.0f} ms  "
           f"p99 {np.percentile(lats, 99):.0f} ms  "
           f"plans {by_plan}  max concurrent {rt.stats['max_concurrent']}")
+    print(f"transport: codecs {by_codec}  "
+          f"{rt.stats['wire_bytes'] / 1e6:.2f} MB on wire (modeled)")
     if args.slo_ms:
         met = sum(1 for c in comps if c.slo_met)
         print(f"SLO {args.slo_ms:g} ms: {met}/{len(comps)} met")

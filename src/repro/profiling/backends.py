@@ -26,14 +26,42 @@ a ``profile(ctx, spec, **opts)`` returning a PerfMap plugs into
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Type
+from typing import Any, Callable, Dict, Optional, Tuple, Type
 
 from repro.core.costmodel import EdgeCostModel, EdgeWorkload
 from repro.core.perfmap import PerfEntry, PerfKey, PerfMap
 from repro.profiling.hardware import (JETSON_ORIN_NANO, WIFI_GLOO,
                                       HardwareProfile, LinkProfile,
                                       to_edge_constants)
-from repro.profiling.sweep import SweepSpec, workload_from_config
+from repro.profiling.sweep import (SweepSpec, codec_entries,
+                                   workload_from_config)
+
+
+def _codec_row(model: EdgeCostModel, ctx: "ProfileContext", name: str,
+               param: int, B: int, bw: float, P: int,
+               link_kind: str) -> Tuple[Dict, Dict]:
+    """One simulated (codec, batch, bandwidth) cell: per-device compute
+    over the full reconstructed context + transport accounting from the
+    codec × link pair (``repro.transport.exchange_cost``)."""
+    from repro.core.costmodel import vit_flops_per_sample
+    from repro.transport import exchange_cost
+    w, c = model.w, model.c
+    N = w.n_tokens
+    Np = N // P + (N % P > 0)
+    terms = exchange_cost(name, n_tokens=N, d_model=w.d_model,
+                          bytes_per_el=w.bytes_per_el, batch=B, P=P,
+                          n_layers=w.n_layers, bandwidth_mbps=bw,
+                          profile=ctx.link, link=link_kind, param=param)
+    # remote partitions are reconstructed per token, so attention runs over
+    # the full context (vs PRISM's Np + (P-1)·L); decode is charged to the
+    # compute stage of the receiving device
+    flops = vit_flops_per_sample(w, Np, N)
+    b_eff = B * Np / N
+    compute_ms = (flops * B / c.eff(b_eff) * 1e3 + c.launch_overhead_ms
+                  + c.coord_overhead_ms + terms["decode_ms"])
+    row = model.pack(B, compute_ms, terms["staging_ms"], terms["comm_ms"],
+                     boards=P)
+    return row, terms
 
 
 @dataclasses.dataclass
@@ -128,22 +156,43 @@ class SimulatedBackend(ProfileBackend):
 
     def profile(self, ctx: Optional[ProfileContext] = None,
                 spec: SweepSpec = SweepSpec(), *,
-                model: Optional[EdgeCostModel] = None) -> PerfMap:
+                model: Optional[EdgeCostModel] = None,
+                link_kind: str = "staged") -> PerfMap:
         from repro.core.segment_means import cr_to_L
+        from repro.transport import exchange_wire_bytes
         ctx = ctx or ProfileContext()
         custom_model = model is not None or ctx.cost_model is not None
         model = model or ctx.edge_model()
         pm = PerfMap()
-        N = model.w.n_tokens
+        w = model.w
+        N = w.n_tokens
+        codecs = codec_entries(spec)
         for B in spec.batches:
             pm.put(PerfKey("local", B, 0.0, 0.0), _entry(model.local(B)))
             for bw in spec.bandwidths_mbps:
                 rv = model.distributed(B, bw, spec.P, L=None)
-                pm.put(PerfKey("voltage", B, 0.0, bw), _entry(rv))
+                wb_v = exchange_wire_bytes(
+                    "identity", n_tokens=N, d_model=w.d_model,
+                    bytes_per_el=w.bytes_per_el, batch=B, P=spec.P,
+                    n_layers=w.n_layers)
+                pm.put(PerfKey("voltage", B, 0.0, bw),
+                       _entry(rv, {"wire_bytes": wb_v}))
                 for cr in spec.crs:
                     L = cr_to_L(N, spec.P, cr)
                     rp = model.distributed(B, bw, spec.P, L=L)
-                    pm.put(PerfKey("prism", B, cr, bw), _entry(rp, {"L": L}))
+                    wb = exchange_wire_bytes(
+                        "segment_means", n_tokens=N, d_model=w.d_model,
+                        bytes_per_el=w.bytes_per_el, batch=B, P=spec.P,
+                        n_layers=w.n_layers, L=L)
+                    pm.put(PerfKey("prism", B, cr, bw),
+                           _entry(rp, {"L": L, "wire_bytes": wb}))
+                for name, param in codecs:
+                    row, terms = _codec_row(model, ctx, name, param, B, bw,
+                                            spec.P, link_kind)
+                    pm.put(PerfKey("prism", B, round(terms["ratio"], 2),
+                                   bw, name),
+                           _entry(row, {"codec": name, "param": param,
+                                        "wire_bytes": terms["wire_bytes"]}))
         return _stamp(pm, ctx, from_profiles=not custom_model)
 
 
@@ -198,6 +247,24 @@ class MeasuredBackend(ProfileBackend):
                 L = plan.L if plan.L > 0 else None
                 per_dev_ms = compute_ms / P + model.c.coord_overhead_ms
                 for bw in spec.bandwidths_mbps:
+                    if plan.codec:     # non-default codec: transport terms
+                        from repro.transport import exchange_cost
+                        terms = exchange_cost(
+                            plan.codec, n_tokens=workload.n_tokens,
+                            d_model=workload.d_model,
+                            bytes_per_el=workload.bytes_per_el, batch=B,
+                            P=P, n_layers=workload.n_layers,
+                            bandwidth_mbps=bw, profile=ctx.link,
+                            link=plan.link or "staged", L=plan.L,
+                            param=plan.codec_param)
+                        r = model.pack(B, per_dev_ms + terms["decode_ms"],
+                                       terms["staging_ms"],
+                                       terms["comm_ms"], boards=P)
+                        pm.put(plan.to_perf_key(B, bw),
+                               _entry(r, dict(
+                                   meta, codec=plan.codec,
+                                   wire_bytes=terms["wire_bytes"])))
+                        continue
                     rm = model.distributed(B, bw, P, L=L)
                     r = model.pack(B, per_dev_ms, rm["staging_ms"],
                                    rm["comm_ms"], boards=P)

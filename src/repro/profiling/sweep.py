@@ -29,12 +29,33 @@ class SweepSpec:
     bandwidths_mbps: Sequence[float] = PAPER_BWS
     P: int = 2
     warmup_runs: int = 20          # T in the paper's cost estimate
+    # extra exchange codecs to sweep alongside the segment-means CR grid:
+    # each entry is a codec name ("int8") or a (name, param) pair
+    # (("topk", 8)); "segment_means" itself is the `crs` axis above
+    codecs: Sequence = ()
+
+
+def codec_entries(spec: SweepSpec):
+    """Normalized (name, param) pairs of the spec's extra codec axis
+    (``segment_means`` is skipped — it is the classic ``crs`` grid)."""
+    out = []
+    for c in spec.codecs:
+        name, param = c if isinstance(c, (tuple, list)) else (c, 0)
+        if name == "segment_means":
+            continue
+        if param == 0:
+            from repro.transport import get_codec
+            param = get_codec(name).default_param
+        out.append((name, int(param)))
+    return out
 
 
 def sweep_cost(spec: SweepSpec) -> int:
-    """|B|·|CR|·|BW|·T inference passes (paper's one-time profiling cost)."""
-    return (len(spec.batches) * len(spec.crs) * len(spec.bandwidths_mbps)
-            * spec.warmup_runs)
+    """|B|·(|CR|+|codecs|)·|BW|·T inference passes (the paper's one-time
+    profiling cost, extended by the codec axis)."""
+    return (len(spec.batches)
+            * (len(spec.crs) + len(codec_entries(spec)))
+            * len(spec.bandwidths_mbps) * spec.warmup_runs)
 
 
 def workload_from_config(cfg, seq_len: int = 0) -> EdgeWorkload:

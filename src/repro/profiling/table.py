@@ -22,7 +22,7 @@ from repro.core.perfmap import PerfEntry, PerfKey, PerfMap
 from repro.profiling.objectives import (Objective, ObjectiveLike,
                                         resolve_objective)
 
-Candidate = Tuple[str, float]         # (mode, cr)
+Candidate = Tuple[str, float, str]    # (mode, cr, codec)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +49,8 @@ class Decision:
     expected: PerfEntry
     objective: Objective
     extrapolated: bool = False  # batch outside the profiled grid, snapped
+    codec: str = ""            # exchange codec ("" = the mode's default,
+                               # i.e. segment_means for prism)
 
     @property
     def distributed(self) -> bool:
@@ -57,9 +59,16 @@ class Decision:
     @property
     def exec_key(self) -> str:
         """Canonical executable id this decision routes to — the ONE home
-        of the ``"local"`` / ``"mode@cr"`` convention (matches
+        of the ``"local"`` / ``"mode@cr[+codec]"`` convention (matches
         ``ExecutionPlan.key``)."""
-        return self.mode if self.cr <= 0 else f"{self.mode}@{self.cr:g}"
+        base = self.mode if self.cr <= 0 else f"{self.mode}@{self.cr:g}"
+        return f"{base}+{self.codec}" if self.codec else base
+
+    @property
+    def wire_bytes(self) -> int:
+        """Profiled bytes-on-wire of the expected entry (0 if the sweep
+        recorded none, e.g. a local decision)."""
+        return int(self.expected.meta.get("wire_bytes", 0))
 
 
 def _lerp_entry(a: PerfEntry, b: PerfEntry, t: float) -> PerfEntry:
@@ -105,7 +114,7 @@ class PolicyTable:
             else:
                 bws.add(k.bandwidth_mbps)
                 dist.setdefault((k.batch, k.bandwidth_mbps),
-                                {})[(k.mode, k.cr)] = e
+                                {})[(k.mode, k.cr, k.codec)] = e
         if not batches:
             raise LookupError("empty performance map")
         batch_grid = sorted(batches)
@@ -116,20 +125,21 @@ class PolicyTable:
             for w in (bw_grid or [0.0]):      # local-only map: one column
                 cell: Dict[Candidate, PerfEntry] = {}
                 if b in local:
-                    cell[("local", 0.0)] = local[b]
+                    cell[("local", 0.0, "")] = local[b]
                 cell.update(dist.get((b, w), {}))
                 row.append(cell)
             cells.append(row)
         return cls(batch_grid, bw_grid, cells, obj)
 
     def _argmin(self, cell: Dict[Candidate, PerfEntry]
-                ) -> Optional[Tuple[str, float, PerfEntry]]:
+                ) -> Optional[Tuple[str, float, str, PerfEntry]]:
         if not cell:
             return None
-        (m, cr), e = min(cell.items(),
-                         key=lambda kv: (self.objective.cost(kv[1]),
-                                         kv[0][0] != "local", kv[0][1]))
-        return (m, cr, e)
+        (m, cr, cod), e = min(cell.items(),
+                              key=lambda kv: (self.objective.cost(kv[1]),
+                                              kv[0][0] != "local", kv[0][1],
+                                              kv[0][2]))
+        return (m, cr, cod, e)
 
     # -- grid lookups ---------------------------------------------------------
 
@@ -165,9 +175,9 @@ class PolicyTable:
         if best is None:
             raise LookupError(
                 f"no profiled candidates at batch {self.batches[bi]}")
-        m, cr, e = best
+        m, cr, cod, e = best
         return Decision(mode=m, cr=cr, expected=e, objective=self.objective,
-                        extrapolated=extrapolated)
+                        extrapolated=extrapolated, codec=cod)
 
     def _interp(self, bi: int, w0: int, w1: int, bw: float,
                 extrapolated: bool) -> Decision:
@@ -180,12 +190,13 @@ class PolicyTable:
         best, best_cost = None, None
         for cand in shared:
             e = _lerp_entry(c0[cand], c1[cand], t)
-            cost = (self.objective.cost(e), cand[0] != "local", cand[1])
+            cost = (self.objective.cost(e), cand[0] != "local", cand[1],
+                    cand[2])
             if best_cost is None or cost < best_cost:
                 best, best_cost = (cand, e), cost
-        (m, cr), e = best
+        (m, cr, cod), e = best
         return Decision(mode=m, cr=cr, expected=e, objective=self.objective,
-                        extrapolated=extrapolated)
+                        extrapolated=extrapolated, codec=cod)
 
     def candidates(self, batch: int, bandwidth_mbps: float
                    ) -> List[Tuple[PerfKey, PerfEntry]]:
@@ -209,8 +220,8 @@ class PolicyTable:
                 cell = {c: _lerp_entry(c0[c], c1[c], t)
                         for c in c0 if c in c1}
                 label = bandwidth_mbps
-        return [(PerfKey(m, b, cr, 0.0 if m == "local" else label), e)
-                for (m, cr), e in cell.items()]
+        return [(PerfKey(m, b, cr, 0.0 if m == "local" else label, cod), e)
+                for (m, cr, cod), e in cell.items()]
 
     # -- batch formation (serving scheduler) ----------------------------------
 

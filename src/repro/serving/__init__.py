@@ -5,19 +5,20 @@ Request traffic goes queue → scheduler → runtime:
 * :class:`Request` / :class:`RequestQueue` — bounded intake with arrival
   timestamps and per-request SLO deadlines.
 * :class:`AdaptiveScheduler` — micro-batch formation from the compiled
-  policy table (batch size AND mode/CR chosen per the active objective).
+  policy table (batch size AND mode/CR/codec chosen per the active
+  objective).
 * :class:`ServingRuntime` — continuous-batching decode on a slot-based
   KV-cache pool (admit between chunks, evict finished, one executable per
-  (plan, slot-count)), with fault/straggler hooks.
+  (plan, slot-count)), with fault/straggler hooks; completions carry the
+  serving plan's exchange codec and modeled bytes-on-wire.
 
-``AdaptiveDispatcher`` and ``ServeEngine`` are deprecation shims slated for
-removal (``repro.api.InferenceSession`` / :class:`ServingRuntime` replace
-them); the step builders stay canonical for dry-run shape analysis.
+The deprecated ``AdaptiveDispatcher``/``ServeEngine`` shims have been
+**removed** — use ``repro.api.InferenceSession`` (single batches /
+generation) or :class:`ServingRuntime` (request traffic).  The step
+builders stay canonical for dry-run shape analysis.
 """
-from repro.serving.dispatcher import AdaptiveDispatcher, DispatchRecord
-from repro.serving.engine import (Completion, ServeEngine, ServingRuntime,
-                                  SlotPool, build_decode_step,
-                                  build_prefill_step)
+from repro.serving.engine import (Completion, ServingRuntime, SlotPool,
+                                  build_decode_step, build_prefill_step)
 from repro.serving.queue import QueueFull, Request, RequestQueue
 from repro.serving.scheduler import (AdaptiveScheduler, FailoverEvent,
                                      FaultHook, MicroBatch, RebalanceEvent,
@@ -27,5 +28,4 @@ __all__ = ["Request", "RequestQueue", "QueueFull",
            "AdaptiveScheduler", "MicroBatch",
            "ServingRuntime", "SlotPool", "Completion",
            "FaultHook", "StragglerHook", "FailoverEvent", "RebalanceEvent",
-           "ServeEngine", "build_prefill_step", "build_decode_step",
-           "AdaptiveDispatcher", "DispatchRecord"]
+           "build_prefill_step", "build_decode_step"]

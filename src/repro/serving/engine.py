@@ -17,9 +17,10 @@ re-mesh → re-admit in-flight requests) and a :class:`StragglerHook`
 ``step()``.
 
 The legacy step builders (``build_prefill_step``/``build_decode_step``)
-remain the canonical jit targets for dry-run shape analysis.  ``ServeEngine``
-is a deprecation shim scheduled for removal (use
-``InferenceSession.generate`` / ``ServingRuntime``).
+remain the canonical jit targets for dry-run shape analysis.  The old
+``ServeEngine``/``AdaptiveDispatcher`` shims are **removed** — use
+``InferenceSession.generate``/``InferenceSession.dispatch`` (single
+batches) or :class:`ServingRuntime` (request traffic).
 """
 from __future__ import annotations
 
@@ -77,6 +78,8 @@ class Completion:
     finished_ts: float
     slo_ms: Optional[float] = None
     extrapolated: bool = False         # scheduled off the profiled grid
+    codec: str = ""                    # exchange codec of the serving plan
+    wire_bytes: int = 0                # modeled bytes-on-wire, this request
 
     @property
     def latency_ms(self) -> float:
@@ -107,6 +110,8 @@ class _Active:
     extrapolated: bool
     first_tok: Any = None                  # [1, 1] device array
     tokens: List[int] = dataclasses.field(default_factory=list)
+    codec: str = ""                        # exchange codec of the plan
+    wire_bytes: int = 0                    # modeled per-request wire bytes
 
     @property
     def emitted(self) -> int:
@@ -172,8 +177,13 @@ class SlotPool:
                                     self.keys, self.temps, cache, slot,
                                     tok0, req.prompt_len, key,
                                     req.temperature)
+        from repro.transport import plan_wire_bytes
+        wire = plan_wire_bytes(self.plan, self.session.cfg, 1,
+                               req.prompt_len)
         active = _Active(request=req, admitted_ts=now, exec_key=exec_key,
-                         extrapolated=extrapolated, first_tok=tok0)
+                         extrapolated=extrapolated, first_tok=tok0,
+                         codec=(self.plan.effective_codec if wire else ""),
+                         wire_bytes=wire)
         self.slots[slot] = active
         return active
 
@@ -246,7 +256,8 @@ class ServingRuntime:
         self.pools: Dict[str, SlotPool] = {}
         self.completions: List[Completion] = []
         self.stats = {"steps": 0, "chunks": 0, "admitted": 0,
-                      "requeued": 0, "max_concurrent": 0}
+                      "requeued": 0, "max_concurrent": 0,
+                      "wire_bytes": 0}      # modeled bytes-on-wire admitted
 
     # -- request intake ------------------------------------------------------
 
@@ -310,7 +321,8 @@ class ServingRuntime:
                         plan_key=key, arrival_ts=act.request.arrival_ts,
                         admitted_ts=act.admitted_ts, finished_ts=fin,
                         slo_ms=act.request.slo_ms,
-                        extrapolated=act.extrapolated))
+                        extrapolated=act.extrapolated,
+                        codec=act.codec, wire_bytes=act.wire_bytes))
         self.completions.extend(done)
         return done
 
@@ -370,8 +382,9 @@ class ServingRuntime:
         pool = self._pool(mb.exec_key)
         free_ids = pool.free_slots()
         for req, slot in zip(mb.requests, free_ids):
-            pool.admit(req, slot, mb.exec_key, mb.extrapolated, now)
+            act = pool.admit(req, slot, mb.exec_key, mb.extrapolated, now)
             self.stats["admitted"] += 1
+            self.stats["wire_bytes"] += act.wire_bytes
         overflow = mb.requests[len(free_ids):]
         for req in overflow:               # should not happen; be safe
             self.queue.put(req, force=True)
@@ -407,39 +420,3 @@ class ServingRuntime:
         # chunk walls are telemetry only — genuinely per-device step times
         # must come from the fleet via hook.observe(times, n_tokens=...)
         self.straggler_hook.observe_chunk(wall_ms, self.chunk)
-
-
-@dataclasses.dataclass
-class ServeEngine:
-    """Legacy generation surface, now a thin veneer over the compiled
-    fast path (`repro.api.generation`) — the per-token Python loop it used
-    to duplicate is gone.
-
-    .. deprecated:: superseded by ``repro.api.InferenceSession.generate``
-       (single batches) and :class:`ServingRuntime` (request traffic);
-       removed in the next release.
-    """
-    cfg: ModelConfig
-    xcfg: ExchangeConfig
-    params: Any
-    max_len: int = 256
-    temperature: float = 0.0
-
-    def __post_init__(self):
-        import warnings
-        warnings.warn("ServeEngine is deprecated and will be removed in "
-                      "the next release; use "
-                      "repro.api.InferenceSession.generate or "
-                      "repro.serving.ServingRuntime",
-                      DeprecationWarning, stacklevel=2)
-        self._gen_fns: Dict[Any, Any] = {}
-
-    def generate(self, prompt_tokens: jnp.ndarray, n_new: int,
-                 batch_extras: Optional[Dict[str, jnp.ndarray]] = None,
-                 seed: int = 0):
-        """prompt_tokens: [B, T0] → generated [B, n_new] (greedy/T)."""
-        from repro.api import generation as gen
-        return gen.generate(self.params, prompt_tokens, n_new, self.cfg,
-                            self.xcfg, batch_extras=batch_extras, seed=seed,
-                            temperature=self.temperature,
-                            _cache=self._gen_fns)

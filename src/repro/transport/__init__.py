@@ -1,0 +1,42 @@
+"""`repro.transport` — pluggable exchange codecs + staged-link transport.
+
+The paper's bottleneck is CPU-staged communication that scales with *bytes
+moved*; this package makes both byte-reducing axes first class:
+
+* :class:`ExchangeCodec` registry (``identity`` / ``segment_means`` /
+  ``int8`` / ``int4`` / ``topk``) — what the wire payload *is*: a
+  jit-/shard_map-compatible encode/decode pair with exact wire-byte
+  accounting (``@register_codec`` to add your own).
+* :class:`TransportLink` registry (``staged`` CPU-memory path vs ``direct``
+  collective) — *how* the bytes travel, with per-stage cost accounting fed
+  by the profiled :class:`~repro.profiling.hardware.LinkProfile`.
+* the chunked exchange executor (:func:`ring_prefill_attention`) — ring
+  ``ppermute`` transfers split into chunks and double-buffered under
+  attention compute, plus the generic codec exchange
+  (:func:`codec_prefill_attention`) and its single-host oracle.
+
+``ExecutionPlan(codec=..., codec_param=..., link=...)`` threads these
+through the session/policy stack; :func:`exchange_cost` /
+:func:`plan_wire_bytes` are the accounting entry points the profiler and
+the serving telemetry share.
+"""
+from repro.transport.codecs import (CodecSpec, ExchangeCodec, get_codec,
+                                    list_codecs, payload_nbytes,
+                                    register_codec)
+from repro.transport.executor import (codec_prefill_attention,
+                                      codec_sim_attention,
+                                      codec_sim_prefill_attention,
+                                      ring_prefill_attention)
+from repro.transport.links import (LinkCost, TransportLink, exchange_cost,
+                                   exchange_wire_bytes, get_link,
+                                   list_links, plan_wire_bytes,
+                                   register_link)
+
+__all__ = [
+    "ExchangeCodec", "CodecSpec", "register_codec", "get_codec",
+    "list_codecs", "payload_nbytes",
+    "TransportLink", "LinkCost", "register_link", "get_link", "list_links",
+    "exchange_cost", "exchange_wire_bytes", "plan_wire_bytes",
+    "ring_prefill_attention", "codec_prefill_attention",
+    "codec_sim_attention", "codec_sim_prefill_attention",
+]

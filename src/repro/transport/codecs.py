@@ -1,0 +1,350 @@
+"""Pluggable exchange codecs — what the bytes on the wire *are*.
+
+The paper's bottleneck on Jetson-class devices is CPU-staged communication,
+an overhead that scales with bytes moved; PRISM's Segment Means is one point
+in a compression-ratio space (arXiv 2507.12145), and quantization-level
+co-design is where edge wins come from (EdgeTran, arXiv 2303.13745).  This
+module makes the compressor a first-class, registered axis: an
+:class:`ExchangeCodec` is a jit-/shard_map-compatible encode/decode pair
+with *exact* wire-byte accounting, so the profiler can sweep codecs and the
+policy can select one per (batch, bandwidth) decision.
+
+Built-ins:
+
+* ``identity``      — full-tensor exchange (the Voltage baseline payload).
+* ``segment_means`` — the paper's PRISM compressor (L column-wise means per
+  partition, routed through the kernel-dispatch layer).  *Summarizing*: the
+  decoded payload has L tokens, consumed by the scaling-aware softmax, not
+  a per-token reconstruction.
+* ``int8`` / ``int4`` — per-tile symmetric quantize–dequantize (one f32
+  scale per tile along the feature axis; int4 packs two values per byte).
+* ``topk``          — sparse: keep the k largest-|x| features per vector
+  (values + indices on the wire).
+
+Register your own with ``@register_codec``; after registration
+``ExecutionPlan(mode="prism", codec="mycodec", ...)`` and the whole
+session/policy surface work unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Type
+
+import jax
+import jax.numpy as jnp
+
+# characters reserved by PerfKey ('|'), ExecutionPlan keys ('@', '+') and
+# the sweep axis — a codec name must survive all three encodings
+_RESERVED = set("|@+# \t\n")
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecSpec:
+    """Static per-plan codec parameters (safe to close over under jit).
+
+    ``L``     — segment means per partition (``segment_means`` only).
+    ``param`` — codec-specific knob: quantization tile size along the
+                feature axis (0 = one scale per whole vector) for
+                ``int8``/``int4``; k (features kept per vector) for
+                ``topk``.
+    """
+    L: int = 0
+    param: int = 0
+
+
+class ExchangeCodec:
+    """One way to put a K/V partition on the wire.
+
+    ``encode``/``decode`` are pure jnp functions of arrays + a static
+    :class:`CodecSpec` — traceable under ``jit`` and inside ``shard_map``
+    manual regions.  ``wire_bytes`` is the exact payload size (must equal
+    the summed ``nbytes`` of the encoded leaves); ``token_wire_bytes`` is
+    the model-level cost the profiler charges per shipped token.
+    """
+
+    name: str = ""
+    summarizing: bool = False     # decoded payload has L tokens, not N
+    lossless: bool = False
+    default_param: int = 0        # default spec.param for parameterized
+                                  # codecs (profiling sweeps use it)
+    # modeled reconstruction throughput (raw bytes/s) charged by the
+    # profiler as decode time on the receiving device; 0 = free
+    decode_bw: float = 0.0
+
+    # -- wire format ---------------------------------------------------------
+
+    def encode(self, x: jnp.ndarray, spec: CodecSpec) -> Dict[str, jnp.ndarray]:
+        raise NotImplementedError
+
+    def decode(self, payload: Dict[str, jnp.ndarray], spec: CodecSpec,
+               shape=None, dtype=None) -> jnp.ndarray:
+        """Reconstruct (``shape``/``dtype`` of the original tensor; codecs
+        that can derive them from the payload may ignore both)."""
+        raise NotImplementedError
+
+    # -- accounting ----------------------------------------------------------
+
+    def wire_bytes(self, shape, dtype, spec: CodecSpec) -> int:
+        """Exact bytes on the wire for one encoded tensor."""
+        raise NotImplementedError
+
+    def token_wire_bytes(self, feat: int, bytes_per_el: int,
+                         spec: CodecSpec) -> float:
+        """Model-level wire bytes per shipped token of a ``feat``-wide
+        payload (the profiler's per-token charge)."""
+        raise NotImplementedError
+
+    def ratio(self, shape, dtype, spec: CodecSpec) -> float:
+        """Compression ratio: raw bytes / wire bytes."""
+        raw = math.prod(shape) * jnp.dtype(dtype).itemsize
+        return raw / max(self.wire_bytes(shape, dtype, spec), 1)
+
+    def validate_spec(self, spec: CodecSpec) -> None:
+        """Raise on parameters this codec cannot execute with."""
+
+
+_REGISTRY: Dict[str, ExchangeCodec] = {}
+
+
+def register_codec(cls: Type[ExchangeCodec]) -> Type[ExchangeCodec]:
+    """Class decorator: instantiate and register under ``cls.name``."""
+    name = getattr(cls, "name", "")
+    if not name:
+        raise ValueError(f"{cls.__name__} must define a non-empty `name`")
+    if _RESERVED & set(name):
+        raise ValueError(f"codec name {name!r} contains a reserved "
+                         f"character (one of {''.join(sorted(_RESERVED))!r})")
+    if not name[0].isalpha():
+        # "mode@cr+codec" parsing disambiguates exponent '+' from the
+        # codec separator by this property
+        raise ValueError(f"codec name {name!r} must start with a letter")
+    if name in _REGISTRY:
+        raise ValueError(f"codec {name!r} already registered "
+                         f"(by {type(_REGISTRY[name]).__name__})")
+    _REGISTRY[name] = cls()
+    return cls
+
+
+def get_codec(name: str) -> ExchangeCodec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown exchange codec {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def list_codecs() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def payload_nbytes(payload: Dict[str, jnp.ndarray]) -> int:
+    """Summed device bytes of an encoded payload (accounting cross-check)."""
+    return sum(int(v.size) * v.dtype.itemsize
+               for v in jax.tree_util.tree_leaves(payload))
+
+
+# ---------------------------------------------------------------------------
+# identity — full-tensor exchange (the Voltage baseline payload)
+# ---------------------------------------------------------------------------
+
+@register_codec
+class IdentityCodec(ExchangeCodec):
+    name = "identity"
+    lossless = True
+
+    def encode(self, x, spec):
+        return {"x": x}
+
+    def decode(self, payload, spec, shape=None, dtype=None):
+        return payload["x"]
+
+    def wire_bytes(self, shape, dtype, spec):
+        return math.prod(shape) * jnp.dtype(dtype).itemsize
+
+    def token_wire_bytes(self, feat, bytes_per_el, spec):
+        return feat * bytes_per_el
+
+
+# ---------------------------------------------------------------------------
+# segment_means — the paper's PRISM compressor (summarizing)
+# ---------------------------------------------------------------------------
+
+@register_codec
+class SegmentMeansCodec(ExchangeCodec):
+    """L column-wise means per partition (PRISM Eq. 1), via the
+    kernel-dispatch layer (Pallas on TPU, jnp reference elsewhere).  The
+    decoded payload *is* the means — consumers apply the scaling-aware
+    softmax rather than reconstructing per-token K/V."""
+
+    name = "segment_means"
+    summarizing = True
+
+    def encode(self, x, spec):
+        from repro.kernels import dispatch as kdsp
+        if spec.L <= 0:
+            raise ValueError("segment_means codec needs spec.L > 0")
+        return {"means": kdsp.segment_means(x, spec.L, axis=1)}
+
+    def decode(self, payload, spec, shape=None, dtype=None):
+        return payload["means"]
+
+    def wire_bytes(self, shape, dtype, spec):
+        n = shape[1]
+        return (math.prod(shape) // n) * spec.L * jnp.dtype(dtype).itemsize
+
+    def token_wire_bytes(self, feat, bytes_per_el, spec):
+        # full precision per shipped *mean*; the token-count reduction
+        # N_p → L is applied by the caller (shipped-token accounting)
+        return feat * bytes_per_el
+
+    def validate_spec(self, spec):
+        if spec.L <= 0:
+            raise ValueError("segment_means codec needs L > 0")
+
+
+# ---------------------------------------------------------------------------
+# int8 / int4 — per-tile symmetric quantization
+# ---------------------------------------------------------------------------
+
+def _tile(feat: int, spec: CodecSpec) -> int:
+    t = spec.param if spec.param > 0 else feat
+    if feat % t != 0:
+        raise ValueError(f"feature width {feat} not divisible into "
+                         f"quantization tiles of {t}")
+    return t
+
+
+class _QuantCodec(ExchangeCodec):
+    """Shared symmetric per-tile quantizer: one f32 scale per tile along
+    the trailing (feature) axis, values in [-qmax, qmax]."""
+
+    qmax: int = 127
+
+    def _scaled(self, x, spec):
+        t = _tile(x.shape[-1], spec)
+        xr = x.reshape(x.shape[:-1] + (x.shape[-1] // t, t)).astype(
+            jnp.float32)
+        scale = jnp.max(jnp.abs(xr), axis=-1, keepdims=True) / self.qmax
+        q = jnp.round(xr / jnp.maximum(scale, 1e-12))
+        q = jnp.clip(q, -self.qmax, self.qmax)
+        return q, scale, xr.shape
+
+    def wire_bytes(self, shape, dtype, spec):
+        n_tiles = math.prod(shape) // _tile(shape[-1], spec)
+        return self._payload_bytes(math.prod(shape)) + 4 * n_tiles
+
+    def token_wire_bytes(self, feat, bytes_per_el, spec):
+        t = spec.param if spec.param > 0 else feat
+        return self._payload_bytes(feat) + 4.0 * -(-feat // t)
+
+    def _payload_bytes(self, n_el: int) -> int:
+        raise NotImplementedError
+
+
+@register_codec
+class Int8Codec(_QuantCodec):
+    name = "int8"
+    decode_bw = 8e8       # modeled dequantization throughput, raw bytes/s
+
+    def encode(self, x, spec):
+        q, scale, qshape = self._scaled(x, spec)
+        return {"q": q.astype(jnp.int8).reshape(x.shape),
+                "scale": scale.reshape(qshape[:-1])}
+
+    def decode(self, payload, spec, shape=None, dtype=None):
+        q, scale = payload["q"], payload["scale"]
+        t = _tile(q.shape[-1], spec)
+        xr = q.reshape(scale.shape + (t,)).astype(jnp.float32)
+        out = (xr * scale[..., None]).reshape(q.shape)
+        return out.astype(dtype if dtype is not None else jnp.float32)
+
+    def _payload_bytes(self, n_el):
+        return n_el
+
+
+@register_codec
+class Int4Codec(_QuantCodec):
+    """4-bit symmetric quantization, two values packed per byte (the
+    bit-unpacking makes reconstruction ~4x slower than int8 — the modeled
+    ``decode_bw`` is what lets the policy trade wire savings against it)."""
+
+    name = "int4"
+    qmax = 7
+    decode_bw = 2e8
+
+    def encode(self, x, spec):
+        if x.shape[-1] % 2 != 0:
+            raise ValueError("int4 codec needs an even feature width "
+                             f"(got {x.shape[-1]})")
+        q, scale, qshape = self._scaled(x, spec)
+        biased = (q + 8).astype(jnp.uint8).reshape(x.shape)  # 1..15
+        packed = biased[..., 0::2] | (biased[..., 1::2] << 4)
+        return {"q": packed, "scale": scale.reshape(qshape[:-1])}
+
+    def decode(self, payload, spec, shape=None, dtype=None):
+        packed, scale = payload["q"], payload["scale"]
+        lo = (packed & 0xF).astype(jnp.int32)
+        hi = (packed >> 4).astype(jnp.int32)
+        q = jnp.stack([lo, hi], axis=-1).reshape(
+            packed.shape[:-1] + (2 * packed.shape[-1],)) - 8
+        t = _tile(q.shape[-1], spec)
+        xr = q.reshape(scale.shape + (t,)).astype(jnp.float32)
+        out = (xr * scale[..., None]).reshape(q.shape)
+        return out.astype(dtype if dtype is not None else jnp.float32)
+
+    def wire_bytes(self, shape, dtype, spec):
+        n_tiles = math.prod(shape) // _tile(shape[-1], spec)
+        return math.prod(shape) // 2 + 4 * n_tiles
+
+    def _payload_bytes(self, n_el):
+        return n_el / 2
+
+    def validate_spec(self, spec):
+        if spec.param % 2 != 0:
+            raise ValueError("int4 tile size must be even "
+                             f"(got {spec.param})")
+
+
+# ---------------------------------------------------------------------------
+# topk — sparse exchange (largest-|x| features per vector)
+# ---------------------------------------------------------------------------
+
+@register_codec
+class TopKCodec(ExchangeCodec):
+    """Keep the ``spec.param`` largest-magnitude features of each trailing
+    vector; ship (values, int32 indices), reconstruct into zeros."""
+
+    name = "topk"
+    default_param = 8
+    decode_bw = 5e8       # modeled scatter throughput, raw bytes/s
+
+    def encode(self, x, spec):
+        k = spec.param
+        if not 0 < k <= x.shape[-1]:
+            raise ValueError(f"topk codec needs 0 < k <= {x.shape[-1]} "
+                             f"(got {k})")
+        _, idx = jax.lax.top_k(jnp.abs(x.astype(jnp.float32)), k)
+        vals = jnp.take_along_axis(x, idx, axis=-1)
+        return {"vals": vals, "idx": idx.astype(jnp.int32)}
+
+    def decode(self, payload, spec, shape=None, dtype=None):
+        vals, idx = payload["vals"], payload["idx"]
+        if shape is None:
+            raise ValueError("topk decode needs the original `shape`")
+        feat = shape[-1]
+        onehot = jax.nn.one_hot(idx, feat, dtype=jnp.float32)
+        out = jnp.einsum("...kf,...k->...f", onehot,
+                         vals.astype(jnp.float32))
+        return out.astype(dtype if dtype is not None else vals.dtype)
+
+    def wire_bytes(self, shape, dtype, spec):
+        lead = math.prod(shape) // shape[-1]
+        return lead * spec.param * (jnp.dtype(dtype).itemsize + 4)
+
+    def token_wire_bytes(self, feat, bytes_per_el, spec):
+        return spec.param * (bytes_per_el + 4)
+
+    def validate_spec(self, spec):
+        if spec.param <= 0:
+            raise ValueError("topk codec needs codec_param = k > 0")

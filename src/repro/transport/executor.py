@@ -1,0 +1,231 @@
+"""Chunked exchange executor — overlap communication with attention compute.
+
+The monolithic all-gather in the Voltage path serializes the whole exchange
+before the first attention FLOP.  :func:`ring_prefill_attention` instead
+walks the sequence partitions as a ring: at every step each device
+``ppermute``-forwards the K/V block it holds to its neighbour *while*
+computing attention against the block it just received, merging partial
+results with an online-softmax (flash-style) accumulator.  Each block
+transfer is further split into ``overlap_chunks`` independent ``ppermute``
+calls, giving XLA's scheduler chunk-granular freedom to double-buffer
+communication under compute.  The result is numerically the same full
+attention (float-roundoff vs the gather path), with comm hidden behind
+compute instead of in front of it.
+
+:func:`codec_prefill_attention` is the generic compressed exchange for
+non-summarizing codecs (``int8``/``int4``/``topk``): encode the local K/V
+partition, all-gather the compact payload, decode remote partitions, keep
+the own partition exact, and run standard attention — the quantized
+analogue of PRISM's "local exact + remote compressed" scheme.
+:func:`codec_sim_attention` is its single-host oracle (the validation
+target, mirroring ``simulate_prism_attention``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prism_attention import (NEG_INF, _grouped_scores,
+                                        _grouped_values, _softcap,
+                                        chunked_reference_attention,
+                                        reference_attention)
+from repro.transport.codecs import CodecSpec, get_codec
+
+
+def _spec_of(cfg) -> CodecSpec:
+    return CodecSpec(L=cfg.L, param=cfg.codec_param)
+
+
+# ---------------------------------------------------------------------------
+# ring exchange with online-softmax merge
+# ---------------------------------------------------------------------------
+
+def _ppermute_chunks(x: jnp.ndarray, axis_name: str, perm, n_chunks: int,
+                     token_axis: int = 1) -> jnp.ndarray:
+    """One ring transfer split into ``n_chunks`` independent ``ppermute``
+    calls along the token axis (chunk-granular double buffering)."""
+    if n_chunks <= 1 or x.shape[token_axis] % n_chunks != 0:
+        return jax.lax.ppermute(x, axis_name, perm)
+    parts = jnp.split(x, n_chunks, axis=token_axis)
+    return jnp.concatenate(
+        [jax.lax.ppermute(c, axis_name, perm) for c in parts],
+        axis=token_axis)
+
+
+def _partial_block(qs, kb, vb, mb, *, q_offset, kv_offset, causal, scale,
+                   logit_softcap):
+    """Unnormalized attention of local queries against one K/V block:
+    returns (o [B,Nq,H,dh] f32, m [B,H,Nq,1], l [B,H,Nq])."""
+    Nq, Nk = qs.shape[1], kb.shape[1]
+    logits = _grouped_scores(qs, kb) * scale
+    logits = _softcap(logits, logit_softcap)
+    qpos = q_offset + jnp.arange(Nq)[:, None]
+    kpos = kv_offset + jnp.arange(Nk)[None, :]
+    if causal:
+        logits = jnp.where((qpos >= kpos)[None, None], logits, NEG_INF)
+    logits = jnp.where(mb[:, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    w = jnp.exp(logits - m)
+    return _grouped_values(w, vb), m, jnp.sum(w, axis=-1)
+
+
+def _merge(acc, blk):
+    """Online-softmax merge of two unnormalized partials."""
+    o1, m1, l1 = acc
+    o2, m2, l2 = blk
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    # o is [B,Nq,H,dh]; m/l carry [B,H,Nq] layout
+    o = o1 * a1[..., 0].transpose(0, 2, 1)[..., None] \
+        + o2 * a2[..., 0].transpose(0, 2, 1)[..., None]
+    return o, m, l1 * a1[..., 0] + l2 * a2[..., 0]
+
+
+def ring_prefill_attention(q, k, v, cfg, *, causal=False, window=None,
+                           logit_softcap=None, scale=None, kv_mask=None):
+    """Full-tensor exchange as a ring of ``ppermute`` steps overlapped with
+    per-block attention (the chunked executor's Voltage path).  Numerically
+    equivalent to the all-gather implementation up to float roundoff.
+    """
+    if window is not None:
+        raise NotImplementedError(
+            "ring exchange does not support sliding windows; windowed "
+            "layers use the halo/voltage paths")
+    from repro.core import exchange as xchg
+    axis, Pn = cfg.seq_axis, cfg.seq_shards
+    n_chunks = max(cfg.overlap_chunks, 1)
+    if kv_mask is None:
+        kv_mask = jnp.ones(k.shape[:2], dtype=bool)
+    q, k, v = (xchg._pin_seq_sharding(t, axis) for t in (q, k, v))
+    perm = [(i, (i + 1) % Pn) for i in range(Pn)]
+
+    def ring(qs, ks, vs, ms):
+        p = jax.lax.axis_index(axis)
+        Np = qs.shape[1]
+        dh = qs.shape[-1]
+        scl = (dh ** -0.5) if scale is None else scale
+        bufs, src = (ks, vs, ms), p
+        acc = None
+        for s in range(Pn):
+            if s < Pn - 1:
+                nxt = tuple(_ppermute_chunks(t, axis, perm, n_chunks)
+                            for t in bufs)          # comm for step s+1 ...
+            blk = _partial_block(                   # ... overlaps this block
+                qs, bufs[0], bufs[1], bufs[2], q_offset=p * Np,
+                kv_offset=src * Np, causal=causal, scale=scl,
+                logit_softcap=logit_softcap)
+            acc = blk if acc is None else _merge(acc, blk)
+            if s < Pn - 1:
+                bufs, src = nxt, (src - 1) % Pn
+        o, _, l = acc
+        out = o / l.transpose(0, 2, 1)[..., None]
+        return out.astype(qs.dtype)
+
+    bax = xchg._manual_batch_axes(q.shape[0], cfg)
+    return xchg._seq_shard_map(ring, axis, n_masks=1, batch_axes=bax)(
+        q, k, v, kv_mask)
+
+
+# ---------------------------------------------------------------------------
+# generic compressed exchange (non-summarizing codecs)
+# ---------------------------------------------------------------------------
+
+def codec_prefill_attention(q, k, v, cfg, *, causal=False, window=None,
+                            logit_softcap=None, scale=None, kv_mask=None):
+    """Codec exchange: encode local K/V, all-gather the compact payload,
+    decode remote partitions (own partition stays exact), full attention.
+    """
+    from repro.core import exchange as xchg
+    codec = get_codec(cfg.codec)
+    if codec.summarizing:
+        raise ValueError(f"codec {cfg.codec!r} is summarizing — it routes "
+                         "through the PRISM scaling-aware path, not the "
+                         "reconstruction exchange")
+    if window is not None:
+        # windowed layers exchange only a halo; reuse the exact voltage
+        # machinery there (compression of an already-small halo is noise)
+        from repro.core.exchange import ExchangeMode
+        return xchg.exchange_attention(
+            q, k, v, cfg.with_mode(ExchangeMode.VOLTAGE), causal=causal,
+            window=window, logit_softcap=logit_softcap, scale=scale,
+            kv_mask=kv_mask)
+    axis, Pn = cfg.seq_axis, cfg.seq_shards
+    spec = _spec_of(cfg)
+    if kv_mask is None:
+        kv_mask = jnp.ones(k.shape[:2], dtype=bool)
+    q, k, v = (xchg._pin_seq_sharding(t, axis) for t in (q, k, v))
+
+    def fn(qs, ks, vs, ms):
+        p = jax.lax.axis_index(axis)
+        B, Np, Hk, dh = ks.shape
+        pk = codec.encode(ks, spec)
+        pv = codec.encode(vs, spec)
+        gather = lambda t: jax.lax.all_gather(t, axis)       # [P, ...]
+        pk_all = jax.tree_util.tree_map(gather, pk)
+        pv_all = jax.tree_util.tree_map(gather, pv)
+        mg = jax.lax.all_gather(ms, axis, axis=1, tiled=True)  # [B, N]
+        dec = jax.vmap(lambda pl: codec.decode(pl, spec, shape=ks.shape,
+                                               dtype=ks.dtype))
+        k_hat = jnp.moveaxis(dec(pk_all), 0, 1).reshape(B, Pn * Np, Hk, dh)
+        v_hat = jnp.moveaxis(dec(pv_all), 0, 1).reshape(B, Pn * Np, Hk, dh)
+        # own partition attends exactly (the PRISM local/remote split)
+        k_hat = jax.lax.dynamic_update_slice_in_dim(
+            k_hat, ks.astype(k_hat.dtype), p * Np, axis=1)
+        v_hat = jax.lax.dynamic_update_slice_in_dim(
+            v_hat, vs.astype(v_hat.dtype), p * Np, axis=1)
+        return chunked_reference_attention(
+            qs, k_hat, v_hat, causal=causal, q_offset=p * Np,
+            logit_softcap=logit_softcap, scale=scale, kv_mask=mg)
+
+    bax = xchg._manual_batch_axes(q.shape[0], cfg)
+    return xchg._seq_shard_map(fn, axis, n_masks=1, batch_axes=bax)(
+        q, k, v, kv_mask)
+
+
+def codec_sim_attention(q, k, v, P: int, codec_name: str, spec: CodecSpec,
+                        *, causal: bool = False,
+                        logit_softcap: Optional[float] = None,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-host oracle of the P-device codec exchange: every device sees
+    its own partition exact and every remote partition through one codec
+    encode→decode round trip.  Mirrors ``simulate_prism_attention``."""
+    from repro.core.partition import partition_sequence
+    codec = get_codec(codec_name)
+    B, N, H, dh = q.shape
+    Np = N // P
+    qp = partition_sequence(q, P)
+    kp = partition_sequence(k, P)
+    vp = partition_sequence(v, P)
+    k_hat = [codec.decode(codec.encode(kp[i], spec), spec,
+                          shape=kp[i].shape, dtype=k.dtype)
+             for i in range(P)]
+    v_hat = [codec.decode(codec.encode(vp[i], spec), spec,
+                          shape=vp[i].shape, dtype=v.dtype)
+             for i in range(P)]
+    outs = []
+    for p in range(P):
+        kc = jnp.concatenate(
+            [kp[i] if i == p else k_hat[i] for i in range(P)], axis=1)
+        vc = jnp.concatenate(
+            [vp[i] if i == p else v_hat[i] for i in range(P)], axis=1)
+        outs.append(reference_attention(
+            qp[p], kc.astype(q.dtype), vc.astype(q.dtype), causal=causal,
+            q_offset=p * Np, logit_softcap=logit_softcap, scale=scale))
+    return jnp.concatenate(outs, axis=1)
+
+
+def codec_sim_prefill_attention(q, k, v, cfg, *, causal=False, window=None,
+                                logit_softcap=None, scale=None,
+                                kv_mask=None):
+    """``prism_sim``'s codec analogue: codec math on unpartitioned tensors
+    (training / single-host validation)."""
+    if window is not None:
+        raise NotImplementedError("codec simulation with sliding window")
+    if kv_mask is not None:
+        raise NotImplementedError("codec simulation with padded kv_mask")
+    return codec_sim_attention(q, k, v, cfg.seq_shards, cfg.codec,
+                               _spec_of(cfg), causal=causal,
+                               logit_softcap=logit_softcap, scale=scale)

@@ -30,6 +30,18 @@ class BandwidthEstimator:
         self._n += 1
         return self._mbps
 
+    def observe_transfer(self, n_bytes: float, wall_ms: float) -> float:
+        """Fold one *observed transfer* in: ``n_bytes`` moved in
+        ``wall_ms`` implies a link bandwidth, EWMA-blended like a probe.
+        This is how ``session.calibrate()`` refines the link estimate from
+        per-dispatch bytes-on-wire telemetry; returns the implied Mbps."""
+        if n_bytes <= 0 or wall_ms <= 0:
+            raise ValueError(f"transfer needs positive bytes and wall "
+                             f"(got {n_bytes} B / {wall_ms} ms)")
+        mbps = n_bytes * 8e-3 / wall_ms        # bytes/ms → Mbit/s
+        self.observe(mbps)
+        return mbps
+
     def reset(self, mbps: float) -> None:
         """Pin the estimate (e.g. a fresh probe after a re-mesh)."""
         self._mbps = float(mbps)

@@ -302,39 +302,17 @@ def test_session_bandwidth_ewma():
     assert sess.bandwidth == pytest.approx(300.0)
 
 
-# --- deprecation shims -----------------------------------------------------
+# --- legacy shims are gone -------------------------------------------------
 
-def test_dispatcher_shim_warns_and_routes(perfmap):
-    from repro.serving import AdaptiveDispatcher
-    calls = []
-    execs = {"prism@9.9": lambda b: calls.append(("prism", b)) or "p"}
-    with pytest.warns(DeprecationWarning, match="InferenceSession"):
-        disp = AdaptiveDispatcher(perfmap, execs)
-    # B=1 decides local, but only a prism executable exists: the old code
-    # raised KeyError("local") here — now it substitutes and records it
-    assert disp.dispatch({"x": 1}, 1) == "p"
-    rec = disp.history[-1]
-    assert rec.decision.mode == "local" and rec.substituted
-    assert rec.exec_key == "prism@9.9"
-
-
-def test_engine_shim_warns(perfmap):
-    from repro.configs import get_config
-    from repro.models import registry
-    from repro.serving import ServeEngine
-    cfg = get_config("llama3.2-1b").reduced(vocab_size=64)
-    params = registry.init_params(cfg, seed=0)
-    with pytest.warns(DeprecationWarning, match="InferenceSession"):
-        eng = ServeEngine(cfg, ExecutionPlan.local().to_exchange_config(),
-                          params)
-    out = eng.generate(jnp.ones((1, 4), jnp.int32), n_new=2)
-    assert out.shape == (1, 2)
-
-
-def test_dispatcher_empty_execs_clear_error(perfmap):
-    from repro.serving import AdaptiveDispatcher
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        disp = AdaptiveDispatcher(perfmap, {})
-    with pytest.raises(LookupError, match="no executables"):
-        disp.dispatch({"x": 1}, 1)
+def test_legacy_shims_removed():
+    """The docs promised removal in this release: the serving package no
+    longer exports the deprecated dispatcher/engine surfaces."""
+    import repro.serving as serving
+    assert not hasattr(serving, "AdaptiveDispatcher")
+    assert not hasattr(serving, "ServeEngine")
+    assert "AdaptiveDispatcher" not in serving.__all__
+    assert "ServeEngine" not in serving.__all__
+    with pytest.raises(ImportError):
+        from repro.serving import AdaptiveDispatcher  # noqa: F401
+    with pytest.raises(ImportError):
+        from repro.serving.dispatcher import AdaptiveDispatcher  # noqa: F401,F811

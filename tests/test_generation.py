@@ -207,17 +207,18 @@ def test_generate_n_new_zero(dense):
     assert sess.generate(_prompt(), n_new=0).shape == (2, 0)
 
 
-def test_serve_engine_shim_routes_compiled(dense):
-    """The deprecated ServeEngine surface must ride the compiled path (one
-    dispatch), and still match the legacy loop token-for-token."""
-    from repro.serving import ServeEngine
+def test_codec_default_generation_token_exact(dense):
+    """The codec refactor must not perturb generation: a prism_sim plan
+    (implicit segment_means codec) and the same plan spelled with the
+    codec explicit share one identity and produce identical tokens."""
     cfg, params = dense
-    xcfg = ExecutionPlan.local().to_exchange_config()
-    with pytest.warns(DeprecationWarning):
-        eng = ServeEngine(cfg, xcfg, params)
+    implicit = ExecutionPlan.prism_sim(L=2, cr=4.0)
+    explicit = ExecutionPlan("prism_sim", 4.0, 2, "seq", 2,
+                             codec="segment_means")
+    assert explicit == implicit and explicit.key == implicit.key
+    sess = InferenceSession(cfg, params, [implicit])
     prompt = _prompt()
-    before = gen.dispatch_count()
-    out = eng.generate(prompt, n_new=4)
-    assert gen.dispatch_count() - before == 1
-    ref = legacy_generate(params, prompt, 4, cfg, xcfg)
+    out = sess.generate(prompt, n_new=4, plan=implicit)
+    ref = legacy_generate(params, prompt, 4, cfg,
+                          implicit.to_exchange_config())
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))

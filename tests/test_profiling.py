@@ -433,8 +433,13 @@ def test_calibrate_changes_subsequent_decisions():
     toks = jnp.ones((8, 32), jnp.int32)
     sess.dispatch({"tokens": toks})
     sess.history[-1].wall_ms = 10_000.0      # observed: prism is terrible
-    assert sess.calibrate(alpha=1.0).updated == 1
-    assert sess.decide(8).mode == "local"    # policy tracked the drift
+    rep = sess.calibrate(alpha=1.0)
+    assert rep.updated == 1
+    # the awful wall also implied an awful link: calibrate refined the
+    # bandwidth estimate downward from the bytes/wall telemetry
+    assert rep.bandwidth_updates == 1 and sess.bandwidth < 400.0
+    sess._bw = 400.0                         # re-pin the probe: isolate the
+    assert sess.decide(8).mode == "local"    # map drift — policy tracked it
 
 
 def test_calibrate_skips_extrapolated_records(perfmap):

@@ -380,7 +380,7 @@ def test_bandwidth_estimator_shared_impl():
         BandwidthEstimator(400.0, alpha=0.0)
 
 
-def test_session_and_dispatcher_share_estimator(perfmap):
+def test_session_uses_shared_estimator(perfmap):
     sess = InferenceSession.from_config("llama3.2-1b",
                                         reduced={"vocab_size": 64},
                                         perfmap=perfmap, bandwidth_alpha=0.5)
@@ -389,10 +389,16 @@ def test_session_and_dispatcher_share_estimator(perfmap):
     assert sess.bandwidth == pytest.approx(300.0)
     sess._bw = 123.0                           # legacy pin still works
     assert sess.bandwidth == 123.0
-    from repro.serving import AdaptiveDispatcher
-    with pytest.warns(DeprecationWarning):
-        disp = AdaptiveDispatcher(perfmap, {"local": lambda b: b},
-                                  bandwidth_alpha=0.5)
-    assert isinstance(disp._bwest, BandwidthEstimator)
-    disp.observe_bandwidth(200.0)
-    assert disp.bandwidth == pytest.approx(300.0)
+
+
+def test_estimator_observe_transfer():
+    """bytes/wall folds into the EWMA like a probe: 1 MB in 20 ms is
+    exactly a 400 Mbps link."""
+    est = BandwidthEstimator(400.0, alpha=0.5)
+    implied = est.observe_transfer(1_000_000, 20.0)
+    assert implied == pytest.approx(400.0)
+    assert est.mbps == pytest.approx(400.0)
+    est.observe_transfer(1_000_000, 40.0)      # 200 Mbps observed
+    assert est.mbps == pytest.approx(300.0)
+    with pytest.raises(ValueError):
+        est.observe_transfer(0, 10.0)

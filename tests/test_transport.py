@@ -1,0 +1,423 @@
+"""`repro.transport` — codecs, links, executor, and the codec policy axis."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.api import (AdaptivePolicy, CodecSpec, ExecutionPlan,
+                       InferenceSession, PerfKey, SweepSpec, exchange_cost,
+                       get_codec, get_link, list_codecs, list_links,
+                       plan_wire_bytes)
+from repro.core.exchange import exchange_attention
+from repro.core.partition import (simulate_prism_attention,
+                                  simulate_voltage_attention)
+from repro.profiling import WIFI_GLOO
+from repro.transport import (codec_sim_attention, payload_nbytes,
+                             register_codec)
+from repro.transport.codecs import ExchangeCodec
+
+from _hypothesis_fallback import given, settings, st
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape),
+                       jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# codec round trips + exact wire accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,spec", [
+    ("identity", CodecSpec()),
+    ("int8", CodecSpec()),
+    ("int8", CodecSpec(param=8)),
+    ("int4", CodecSpec()),
+    ("int4", CodecSpec(param=8)),
+    ("topk", CodecSpec(param=4)),
+    ("segment_means", CodecSpec(L=4)),
+])
+def test_wire_bytes_match_payload(name, spec):
+    """`wire_bytes` must equal the summed nbytes of the encoded leaves —
+    the accounting can never drift from the arrays."""
+    x = _rand((2, 8, 4, 16))
+    codec = get_codec(name)
+    payload = codec.encode(x, spec)
+    assert codec.wire_bytes(x.shape, x.dtype, spec) == payload_nbytes(payload)
+    assert codec.ratio(x.shape, x.dtype, spec) >= 1.0
+
+
+def test_identity_roundtrip_exact():
+    x = _rand((2, 8, 4, 16))
+    c = get_codec("identity")
+    out = c.decode(c.encode(x, CodecSpec()), CodecSpec())
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+@pytest.mark.parametrize("name,qmax,min_ratio", [("int8", 127, 3.0),
+                                                 ("int4", 7, 6.0)])
+def test_quant_roundtrip_error_bound(name, qmax, min_ratio):
+    """Symmetric per-tile quantization: error ≤ half a quantization step
+    of the tile's amax, and the wire really shrinks."""
+    x = _rand((2, 16, 2, 32), seed=1)
+    spec = CodecSpec()
+    c = get_codec(name)
+    dec = c.decode(c.encode(x, spec), spec, dtype=x.dtype)
+    step = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True) / qmax
+    assert np.all(np.abs(np.asarray(dec - x)) <= step * 0.5 + 1e-6)
+    assert c.ratio(x.shape, x.dtype, spec) >= min_ratio
+
+
+@given(st.integers(1, 6), st.integers(1, 4), st.floats(0.1, 50.0))
+@settings(max_examples=15, deadline=None)
+def test_quant_roundtrip_property(tokens, tiles, amp):
+    """Any shape/amplitude: quantized round trip stays within one step."""
+    feat = 8 * tiles
+    x = amp * _rand((1, tokens, feat), seed=tokens + tiles)
+    for name, qmax in (("int8", 127), ("int4", 7)):
+        spec = CodecSpec(param=8)
+        dec = get_codec(name).decode(get_codec(name).encode(x, spec), spec)
+        step = np.max(np.abs(np.asarray(x).reshape(1, tokens, tiles, 8)),
+                      axis=-1, keepdims=True) / qmax
+        err = np.abs(np.asarray(dec - x)).reshape(1, tokens, tiles, 8)
+        assert np.all(err <= step * 0.5 + 1e-5 * amp)
+
+
+def test_topk_keeps_largest_exactly():
+    x = _rand((2, 6, 3, 16), seed=2)
+    spec = CodecSpec(param=4)
+    c = get_codec("topk")
+    dec = np.asarray(c.decode(c.encode(x, spec), spec, shape=x.shape,
+                              dtype=x.dtype))
+    xn = np.asarray(x)
+    # exactly k nonzeros per vector, equal to the k largest-|x| entries
+    nz = (dec != 0).sum(axis=-1)
+    assert np.all(nz <= spec.param)
+    order = np.argsort(-np.abs(xn), axis=-1)
+    for idx in np.ndindex(xn.shape[:-1]):
+        kept = order[idx][:spec.param]
+        np.testing.assert_allclose(dec[idx][kept], xn[idx][kept], rtol=1e-6)
+        dropped = order[idx][spec.param:]
+        assert np.all(dec[idx][dropped] == 0)
+
+
+def test_segment_means_codec_matches_kernel_reference():
+    from repro.core import segment_means as ref_sm
+    x = _rand((2, 12, 4, 8), seed=3)
+    spec = CodecSpec(L=3)
+    enc = get_codec("segment_means").encode(x, spec)
+    np.testing.assert_array_equal(
+        np.asarray(enc["means"]),
+        np.asarray(ref_sm.segment_means(x, 3, axis=1)))
+
+
+def test_codec_registry_contract():
+    assert {"identity", "segment_means", "int8", "int4",
+            "topk"} <= set(list_codecs())
+    with pytest.raises(KeyError, match="unknown exchange codec"):
+        get_codec("nope")
+    with pytest.raises(ValueError, match="reserved"):
+        @register_codec
+        class Bad(ExchangeCodec):        # pragma: no cover - name rejected
+            name = "has|pipe"
+    with pytest.raises(ValueError, match="already registered"):
+        @register_codec
+        class Dup(ExchangeCodec):        # pragma: no cover - dup rejected
+            name = "int8"
+
+
+# ---------------------------------------------------------------------------
+# exchange numerics
+# ---------------------------------------------------------------------------
+
+def test_prism_sim_codec_default_token_exact():
+    """Acceptance: the refactored exchange under the (default)
+    segment-means codec is numerically identical to the pre-refactor
+    PRISM path."""
+    q, k, v = (_rand((2, 32, 4, 16), seed=s) for s in (0, 1, 2))
+    cfg = ExecutionPlan.prism_sim(L=4, cr=4.0).to_exchange_config()
+    out = exchange_attention(q, k, v, cfg, causal=True)
+    ref = simulate_prism_attention(q, k, v, 2, 4, causal=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # spelling the codec explicitly is the same plan, same bytes
+    cfg2 = ExecutionPlan("prism_sim", 4.0, 4, "seq", 2,
+                         codec="segment_means").to_exchange_config()
+    np.testing.assert_array_equal(
+        np.asarray(exchange_attention(q, k, v, cfg2, causal=True)),
+        np.asarray(ref))
+
+
+def test_identity_codec_sim_equals_voltage():
+    q, k, v = (_rand((2, 32, 4, 16), seed=s) for s in (0, 1, 2))
+    out = codec_sim_attention(q, k, v, 2, "identity", CodecSpec(),
+                              causal=True)
+    ref = simulate_voltage_attention(q, k, v, 2, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+@pytest.mark.parametrize("codec,param,tol", [("int8", 0, 0.05),
+                                             ("int4", 0, 0.3)])
+def test_quant_codec_sim_close_to_exact(codec, param, tol):
+    q, k, v = (_rand((2, 32, 4, 16), seed=s) for s in (0, 1, 2))
+    cfg = ExecutionPlan("prism_sim", seq_axis="seq", seq_shards=2,
+                        codec=codec, codec_param=param).to_exchange_config()
+    out = exchange_attention(q, k, v, cfg, causal=True)
+    ref = simulate_voltage_attention(q, k, v, 2, causal=True)
+    assert float(jnp.max(jnp.abs(out - ref))) < tol
+
+
+# ---------------------------------------------------------------------------
+# identity: keys, plans
+# ---------------------------------------------------------------------------
+
+def test_perfkey_codec_roundtrip():
+    k = PerfKey("prism", 8, 3.95, 400.0, "int8")
+    assert k.encode() == "prism|8|3.95|400|int8"
+    assert PerfKey.decode(k.encode()) == k
+    # pre-codec 4-part keys still load (codec defaults to "")
+    assert PerfKey.decode("prism|8|9.9|400") == PerfKey("prism", 8, 9.9,
+                                                        400.0)
+    with pytest.raises(ValueError):
+        PerfKey("prism", 8, 1.0, 0.0, "a|b")
+
+
+def test_plan_codec_identity_and_parse():
+    # explicit default codec normalizes away: one identity per executable
+    p1 = ExecutionPlan.prism_sim(L=4, cr=9.9)
+    p2 = ExecutionPlan("prism_sim", 9.9, 4, "seq", 2, codec="segment_means")
+    assert p1 == p2 and p2.codec == "" and p2.key == "prism@9.9"
+    assert p2.effective_codec == "segment_means"
+    p8 = ExecutionPlan("prism", 3.98, 0, "seq", 2, codec="int8")
+    assert p8.key == "prism@3.98+int8"
+    rt = ExecutionPlan.parse(p8.key, codec_param=0)
+    assert (rt.mode, rt.cr, rt.codec) == ("prism", 3.98, "int8")
+    with pytest.raises(KeyError, match="unknown exchange codec"):
+        ExecutionPlan("prism", 4.0, 0, "seq", 2, codec="bogus")
+    with pytest.raises(ValueError, match="k > 0"):
+        ExecutionPlan("prism", 4.0, 0, "seq", 2, codec="topk")
+    pk = p8.to_perf_key(8, 400.0)
+    assert pk.codec == "int8" and pk.cr == 3.98
+    back = ExecutionPlan.from_perf_key(pk, codec_param=0)
+    assert back.codec == "int8" and back.L == 0
+
+
+def test_split_key_exponent_cr_is_not_a_codec():
+    """%g can format a huge CR with an exponent '+' — the key parser must
+    not read it as a codec separator (codec names start with a letter)."""
+    from repro.api.plan import split_key
+    assert split_key("prism@1e+06") == ("prism", 1e6, "")
+    assert split_key("prism@4+int8") == ("prism", 4.0, "int8")
+    assert split_key("prism+int8") == ("prism", 0.0, "int8")
+    assert split_key("local") == ("local", 0.0, "")
+    with pytest.raises(ValueError, match="start with a letter"):
+        @register_codec
+        class Numeric(ExchangeCodec):    # pragma: no cover - name rejected
+            name = "0bad"
+
+
+def test_calibrate_folds_codec_dispatches():
+    """A codec plan registers at cr=0 while the sweep keys its entries at
+    the achieved ratio — calibrate() must still fold the dispatch into
+    that cell (and refine the link bandwidth), not skip it."""
+    sess = InferenceSession.from_config(
+        "llama3.2-1b", reduced={"vocab_size": 64},
+        plans=[ExecutionPlan.local(),
+               ExecutionPlan("prism_sim", seq_axis="seq", seq_shards=2,
+                             codec="int8")],
+        allow_modes=("prism",), initial_bandwidth_mbps=400.0)
+    sess.profile(SweepSpec(crs=(), codecs=("int8",)), backend="simulated")
+    sess.dispatch({"tokens": jnp.ones((2, 8), jnp.int32)})
+    rec = sess.history[-1]
+    assert rec.exec_key == "prism+int8" and rec.wire_bytes > 0
+    rep = sess.calibrate()
+    assert rep.updated == 1 and rep.skipped_unprofiled == 0
+    assert rep.bandwidth_updates == 1
+    e = next(e for k, e in sess.perfmap.entries() if k.codec == "int8"
+             and k.batch == 2 and k.bandwidth_mbps == 400.0)
+    assert e.meta.get("calibrations") == 1
+
+
+# ---------------------------------------------------------------------------
+# links + accounting
+# ---------------------------------------------------------------------------
+
+def test_link_registry_and_stages():
+    assert {"direct", "staged"} <= set(list_links())
+    kw = dict(wire_bytes_per_call=1e6, n_calls=12, bandwidth_mbps=400.0,
+              profile=WIFI_GLOO, raw_bytes_total=4e6, decode_bw=1e9)
+    staged = get_link("staged").cost(**kw)
+    direct = get_link("direct").cost(**kw)
+    assert staged.staging_ms > 0 and direct.staging_ms == 0
+    assert staged.wire_ms == pytest.approx(direct.wire_ms)
+    assert staged.decode_ms == pytest.approx(4.0)
+    assert staged.total_ms == pytest.approx(sum(staged.stages().values()))
+
+
+def test_segment_means_accounting_matches_cost_model():
+    """The transport accounting and the edge cost model must agree on the
+    paper's PRISM staging/wire terms (no drift between the two)."""
+    from repro.core.costmodel import EdgeCostModel
+    model = EdgeCostModel()
+    B, P, L, bw = 8, 2, 10, 400.0
+    r = model.distributed(B, bw, P, L=L)
+    t = exchange_cost("segment_means", n_tokens=model.w.n_tokens,
+                      d_model=model.w.d_model,
+                      bytes_per_el=model.w.bytes_per_el, batch=B, P=P,
+                      n_layers=model.w.n_layers, bandwidth_mbps=bw,
+                      profile=WIFI_GLOO, L=L)
+    assert t["staging_ms"] == pytest.approx(r["staging_ms"])
+    assert t["comm_ms"] == pytest.approx(r["comm_ms"])
+
+
+def test_plan_wire_bytes():
+    local = ExecutionPlan.local()
+    prism = ExecutionPlan.prism_sim(L=20, cr=4.95)
+    volt = ExecutionPlan.voltage()
+    assert plan_wire_bytes(local, _VIT_CFG, 8) == 0
+    wp = plan_wire_bytes(prism, _VIT_CFG, 8)
+    wv = plan_wire_bytes(volt, _VIT_CFG, 8)
+    assert 0 < wp < wv                      # compression shrinks the wire
+    assert plan_wire_bytes(prism, _VIT_CFG, 16) == 2 * wp   # ∝ batch
+
+
+# ---------------------------------------------------------------------------
+# the codec axis in the policy
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def vit_session():
+    s = InferenceSession.from_config(
+        "vit-base-16", plans=[ExecutionPlan.local(),
+                              ExecutionPlan.prism_sim(L=20, cr=4.95)])
+    return s
+
+
+from repro.configs import get_config                       # noqa: E402
+_VIT_CFG = get_config("vit-base-16")
+
+
+def test_codec_sweep_preserves_paper_artifacts(vit_session):
+    """Adding the codec axis must not move the classic crossovers."""
+    pm0 = vit_session.profile(backend="simulated")
+    base = AdaptivePolicy(pm0)
+    a = (base.batch_crossover(400.0), base.bandwidth_crossover(8))
+    pm1 = vit_session.profile(SweepSpec(codecs=("int8", "int4")),
+                              backend="simulated")
+    aug = AdaptivePolicy(pm1)
+    assert (aug.batch_crossover(400.0), aug.bandwidth_crossover(8)) == a
+
+
+def test_policy_flips_codec_as_bandwidth_drops(vit_session):
+    """Satellite regression: with the quantized codecs as the only
+    distributed candidates, `decide()` trades the cheaper dequantization
+    (int8) at high bandwidth for the smaller wire (int4) as the link
+    degrades — a codec-aware decision, surfaced in `exec_key`."""
+    pm = vit_session.profile(SweepSpec(crs=(), codecs=("int8", "int4")),
+                             backend="simulated")
+    pol = AdaptivePolicy(pm, ("prism",))
+    hi = pol.decide(8, 900.0)
+    lo = pol.decide(8, 200.0)
+    assert hi.codec == "int8" and "+int8" in hi.exec_key
+    assert lo.codec == "int4" and "+int4" in lo.exec_key
+    assert hi.wire_bytes > lo.wire_bytes > 0     # surfaced per decision
+
+
+def test_measured_backend_profiles_codec_plans():
+    """The measured backend composes its timed compute with the transport
+    accounting for codec plans — entries land under the codec key."""
+    sess = InferenceSession.from_config(
+        "llama3.2-1b", reduced={"vocab_size": 64},
+        plans=[ExecutionPlan.local(),
+               ExecutionPlan("prism_sim", seq_axis="seq", seq_shards=2,
+                             codec="int8")])
+    pm = sess.profile(SweepSpec(batches=(1, 2), bandwidths_mbps=(400.0,)),
+                      backend="measured", iters=1, warmup=0)
+    e = next((e for k, e in pm.entries()
+              if k.mode == "prism" and k.codec == "int8"), None)
+    assert e is not None
+    assert e.meta["codec"] == "int8" and e.meta["wire_bytes"] > 0
+    assert e.staging_ms > 0 and e.comm_ms > 0
+
+
+def test_codec_entries_have_wire_bytes(vit_session):
+    pm = vit_session.profile(SweepSpec(codecs=("int8",)),
+                             backend="simulated")
+    seen = {k.codec for k, _ in pm.entries() if k.mode == "prism"}
+    assert seen == {"", "int8"}
+    for k, e in pm.entries():
+        if k.mode != "local":
+            assert e.meta.get("wire_bytes", 0) > 0
+
+
+# ---------------------------------------------------------------------------
+# telemetry: dispatch, explanation, calibration, serving
+# ---------------------------------------------------------------------------
+
+def test_dispatch_records_codec_and_wire_bytes(vit_session):
+    from repro.profiling.backends import _dummy_batch
+    sess = vit_session
+    sess.profile(backend="simulated")
+    batch = _dummy_batch(sess.cfg, 8, 0)
+    sess._bw = 900.0                      # distributed wins at B=8/900
+    sess.dispatch(batch)
+    rec = sess.history[-1]
+    assert rec.decision.distributed
+    assert rec.codec == "segment_means" and rec.wire_bytes > 0
+    sess._bw = 900.0
+    sess.dispatch(_dummy_batch(sess.cfg, 1, 0))   # B=1 → local
+    rec1 = sess.history[-1]
+    assert not rec1.decision.distributed
+    assert rec1.codec == "" and rec1.wire_bytes == 0
+
+
+def test_explanation_surfaces_codec_and_wire(vit_session):
+    vit_session.profile(backend="simulated")
+    ex = vit_session.explain(8, 900.0)
+    assert ex.decision.distributed
+    assert ex.codec == "segment_means" and ex.wire_bytes > 0
+    s = ex.summary()
+    assert "codec=segment_means" in s and "MB on wire" in s
+
+
+def test_calibrate_refines_bandwidth_from_wire_bytes(vit_session):
+    """Satellite: observed bytes-on-wire fold a bytes/wall EWMA into the
+    session's link estimate — calibrate() refines bandwidth, not just
+    latency."""
+    sess = InferenceSession.from_config(
+        "vit-base-16", plans=[ExecutionPlan.local(),
+                              ExecutionPlan.prism_sim(L=20, cr=4.95)])
+    sess.profile(backend="simulated")
+    sess._bw = 900.0
+    d = sess.decide(8, 900.0)
+    assert d.distributed
+    # the entry calibrate() apportions the wall against is the map cell of
+    # the executable that ran (the registered CR), at the nearest bw
+    entry = sess.perfmap.get(PerfKey("prism", 8, 4.95, 900.0))
+    from repro.api.session import DispatchRecord
+    wire = plan_wire_bytes(sess.plans["prism@4.95"], sess.cfg, 8)
+    sess.history.append(DispatchRecord(
+        8, 900.0, d, wall_ms=entry.total_ms, exec_key="prism@4.95",
+        codec="segment_means", wire_bytes=wire))
+    before = sess.bandwidth
+    rep = sess.calibrate(alpha=0.5)
+    assert rep.bandwidth_updates == 1
+    assert sess.bandwidth != before       # EWMA moved toward the implied bw
+    implied = wire * 8e-3 / entry.comm_ms   # wall == profile ⇒ comm share
+    expected = 0.3 * implied + 0.7 * before
+    assert sess.bandwidth == pytest.approx(expected)
+
+
+def test_serving_completions_carry_codec_and_wire():
+    sess = InferenceSession.from_config(
+        "llama3.2-1b", reduced={"vocab_size": 64},
+        plans=[ExecutionPlan.local(), ExecutionPlan.prism_sim(L=2, cr=9.9)],
+        allow_modes=("prism",), initial_bandwidth_mbps=900.0)
+    sess.profile(backend="simulated")
+    from repro.serving import ServingRuntime
+    rt = ServingRuntime(sess, n_slots=2, chunk=4, max_len=32)
+    rt.submit(np.arange(4) % 64, n_new=4, seed=0)
+    comps = rt.run()
+    assert len(comps) == 1
+    c = comps[0]
+    assert c.codec == "segment_means" and c.wire_bytes > 0
+    assert rt.stats["wire_bytes"] == c.wire_bytes
