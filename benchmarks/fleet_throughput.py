@@ -1,0 +1,186 @@
+"""Fleet-throughput benchmark: policy-placed routing vs the best single
+worker, under Poisson load over a heterogeneous fleet.
+
+Drives one Poisson arrival trace through two configurations of
+``repro.fleet``:
+
+  * ``fleet``  — ``FleetRouter`` over 3 heterogeneous virtual-time workers
+                 (effective-FLOP/s scaled 1.0 / 0.6 / 0.35 of the Jetson
+                 Orin Nano profile), each scoring placements with its own
+                 compiled ``PolicyTable``.
+  * ``single`` — the same trace offered to each worker alone (the best one
+                 is the baseline: what you get without a fleet tier).
+
+Workers are :class:`~repro.fleet.registry.SimWorker` — virtual-time
+service (one profiled pass per generated token, from the worker's own
+policy table), real queue/placement/failover logic — so a single benchmark
+host measures fleet-scale behavior without serializing real decode.
+Arrival rate is set well past fleet capacity: the gate compares peak
+sustainable throughput, not arrival-limited idling.
+
+Reports aggregate tok/s and p50/p99 request latency, optionally kills a
+worker mid-run (``--kill``) to exercise drain + re-route, and writes
+``BENCH_fleet.json`` at the repo root; CI runs ``--smoke
+--min-speedup 1.3`` — routed serving must beat the best single worker by
+≥1.3x aggregate tok/s at equal load.
+
+    PYTHONPATH=src python benchmarks/fleet_throughput.py [--smoke] [--kill]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+# eff-FLOP/s scale factors of the three boards (heterogeneous fleet)
+FLEET_FACTORS = {"edge-a": 1.0, "edge-b": 0.6, "edge-c": 0.35}
+
+
+def make_trace(rng, n_req: int, rate_hz: float, prompt_len: int,
+               n_new: int, vocab: int = 64):
+    """(arrival_ts, seed, prompt) triples — one Poisson trace, rebuilt into
+    fresh Request objects per run so runs cannot share queue state."""
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n_req))
+    return [(float(arrivals[i]), i, rng.randint(0, vocab, prompt_len))
+            for i in range(n_req)]
+
+
+def make_requests(trace, n_new: int):
+    from repro.serving.queue import Request
+    return [Request(prompt=p, n_new=n_new, seed=s, arrival_ts=t)
+            for t, s, p in trace]
+
+
+def build_fleet(names, *, n_slots: int, queue_size: int,
+                calibrate: bool = False):
+    from repro.fleet import DeviceRegistry, FleetRouter, SimWorker, \
+        scaled_hardware
+    from repro.profiling.hardware import JETSON_ORIN_NANO
+    # registry first: codec calibration must land before the workers'
+    # profiling sweeps read codec.decode_bw
+    reg = DeviceRegistry(heartbeat_timeout_s=1e9,
+                         calibrate_codecs=calibrate)
+    for name in names:
+        hw = scaled_hardware(JETSON_ORIN_NANO, FLEET_FACTORS[name],
+                             name=f"jetson-{name}")
+        reg.add(SimWorker(name, hardware=hw, n_slots=n_slots,
+                          queue_size=queue_size))
+    return reg, FleetRouter(reg)
+
+
+def drive(router, requests, events=()):
+    out = router.drive_virtual(requests, events=events)
+    lats = [c.latency_ms for c in out["completions"]]
+    tok_s = out["served_tokens"] / max(out["makespan_s"], 1e-9)
+    return {"tok_s": tok_s, "served": len(out["completions"]),
+            "shed": len(out["shed"]), "makespan_s": out["makespan_s"],
+            "served_tokens": out["served_tokens"],
+            "p50_ms": float(np.percentile(lats, 50)) if lats else 0.0,
+            "p99_ms": float(np.percentile(lats, 99)) if lats else 0.0}
+
+
+def run(smoke: bool = True, kill: bool = False,
+        out_path: str = "BENCH_fleet.json"):
+    from repro.kernels import backend_info
+
+    if smoke:
+        n_req, n_new, prompt_len = 60, 16, 8
+        n_slots, queue_size, rate_hz = 4, 8, 40.0
+    else:
+        n_req, n_new, prompt_len = 240, 32, 8
+        n_slots, queue_size, rate_hz = 4, 16, 40.0
+
+    rng = np.random.RandomState(0)
+    trace = make_trace(rng, n_req, rate_hz, prompt_len, n_new)
+    names = list(FLEET_FACTORS)
+
+    # -- routed fleet --------------------------------------------------------
+    reg, router = build_fleet(names, n_slots=n_slots,
+                              queue_size=queue_size, calibrate=True)
+    fleet = drive(router, make_requests(trace, n_new))
+    fleet["placements"] = {
+        n: sum(1 for p in router.placements if p.worker == n)
+        for n in names}
+
+    # -- single-worker baselines (same trace, one worker alone) --------------
+    singles = {}
+    for name in names:
+        _, solo = build_fleet([name], n_slots=n_slots,
+                              queue_size=queue_size)
+        singles[name] = drive(solo, make_requests(trace, n_new))
+    best_name = max(singles, key=lambda n: singles[n]["tok_s"])
+    best = singles[best_name]
+    speedup = fleet["tok_s"] / max(best["tok_s"], 1e-9)
+
+    # -- failover run (separate trace drive; not the gated numbers) ----------
+    failover = None
+    if kill:
+        freg, frouter = build_fleet(names, n_slots=n_slots,
+                                    queue_size=queue_size)
+        kill_at = trace[n_req // 3][0]       # mid-arrival-window
+        fl = drive(frouter, make_requests(trace, n_new),
+                   events=[(kill_at, lambda: freg.fail("edge-b"))])
+        failover = {"killed": "edge-b", "kill_at_s": kill_at, **fl,
+                    "rerouted": frouter.stats["rerouted"],
+                    "lost": frouter.stats["lost"]}
+
+    results = {
+        "smoke": smoke, "n_requests": n_req, "n_new": n_new,
+        "prompt_len": prompt_len, "arrival_rate_hz": rate_hz,
+        "n_slots": n_slots, "queue_size": queue_size,
+        "fleet_factors": FLEET_FACTORS,
+        "kernel_backend": backend_info(),
+        "codec_decode_bw_measured": reg.codec_bws,
+        "fleet": fleet,
+        "single": singles, "best_single": best_name,
+        "speedup_tok_s": speedup,
+        "failover": failover,
+        "router_stats": {k: v for k, v in router.stats.items()},
+    }
+    print(f"fleet       {fleet['tok_s']:8.1f} tok/s  "
+          f"p50 {fleet['p50_ms']:7.0f} ms  p99 {fleet['p99_ms']:7.0f} ms  "
+          f"({fleet['served']}/{n_req} served, {fleet['shed']} shed)")
+    for n in names:
+        s = singles[n]
+        mark = " <- best" if n == best_name else ""
+        print(f"solo {n:7s}{s['tok_s']:8.1f} tok/s  "
+              f"p50 {s['p50_ms']:7.0f} ms  p99 {s['p99_ms']:7.0f} ms  "
+              f"({s['served']}/{n_req} served){mark}")
+    print(f"speedup     {speedup:.2f}x aggregate tok/s vs best single "
+          f"({best_name})")
+    if failover:
+        print(f"failover    killed {failover['killed']} at "
+              f"t={failover['kill_at_s']:.2f}s: "
+              f"{failover['rerouted']} rerouted, {failover['lost']} lost, "
+              f"{failover['tok_s']:.1f} tok/s")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {out_path}")
+    return results
+
+
+def main():
+    import sys
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace (CI)")
+    ap.add_argument("--kill", action="store_true",
+                    help="also kill a worker mid-run (failover stats)")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="fail (exit 1) if fleet tok/s over the best "
+                         "single worker is below this")
+    args = ap.parse_args()
+    results = run(smoke=args.smoke, kill=args.kill, out_path=args.out)
+    if results["speedup_tok_s"] < args.min_speedup:
+        print(f"FAIL: fleet speedup {results['speedup_tok_s']:.2f}x "
+              f"below {args.min_speedup}x")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    main()

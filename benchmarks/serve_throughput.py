@@ -118,6 +118,7 @@ def run(smoke: bool = True, arch: str = "llama3.2-1b",
 
     rt_tok_s = rt_toks / max(rt_dt, 1e-9)
     base_tok_s = base_toks / max(base_dt, 1e-9)
+    rt_stats = rt.stats_snapshot()         # consistent copy, not the live dict
     results = {
         "arch": session.cfg.name, "smoke": smoke, "n_requests": n_req,
         "n_new": n_new, "prompt_lens": list(prompt_lens),
@@ -126,7 +127,8 @@ def run(smoke: bool = True, arch: str = "llama3.2-1b",
         "runtime": {"tok_s": rt_tok_s, "wall_s": rt_dt,
                     "p50_ms": percentile(rt_lats, 50),
                     "p99_ms": percentile(rt_lats, 99),
-                    "max_concurrent": rt.stats["max_concurrent"]},
+                    "max_concurrent": rt_stats["max_concurrent"],
+                    "rejected": rt_stats["rejected"]},
         "baseline": {"tok_s": base_tok_s, "wall_s": base_dt,
                      "p50_ms": percentile(base_lats, 50),
                      "p99_ms": percentile(base_lats, 99)},
@@ -134,7 +136,7 @@ def run(smoke: bool = True, arch: str = "llama3.2-1b",
     }
     print(f"runtime  {rt_tok_s:8.1f} tok/s  p50 {results['runtime']['p50_ms']:7.0f} ms  "
           f"p99 {results['runtime']['p99_ms']:7.0f} ms  "
-          f"(max {rt.stats['max_concurrent']} in flight)")
+          f"(max {rt_stats['max_concurrent']} in flight)")
     print(f"baseline {base_tok_s:8.1f} tok/s  p50 {results['baseline']['p50_ms']:7.0f} ms  "
           f"p99 {results['baseline']['p99_ms']:7.0f} ms  (sequential)")
     print(f"speedup  {results['speedup_tok_s']:.2f}x tok/s")

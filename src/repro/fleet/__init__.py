@@ -1,0 +1,29 @@
+"""`repro.fleet` — policy-placed multi-worker serving over a device registry.
+
+The unit of scale becomes the *worker*: a :class:`DeviceRegistry` of named
+workers (real :class:`WorkerHandle` = session + serving runtime, or
+virtual-time :class:`SimWorker` for fleet-scale benchmarking), each pinned
+to its own hardware/link profile with its own compiled policy table, and a
+:class:`FleetRouter` front door that scores placements with those tables,
+admits into per-worker bounded EDF queues with explicit backpressure
+(:class:`FleetRejected`), and re-routes a dead worker's in-flight requests
+token-exactly on heartbeat miss.
+
+    registry = DeviceRegistry()
+    registry.add(SimWorker("fast", hardware=JETSON_ORIN_NANO))
+    registry.add(SimWorker("slow",
+                           hardware=scaled_hardware(JETSON_ORIN_NANO, 0.5)))
+    router = FleetRouter(registry)
+    req, rec = router.submit(prompt, n_new=16)
+    print(rec.explain())                  # the full scored ranking
+"""
+from repro.fleet.registry import (DeviceRegistry, SimCompletion, SimWorker,
+                                  Worker, WorkerHandle, scaled_hardware)
+from repro.fleet.router import (FleetRejected, FleetRouter, PlacementRecord,
+                                WorkerScore)
+
+__all__ = [
+    "DeviceRegistry", "Worker", "WorkerHandle", "SimWorker",
+    "SimCompletion", "scaled_hardware",
+    "FleetRouter", "FleetRejected", "PlacementRecord", "WorkerScore",
+]

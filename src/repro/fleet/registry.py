@@ -1,0 +1,436 @@
+"""Device registry: named workers with pinned hardware + liveness.
+
+The ROADMAP's "millions of users" axis makes the *worker* the unit of
+scale: one :class:`DeviceRegistry` tracks a fleet of named workers, each
+pinned to its own :class:`~repro.profiling.hardware.HardwareProfile` /
+:class:`~repro.profiling.hardware.LinkProfile` and carrying its own
+compiled :class:`~repro.profiling.table.PolicyTable` — per-device
+capability differences dominate once more than one request shares a board
+(PRISM, arXiv 2507.12145; the Jetson concurrent-workload profiling study),
+so placement must query per-worker tables, not a fleet-wide average.
+
+Two worker flavors share one interface (:class:`Worker`):
+
+* :class:`WorkerHandle` — a *real* worker: an
+  :class:`~repro.api.session.InferenceSession` + its
+  :class:`~repro.serving.engine.ServingRuntime` (bounded EDF queue →
+  adaptive scheduler → slot-pool decode).  Used by the token-exactness
+  tests and ``launch/fleet.py --real``.
+* :class:`SimWorker` — a *virtual-time* worker: the same bounded EDF queue
+  and the same compiled policy table, but service is modeled (one profiled
+  inference pass per generated token) so a single host can benchmark a
+  heterogeneous fleet without serializing real decode.
+
+Liveness reuses the existing :class:`~repro.runtime.fault.HeartbeatMonitor`
+(deadline-based; ``fail()`` wins over ``beat()``); ``check_dead()`` follows
+the :class:`~repro.serving.scheduler.FaultHook` consume pattern — a worker
+is reported dead exactly once, and the router drains + re-routes it then.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterator, List, Optional
+
+from repro.profiling.hardware import (JETSON_ORIN_NANO, WIFI_GLOO,
+                                      HardwareProfile, LinkProfile)
+from repro.runtime.fault import HeartbeatMonitor
+from repro.serving.queue import Request, RequestQueue
+
+
+def scaled_hardware(base: HardwareProfile, factor: float,
+                    name: Optional[str] = None) -> HardwareProfile:
+    """A heterogeneous-fleet variant of ``base``: effective-FLOP/s curve
+    scaled by ``factor`` (a 0.5 board computes at half speed; overheads and
+    power are board-level constants and stay put)."""
+    if factor <= 0:
+        raise ValueError(f"factor must be > 0, got {factor}")
+    return dataclasses.replace(
+        base, name=name or f"{base.name}-x{factor:g}",
+        eff_inf=base.eff_inf * factor, eff_slope=base.eff_slope * factor)
+
+
+class Worker:
+    """One fleet member: a name, a hardware/link pin, a bounded EDF queue,
+    and a compiled policy table the router scores placements with.
+
+    Subclasses implement the service loop (``step``/``next_event_at``) and
+    the drain path; everything the :class:`~repro.fleet.router.FleetRouter`
+    touches is on this base interface.
+    """
+
+    name: str
+    hardware: HardwareProfile
+    link: LinkProfile
+    queue: RequestQueue
+    n_slots: int
+
+    # -- placement inputs ----------------------------------------------------
+
+    @property
+    def bandwidth(self) -> float:
+        """Estimated link bandwidth (Mbps) fed to the policy table."""
+        raise NotImplementedError
+
+    def table(self, objective=None):
+        """This worker's compiled PolicyTable (its hardware, its sweep)."""
+        raise NotImplementedError
+
+    @property
+    def in_flight(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def pending(self) -> int:
+        """Requests this worker still owes: queued + in flight."""
+        return len(self.queue) + self.in_flight
+
+    @property
+    def idle(self) -> bool:
+        return self.in_flight == 0
+
+    # -- intake / service ----------------------------------------------------
+
+    def submit_request(self, req: Request, force: bool = False) -> Request:
+        raise NotImplementedError
+
+    def step(self, now: Optional[float] = None) -> List:
+        """Advance service; returns the completions this step produced."""
+        raise NotImplementedError
+
+    def next_event_at(self, now: float) -> float:
+        """Virtual-time drivers: when this worker next has work to do
+        (``inf`` = nothing queued or in flight)."""
+        raise NotImplementedError
+
+    # -- failure / telemetry -------------------------------------------------
+
+    def drain_requests(self) -> List[Request]:
+        """Give up every queued and in-flight request (dead-worker path)."""
+        raise NotImplementedError
+
+    def stats_snapshot(self) -> Dict:
+        raise NotImplementedError
+
+    @property
+    def served_tokens(self) -> int:
+        raise NotImplementedError
+
+    def __repr__(self):
+        return (f"{type(self).__name__}({self.name!r}, "
+                f"hw={self.hardware.name!r}, pending={self.pending})")
+
+
+class WorkerHandle(Worker):
+    """A real worker: an ``InferenceSession`` + ``ServingRuntime`` pinned to
+    one hardware/link profile.
+
+    The session must already be profiled (``session.profile(...)``) —
+    typically with ``hardware=``/``link=`` matching the pin, so the
+    worker's policy table predicts *this* device.  The runtime's bounded
+    EDF queue doubles as the router's per-worker admission queue.
+    """
+
+    def __init__(self, name: str, session, *,
+                 hardware: HardwareProfile = JETSON_ORIN_NANO,
+                 link: LinkProfile = WIFI_GLOO,
+                 runtime=None, n_slots: int = 4, chunk: int = 8,
+                 max_len: int = 256, queue_size: int = 64):
+        from repro.serving.engine import ServingRuntime
+        self.name = name
+        self.session = session
+        self.hardware = hardware
+        self.link = link
+        self.runtime = runtime or ServingRuntime(
+            session, n_slots=n_slots, chunk=chunk, max_len=max_len,
+            queue_size=queue_size)
+        self.queue = self.runtime.queue
+        self.n_slots = self.runtime.n_slots
+
+    @property
+    def bandwidth(self) -> float:
+        return self.session.bandwidth
+
+    def table(self, objective=None):
+        return self.session.policy.table(objective or self.session.objective)
+
+    @property
+    def in_flight(self) -> int:
+        return sum(p.n_active for p in self.runtime.pools.values())
+
+    def submit_request(self, req: Request, force: bool = False) -> Request:
+        if req.total_len > self.runtime.max_len:
+            raise ValueError(
+                f"request needs {req.total_len} positions but worker "
+                f"{self.name!r} pools are sized for {self.runtime.max_len}")
+        return self.queue.put(req, force=force)
+
+    def step(self, now: Optional[float] = None) -> List:
+        return self.runtime.step()
+
+    def next_event_at(self, now: float) -> float:
+        return now if (self.queue or not self.runtime.idle) else float("inf")
+
+    def drain_requests(self) -> List[Request]:
+        return self.runtime.drain_requests()
+
+    def stats_snapshot(self) -> Dict:
+        return self.runtime.stats_snapshot()
+
+    @property
+    def completions(self) -> List:
+        return self.runtime.completions
+
+    @property
+    def served_tokens(self) -> int:
+        return sum(len(c.tokens) for c in self.runtime.completions)
+
+
+@dataclasses.dataclass
+class SimCompletion:
+    """One virtually-served request (no token payload — service is modeled,
+    the *timing* is the artifact)."""
+    request_id: int
+    n_tokens: int
+    worker: str
+    arrival_ts: float
+    admitted_ts: float
+    finished_ts: float
+    plan_key: str = "local"
+    slo_ms: Optional[float] = None
+
+    @property
+    def latency_ms(self) -> float:
+        return 1e3 * (self.finished_ts - self.arrival_ts)
+
+    @property
+    def queue_ms(self) -> float:
+        return 1e3 * (self.admitted_ts - self.arrival_ts)
+
+
+class SimWorker(Worker):
+    """A virtual-time worker: real compiled policy table, modeled service.
+
+    Placement and batch formation go through exactly the same
+    ``PolicyTable.plan_batch`` query a real worker uses — over a perf map
+    profiled at *this worker's* hardware/link — but serving one micro-batch
+    is modeled as ``expected.total_ms`` per generated token (one profiled
+    inference pass per decode step) instead of running decode.  That keeps
+    a single benchmark host able to drive 3+ heterogeneous workers in
+    virtual time, where real decode would serialize them.
+    """
+
+    def __init__(self, name: str, perfmap=None, *,
+                 hardware: HardwareProfile = JETSON_ORIN_NANO,
+                 link: LinkProfile = WIFI_GLOO,
+                 bandwidth_mbps: float = 400.0, n_slots: int = 4,
+                 queue_size: int = 64, objective="latency",
+                 allow_modes=("local", "prism")):
+        from repro.core.policy import AdaptivePolicy, resolve_objective
+        self.name = name
+        self.hardware = hardware
+        self.link = link
+        self.n_slots = n_slots
+        self.queue = RequestQueue(queue_size)
+        self._bandwidth = float(bandwidth_mbps)
+        self.objective = resolve_objective(objective)
+        if perfmap is None:
+            from repro.profiling import (ProfileContext, SweepSpec,
+                                         get_backend)
+            perfmap = get_backend("simulated").profile(
+                ProfileContext(hardware=hardware, link=link), SweepSpec())
+        self.perfmap = perfmap
+        self.policy = AdaptivePolicy(perfmap, allow_modes=tuple(allow_modes))
+        # virtual service state
+        self._in_service: List[Request] = []
+        self._service_start = 0.0
+        self._busy_until = 0.0
+        self._service_key = "local"
+        self.completions: List[SimCompletion] = []
+        self.stats = {"steps": 0, "admitted": 0, "served": 0, "tokens": 0,
+                      "max_concurrent": 0, "busy_s": 0.0}
+
+    @property
+    def bandwidth(self) -> float:
+        return self._bandwidth
+
+    def observe_bandwidth(self, mbps: float) -> None:
+        self._bandwidth = float(mbps)
+
+    def table(self, objective=None):
+        return self.policy.table(objective or self.objective)
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._in_service)
+
+    def submit_request(self, req: Request, force: bool = False) -> Request:
+        return self.queue.put(req, force=force)
+
+    # -- virtual service loop ------------------------------------------------
+
+    def step(self, now: Optional[float] = None) -> List[SimCompletion]:
+        """Advance to virtual time ``now``: finish the in-service batch if
+        its modeled service time has elapsed, then (if idle) admit the next
+        table-formed micro-batch from the EDF queue."""
+        if now is None:
+            raise ValueError("SimWorker.step needs the virtual time `now`")
+        self.stats["steps"] += 1
+        done: List[SimCompletion] = []
+        if self._in_service and now >= self._busy_until - 1e-12:
+            fin = self._busy_until
+            for req in self._in_service:
+                done.append(SimCompletion(
+                    request_id=req.id, n_tokens=req.n_new, worker=self.name,
+                    arrival_ts=req.arrival_ts,
+                    admitted_ts=self._service_start, finished_ts=fin,
+                    plan_key=self._service_key, slo_ms=req.slo_ms))
+                self.stats["served"] += 1
+                self.stats["tokens"] += req.n_new
+            self.completions.extend(done)
+            self._in_service = []
+        if not self._in_service and self.queue:
+            bp = self.table().plan_batch(len(self.queue), self.bandwidth,
+                                         max_batch=self.n_slots)
+            reqs = self.queue.pop_many(bp.n_admit)
+            self._in_service = reqs
+            self._service_start = now
+            self._service_key = bp.decision.exec_key
+            # one profiled pass per generated token; wall time is charged
+            # even under the energy objective (the clock is not an
+            # objective), so total_ms — not objective.cost — is the model
+            service_s = 1e-3 * bp.decision.expected.total_ms * max(
+                r.n_new for r in reqs)
+            self._busy_until = now + service_s
+            self.stats["admitted"] += len(reqs)
+            self.stats["busy_s"] += service_s
+            self.stats["max_concurrent"] = max(self.stats["max_concurrent"],
+                                               len(reqs))
+        return done
+
+    def next_event_at(self, now: float) -> float:
+        if self._in_service:
+            return self._busy_until
+        if self.queue:
+            return now
+        return float("inf")
+
+    # -- failure / telemetry -------------------------------------------------
+
+    def drain_requests(self) -> List[Request]:
+        reqs = self.queue.drain()
+        reqs.extend(self._in_service)
+        self._in_service = []
+        self._busy_until = 0.0
+        return reqs
+
+    def stats_snapshot(self) -> Dict:
+        snap = dict(self.stats)
+        snap["queue_depth"] = len(self.queue)
+        snap["in_flight"] = len(self._in_service)
+        snap["completed"] = len(self.completions)
+        snap["rejected"] = self.queue.rejected
+        snap["rejections"] = dict(self.queue.rejections)
+        return snap
+
+    @property
+    def served_tokens(self) -> int:
+        return self.stats["tokens"]
+
+
+class DeviceRegistry:
+    """Named workers + heartbeat liveness (the fleet's source of truth).
+
+    ``add()`` registers a worker and starts its heartbeat deadline;
+    ``beat()``/``fail()`` feed the monitor (``fail`` wins — an explicitly
+    failed worker's beats are ignored, which is what lets the router
+    auto-beat workers it successfully steps).  ``check_dead()`` is the
+    consume edge: each dead worker is reported exactly once, at which point
+    the router drains and re-routes it.
+
+    ``calibrate_codecs=True`` runs the measured decode-throughput
+    micro-benchmark (:func:`~repro.transport.codecs.calibrate_codec_bws`)
+    at registry construction, so every worker profiled afterwards sweeps
+    with *measured* codec reconstruction costs instead of the documented
+    constants.
+    """
+
+    def __init__(self, *, heartbeat_timeout_s: float = 10.0,
+                 clock: Callable[[], float] = time.monotonic,
+                 calibrate_codecs: bool = False):
+        self.monitor = HeartbeatMonitor([], timeout_s=heartbeat_timeout_s,
+                                        clock=clock)
+        self.workers: Dict[str, Worker] = {}
+        self._dead: set = set()
+        self.codec_bws: Dict[str, float] = {}
+        if calibrate_codecs:
+            from repro.transport.codecs import calibrate_codec_bws
+            self.codec_bws = calibrate_codec_bws()
+
+    # -- membership ----------------------------------------------------------
+
+    def add(self, worker: Worker) -> Worker:
+        if worker.name in self.workers:
+            raise ValueError(f"worker {worker.name!r} already registered")
+        self.workers[worker.name] = worker
+        self.monitor.beat(worker.name)       # starts the liveness deadline
+        return worker
+
+    def get(self, name: str) -> Worker:
+        try:
+            return self.workers[name]
+        except KeyError:
+            raise KeyError(f"unknown worker {name!r}; registered: "
+                           f"{sorted(self.workers)}") from None
+
+    def remove(self, name: str) -> None:
+        self.workers.pop(name, None)
+        self._dead.discard(name)
+        self.monitor.remove(name)
+
+    @property
+    def names(self) -> List[str]:
+        return sorted(self.workers)
+
+    def __len__(self) -> int:
+        return len(self.workers)
+
+    def __iter__(self) -> Iterator[Worker]:
+        return iter(self.workers.values())
+
+    # -- liveness ------------------------------------------------------------
+
+    def beat(self, name: str) -> None:
+        self.monitor.beat(name)
+
+    def fail(self, name: str) -> None:
+        """Mark a worker dead (kill switch; heartbeat misses also kill)."""
+        if name not in self.workers:
+            raise KeyError(f"unknown worker {name!r}")
+        self.monitor.fail(name)
+
+    def revive(self, name: str) -> None:
+        self._dead.discard(name)
+        self.monitor.revive(name)
+
+    def is_alive(self, name: str) -> bool:
+        return (name in self.workers and name not in self._dead
+                and name not in self.monitor.dead_nodes())
+
+    def alive(self) -> List[Worker]:
+        dead = set(self.monitor.dead_nodes()) | self._dead
+        return [w for n, w in sorted(self.workers.items()) if n not in dead]
+
+    def dead(self) -> List[str]:
+        return sorted((set(self.monitor.dead_nodes()) | self._dead)
+                      & set(self.workers))
+
+    def check_dead(self) -> List[str]:
+        """Newly-dead workers (consume pattern: each reported once — the
+        caller owns draining + re-routing them)."""
+        newly = [n for n in self.monitor.dead_nodes()
+                 if n in self.workers and n not in self._dead]
+        for n in newly:
+            self.monitor.remove(n)
+            self._dead.add(n)
+        return newly

@@ -1,0 +1,358 @@
+"""Fleet router: policy-table-scored placement over a device registry.
+
+The paper's profiling doctrine, one level up: the same compiled
+:class:`~repro.profiling.table.PolicyTable` that picks an execution mode
+*within* a session here picks the *worker* — for each live worker the
+router asks its table what serving one more request would cost at that
+worker's hardware and current bandwidth, inflates the answer by queue
+pressure, and admits the request to the cheapest worker's bounded EDF
+queue.  Every decision is recorded as a :class:`PlacementRecord` whose
+``explain()`` prints the full scored ranking — placement is auditable, not
+a heuristic.
+
+Failure semantics (same shape as the in-session fault path, PR 4): a
+heartbeat miss surfaces through ``registry.check_dead()`` exactly once;
+the router drains the dead worker's queued *and* in-flight requests and
+re-routes them (``force=True`` — admitted work is never shed by the
+bound).  A re-served request restarts from scratch on the new worker and
+is token-exact with ``session.generate`` because ``seed``/``temperature``
+pin the sampling chain; EDF order is recovered by the target queue's
+deadline-ordered ``pop``.
+
+Backpressure: when a pinned worker's queue is full, or every live
+worker's queue is full, ``route`` raises :class:`FleetRejected` with a
+machine-readable ``reason`` — and the shed is counted in the router stats
+and in the per-worker queue's ``rejections`` (satellite: rejection is
+telemetry, not a silent exception).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.policy import resolve_objective
+from repro.fleet.registry import DeviceRegistry, Worker
+from repro.serving.queue import QueueFull, Request
+from repro.serving.scheduler import FailoverEvent
+
+
+class FleetRejected(RuntimeError):
+    """The fleet shed a request.  ``reason``: ``"all_full"`` (every live
+    worker's queue at capacity), ``"full"`` (the pinned worker's queue at
+    capacity), ``"dead_worker"`` (pinned to a worker that missed its
+    heartbeat), ``"no_workers"`` (nothing alive to route to)."""
+
+    def __init__(self, msg: str, reason: str):
+        super().__init__(msg)
+        self.reason = reason
+
+
+@dataclasses.dataclass
+class WorkerScore:
+    """One worker's placement bid for one request.
+
+    ``score = per_request_cost × (1 + pending / n_slots)``: the policy
+    table's objective cost for serving one more request at this worker's
+    hardware and bandwidth, inflated by how much work the worker already
+    owes relative to its concurrency budget.  ``mode``/``cr``/``codec``
+    are the execution decision the table would make there — the placement
+    is explainable down to the profiled cell that priced it.
+    """
+    worker: str
+    score: float
+    per_request_cost: float        # table objective cost per request
+    pending: int                   # queued + in flight at scoring time
+    n_slots: int
+    queue_depth: int
+    bandwidth_mbps: float
+    mode: str
+    cr: float
+    codec: str
+
+    def explain(self) -> str:
+        plan = self.mode + (f"@{self.cr:g}" if self.cr else "") \
+            + (f"+{self.codec}" if self.codec else "")
+        return (f"{self.worker}: score {self.score:.3f} = "
+                f"{self.per_request_cost:.3f} (table: {plan} @ "
+                f"{self.bandwidth_mbps:g} Mbps) x "
+                f"(1 + {self.pending}/{self.n_slots} pending)")
+
+
+@dataclasses.dataclass
+class PlacementRecord:
+    """One routing decision: the chosen worker and the full scored field."""
+    request_id: int
+    worker: str
+    scores: List[WorkerScore]              # ranked, cheapest first
+    reason: str = "scored"                 # "scored"|"pinned"|"rerouted"
+
+    def explain(self) -> str:
+        lines = [f"request {self.request_id} -> {self.worker} "
+                 f"({self.reason})"]
+        for s in self.scores:
+            mark = "->" if s.worker == self.worker else "  "
+            lines.append(f"  {mark} {s.explain()}")
+        return "\n".join(lines)
+
+
+class FleetRouter:
+    """Front door of the fleet: score, admit, step, fail over.
+
+    ``submit``/``route`` place single requests; ``fanout`` maps a batch of
+    prompts across the fleet (map–reduce: ``run``/``drive_virtual`` reduce
+    the per-worker completions back into one result set).  ``step`` drives
+    real workers on the real clock (auto-beating each worker it
+    successfully steps — an explicit ``registry.fail`` still wins, the
+    monitor ignores beats from failed nodes); ``drive_virtual`` is the
+    event-driven loop for :class:`~repro.fleet.registry.SimWorker` fleets.
+    """
+
+    def __init__(self, registry: DeviceRegistry, *, objective=None):
+        self.registry = registry
+        self.objective = (resolve_objective(objective)
+                          if objective is not None else None)
+        self.placements: List[PlacementRecord] = []
+        self.events: List[FailoverEvent] = []
+        self.stats = {"routed": 0, "rejected": 0, "rerouted": 0,
+                      "lost": 0, "fanout": 0,
+                      "rejections": {}}      # shed counts by reason
+
+    # -- scoring -------------------------------------------------------------
+
+    def score_worker(self, w: Worker) -> WorkerScore:
+        pending = w.pending
+        bp = w.table(self.objective).plan_batch(
+            pending + 1, w.bandwidth, max_batch=w.n_slots)
+        d = bp.decision
+        score = bp.per_request_cost * (1.0 + pending / max(w.n_slots, 1))
+        return WorkerScore(worker=w.name, score=score,
+                           per_request_cost=bp.per_request_cost,
+                           pending=pending, n_slots=w.n_slots,
+                           queue_depth=len(w.queue),
+                           bandwidth_mbps=w.bandwidth,
+                           mode=d.mode, cr=d.cr, codec=d.codec)
+
+    def rank(self, exclude: Sequence[str] = ()) -> List[WorkerScore]:
+        """Live workers' bids, cheapest first."""
+        scores = [self.score_worker(w) for w in self.registry.alive()
+                  if w.name not in exclude]
+        return sorted(scores, key=lambda s: (s.score, s.worker))
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, prompt, n_new: int, *, pin: Optional[str] = None,
+               slo_ms: Optional[float] = None, seed: int = 0,
+               temperature: float = 0.0,
+               arrival_ts: Optional[float] = None
+               ) -> Tuple[Request, PlacementRecord]:
+        req = Request(prompt=np.asarray(prompt), n_new=n_new, slo_ms=slo_ms,
+                      seed=seed, temperature=temperature,
+                      **({} if arrival_ts is None
+                         else {"arrival_ts": arrival_ts}))
+        return req, self.route(req, pin=pin)
+
+    def route(self, req: Request, *, pin: Optional[str] = None,
+              force: bool = False, exclude: Sequence[str] = (),
+              reason: str = "scored") -> PlacementRecord:
+        """Admit ``req`` to a worker queue; raises :class:`FleetRejected`
+        (with the shed counted) when it cannot.
+
+        ``pin`` bypasses scoring (caller-chosen worker — affinity, tests);
+        ``force`` bypasses the queue bound (reserved for re-routing work
+        the fleet already admitted); ``exclude`` removes workers from the
+        candidate set (e.g. the one that just died).
+        """
+        if pin is not None:
+            w = self.registry.get(pin)
+            if not self.registry.is_alive(pin):
+                w.queue.reject("dead_worker")
+                return self._shed("dead_worker",
+                                  f"worker {pin!r} is dead")
+            scores = [self.score_worker(w)]
+            try:
+                w.submit_request(req, force=force)
+            except QueueFull as e:
+                return self._shed(e.reason,
+                                  f"worker {pin!r} queue is full")
+            rec = PlacementRecord(req.id, pin, scores, reason="pinned")
+        else:
+            ranked = self.rank(exclude)
+            if not ranked:
+                return self._shed("no_workers", "no live workers")
+            placed = None
+            for s in ranked:
+                try:
+                    self.registry.get(s.worker).submit_request(req,
+                                                               force=force)
+                    placed = s.worker
+                    break
+                except QueueFull:
+                    continue       # that queue counted its own "full"
+            if placed is None:
+                return self._shed("all_full",
+                                  "every live worker queue is at capacity")
+            rec = PlacementRecord(req.id, placed, ranked, reason=reason)
+        self.placements.append(rec)
+        self.stats["routed"] += 1
+        return rec
+
+    def _shed(self, reason: str, msg: str):
+        self.stats["rejected"] += 1
+        rej = self.stats["rejections"]
+        rej[reason] = rej.get(reason, 0) + 1
+        raise FleetRejected(msg, reason=reason)
+
+    def fanout(self, prompts: Sequence, n_new, *, seeds=None,
+               slo_ms: Optional[float] = None,
+               temperature: float = 0.0
+               ) -> List[Tuple[Request, Optional[PlacementRecord]]]:
+        """Map a batch of prompts across the fleet (one routing decision
+        each; a shed prompt yields ``(req, None)`` instead of aborting the
+        batch).  Reduce with ``run()``/``completion_for()``."""
+        out = []
+        for i, p in enumerate(prompts):
+            req = Request(prompt=np.asarray(p),
+                          n_new=n_new[i] if not isinstance(n_new, int)
+                          else n_new,
+                          slo_ms=slo_ms,
+                          seed=seeds[i] if seeds is not None else i,
+                          temperature=temperature)
+            try:
+                out.append((req, self.route(req)))
+            except FleetRejected:
+                out.append((req, None))
+        self.stats["fanout"] += 1
+        return out
+
+    # -- serving loops -------------------------------------------------------
+
+    def step(self) -> List:
+        """One fleet round on the real clock: fault check, then one
+        ``ServingRuntime.step`` per live worker (auto-beat on success)."""
+        self._check_faults()
+        done: List = []
+        for w in self.registry.alive():
+            done.extend(w.step())
+            self.registry.beat(w.name)
+        return done
+
+    def run(self, max_steps: int = 100_000) -> List:
+        """Step until every live worker is drained; returns the completions
+        produced (fleet-wide, arbitrary worker interleaving)."""
+        done: List = []
+        steps = 0
+        while any(w.queue or not w.idle for w in self.registry.alive()):
+            done.extend(self.step())
+            steps += 1
+            if steps >= max_steps:
+                raise RuntimeError(f"run() exceeded {max_steps} steps")
+        return done
+
+    def drive_virtual(self, requests: Sequence[Request], *,
+                      events: Sequence[Tuple[float, Callable]] = (),
+                      max_iters: int = 1_000_000) -> Dict:
+        """Event-driven virtual-time loop for ``SimWorker`` fleets.
+
+        ``requests`` carry virtual ``arrival_ts`` (seconds); each is routed
+        when the virtual clock reaches it, with the fleet's queue state *at
+        that instant* — so placement reflects load, exactly like the real
+        loop.  ``events`` are ``(t, fn)`` callbacks (e.g. ``lambda:
+        registry.fail("w2")`` to kill a worker mid-run).  Returns the drive
+        summary: served completions, shed requests, and the virtual
+        makespan.
+        """
+        pending = sorted(requests, key=lambda r: (r.arrival_ts, r.id))
+        evs = sorted(events, key=lambda e: e[0])
+        shed: List[Request] = []
+        done: List = []
+        now, iters = 0.0, 0
+        while True:
+            iters += 1
+            if iters > max_iters:
+                raise RuntimeError(f"drive_virtual exceeded {max_iters} "
+                                   "events")
+            next_service = min(
+                (w.next_event_at(now) for w in self.registry.alive()),
+                default=float("inf"))
+            next_arrival = pending[0].arrival_ts if pending else float("inf")
+            next_inject = evs[0][0] if evs else float("inf")
+            t = min(next_service, next_arrival, next_inject)
+            if t == float("inf"):
+                break
+            now = max(now, t)
+            while evs and evs[0][0] <= now:
+                evs.pop(0)[1]()
+            self._check_faults()
+            while pending and pending[0].arrival_ts <= now:
+                req = pending.pop(0)
+                try:
+                    self.route(req)
+                except FleetRejected:
+                    shed.append(req)
+            for w in self.registry.alive():
+                done.extend(w.step(now))
+        return {"completions": done, "shed": shed, "makespan_s": now,
+                "served_tokens": sum(c.n_tokens for c in done)}
+
+    # -- failure semantics ---------------------------------------------------
+
+    def _check_faults(self) -> List[str]:
+        """Consume newly-dead workers: drain their queued + in-flight
+        requests and re-route each to a surviving worker (``force=True`` —
+        admitted work is never shed by the bound), tightest deadline
+        first.  A request with nowhere to go is lost and counted."""
+        newly = self.registry.check_dead()
+        if not newly:
+            return []
+        orphans: List[Request] = []
+        for name in newly:
+            orphans.extend(self.registry.get(name).drain_requests())
+        rerouted = 0
+        for req in sorted(orphans, key=lambda r: (r.deadline(),
+                                                  r.arrival_ts)):
+            try:
+                self.route(req, force=True, exclude=newly,
+                           reason="rerouted")
+                rerouted += 1
+            except FleetRejected:
+                self.stats["lost"] += 1
+        self.stats["rerouted"] += rerouted
+        self.events.append(FailoverEvent(
+            dead=list(newly), survivors=len(self.registry.alive()),
+            requeued=rerouted))
+        return newly
+
+    # -- reduce / telemetry --------------------------------------------------
+
+    def completions(self) -> Dict[str, List]:
+        """Per-worker completion lists (dead workers keep what they
+        finished before dying)."""
+        return {w.name: list(w.completions) for w in self.registry
+                if hasattr(w, "completions")}
+
+    def completion_for(self, request_id: int):
+        """The completion that served ``request_id``, wherever it ran
+        (None if still pending or shed)."""
+        for comps in self.completions().values():
+            for c in comps:
+                if c.request_id == request_id:
+                    return c
+        return None
+
+    def placement_for(self, request_id: int) -> List[PlacementRecord]:
+        """Every routing decision made for ``request_id`` (>1 after a
+        failover re-route)."""
+        return [p for p in self.placements if p.request_id == request_id]
+
+    def stats_snapshot(self) -> Dict:
+        """Router counters + per-worker runtime snapshots, one consistent
+        copy."""
+        snap = dict(self.stats)
+        snap["rejections"] = dict(self.stats["rejections"])
+        snap["alive"] = [w.name for w in self.registry.alive()]
+        snap["dead"] = self.registry.dead()
+        snap["workers"] = {w.name: w.stats_snapshot()
+                           for w in self.registry}
+        return snap

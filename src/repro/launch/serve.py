@@ -131,11 +131,15 @@ def main():
     for c in comps:
         name = c.codec or "-"
         by_codec[name] = by_codec.get(name, 0) + 1
+    stats = rt.stats_snapshot()
     print(f"latency p50 {np.percentile(lats, 50):.0f} ms  "
           f"p99 {np.percentile(lats, 99):.0f} ms  "
-          f"plans {by_plan}  max concurrent {rt.stats['max_concurrent']}")
+          f"plans {by_plan}  max concurrent {stats['max_concurrent']}")
     print(f"transport: codecs {by_codec}  "
-          f"{rt.stats['wire_bytes'] / 1e6:.2f} MB on wire (modeled)")
+          f"{stats['wire_bytes'] / 1e6:.2f} MB on wire (modeled)")
+    if stats["rejected"]:
+        print(f"backpressure: {stats['rejected']} puts shed "
+              f"{stats['rejections']}")
     if args.slo_ms:
         met = sum(1 for c in comps if c.slo_met)
         print(f"SLO {args.slo_ms:g} ms: {met}/{len(comps)} met")

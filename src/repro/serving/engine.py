@@ -296,6 +296,39 @@ class ServingRuntime:
         """True when no request is in flight in any pool."""
         return all(p.n_active == 0 for p in self.pools.values())
 
+    # -- telemetry -----------------------------------------------------------
+
+    def stats_snapshot(self) -> Dict[str, Any]:
+        """Consistent point-in-time copy of the runtime counters.
+
+        ``stats`` is a plain mutable dict updated mid-``step()``; a reader
+        in another logical context (the fleet router, a benchmark thread)
+        must not see half-updated state or hold a reference that keeps
+        mutating under it.  The snapshot also folds in derived gauges —
+        queue depth, in-flight count, completions, and the queue's shed
+        accounting (rejected puts by reason).
+        """
+        snap = dict(self.stats)
+        snap["queue_depth"] = len(self.queue)
+        snap["in_flight"] = sum(p.n_active for p in self.pools.values())
+        snap["completed"] = len(self.completions)
+        snap["rejected"] = self.queue.rejected
+        snap["rejections"] = dict(self.queue.rejections)
+        return snap
+
+    # -- fleet support -------------------------------------------------------
+
+    def drain_requests(self) -> List[Request]:
+        """Pull every queued AND in-flight request out of this runtime
+        (dead-worker path: the fleet router re-routes them to surviving
+        workers).  Deadline order is recovered by the target queue's EDF
+        ``pop``; re-served requests stay token-exact because ``seed``/
+        ``temperature`` pin the sampling chain."""
+        reqs = self.queue.drain()
+        for pool in self.pools.values():
+            reqs.extend(pool.drain())
+        return reqs
+
     # -- the serving loop ----------------------------------------------------
 
     def step(self) -> List[Completion]:

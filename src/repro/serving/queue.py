@@ -13,7 +13,7 @@ import dataclasses
 import itertools
 import time
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
@@ -21,7 +21,15 @@ _ids = itertools.count()
 
 
 class QueueFull(RuntimeError):
-    """The bounded request queue rejected an arrival (backpressure)."""
+    """The bounded request queue rejected an arrival (backpressure).
+
+    ``reason`` tells telemetry *why* the put was shed: ``"full"`` (the
+    bound) or ``"dead_worker"`` (the fleet router refused a worker that
+    missed its heartbeat)."""
+
+    def __init__(self, msg: str, reason: str = "full"):
+        super().__init__(msg)
+        self.reason = reason
 
 
 @dataclasses.dataclass
@@ -81,15 +89,37 @@ class RequestQueue:
             raise ValueError("max_size must be >= 1")
         self.max_size = max_size
         self._q: Deque[Request] = deque()
+        # shed accounting: every refused put, by reason — the router's shed
+        # rate must be visible in telemetry, not a silent exception
+        self.rejections: Dict[str, int] = {}
+
+    @property
+    def rejected(self) -> int:
+        """Total puts this queue refused (all reasons)."""
+        return sum(self.rejections.values())
+
+    def reject(self, reason: str) -> None:
+        """Record an externally-decided rejection (e.g. the fleet router
+        refusing a dead worker before ever calling ``put``)."""
+        self.rejections[reason] = self.rejections.get(reason, 0) + 1
 
     def put(self, req: Request, force: bool = False) -> Request:
         """``force=True`` bypasses the bound — reserved for the runtime
         re-queuing work it already admitted (failover, overflow); dropping
         an in-flight request to enforce backpressure would lose it."""
         if not force and len(self._q) >= self.max_size:
+            self.reject("full")
             raise QueueFull(f"queue at capacity ({self.max_size})")
         self._q.append(req)
         return req
+
+    def drain(self) -> List[Request]:
+        """Remove and return every queued request (dead-worker path: the
+        fleet router re-routes them; EDF order is recovered by the target
+        queue's ``pop``, which orders by deadline, not insertion)."""
+        out = list(self._q)
+        self._q.clear()
+        return out
 
     def pop(self) -> Request:
         """Earliest deadline first; FIFO among equal deadlines."""

@@ -20,9 +20,10 @@ through the session/policy stack; :func:`exchange_cost` /
 :func:`plan_wire_bytes` are the accounting entry points the profiler and
 the serving telemetry share.
 """
-from repro.transport.codecs import (CodecSpec, ExchangeCodec, get_codec,
-                                    list_codecs, payload_nbytes,
-                                    register_codec)
+from repro.transport.codecs import (CodecSpec, ExchangeCodec,
+                                    calibrate_codec_bws, get_codec,
+                                    list_codecs, measure_decode_bw,
+                                    payload_nbytes, register_codec)
 from repro.transport.executor import (codec_prefill_attention,
                                       codec_sim_attention,
                                       codec_sim_prefill_attention,
@@ -34,7 +35,8 @@ from repro.transport.links import (LinkCost, TransportLink, exchange_cost,
 
 __all__ = [
     "ExchangeCodec", "CodecSpec", "register_codec", "get_codec",
-    "list_codecs", "payload_nbytes",
+    "list_codecs", "payload_nbytes", "measure_decode_bw",
+    "calibrate_codec_bws",
     "TransportLink", "LinkCost", "register_link", "get_link", "list_links",
     "exchange_cost", "exchange_wire_bytes", "plan_wire_bytes",
     "ring_prefill_attention", "codec_prefill_attention",

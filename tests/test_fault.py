@@ -22,6 +22,28 @@ def test_heartbeat_timeout():
     assert mon.dead_nodes() == ["b"]
 
 
+def test_heartbeat_miss_requeue_preserves_edf_order():
+    """The fleet failover contract at the queue level: a dead worker's
+    drained requests are force-put (the bound must not drop admitted work)
+    into a survivor's queue, and EDF order is *recovered* by the target
+    queue's deadline-ordered pop — not by replay of insertion order."""
+    from repro.serving.queue import Request, RequestQueue
+    slos = [9000.0, 1000.0, None, 3000.0]       # arrival order != EDF order
+    reqs = [Request(np.ones(4, np.int64), 4, slo_ms=s,
+                    arrival_ts=float(i)) for i, s in enumerate(slos)]
+    dead = RequestQueue(max_size=4)
+    for r in reqs:
+        dead.put(r)
+    drained = dead.drain()
+    assert len(dead) == 0 and len(drained) == 4
+    survivor = RequestQueue(max_size=2)          # smaller than the drain
+    for r in drained:
+        survivor.put(r, force=True)              # failover bypasses bound
+    by_deadline = [r.id for r in sorted(
+        reqs, key=lambda r: (r.deadline(), r.arrival_ts))]
+    assert [survivor.pop().id for _ in range(4)] == by_deadline
+
+
 def _counter_loop(tmp_path, ckpt_every=2):
     """step_fn: state = (count, checksum); checksum folds the batch in, so
     divergent replay would change it."""

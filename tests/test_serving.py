@@ -64,6 +64,24 @@ def test_queue_oldest_wait():
     assert q.oldest_wait_ms(now=10.5) == pytest.approx(500.0)
 
 
+def test_queue_rejection_accounting():
+    """Backpressure is telemetry, not a silent exception: refused puts are
+    counted by reason, force-puts bypass both the bound and the count."""
+    q = RequestQueue(max_size=1)
+    q.put(Request(_prompt(4), 4))
+    with pytest.raises(QueueFull) as ei:
+        q.put(Request(_prompt(4), 4))
+    assert ei.value.reason == "full"
+    assert q.rejected == 1 and q.rejections == {"full": 1}
+    q.reject("dead_worker")               # router-decided shed
+    assert q.rejected == 2 and q.rejections["dead_worker"] == 1
+    q.put(Request(_prompt(4), 4), force=True)
+    assert q.rejected == 2 and len(q) == 2
+    drained = q.drain()
+    assert len(drained) == 2 and len(q) == 0 and not q
+    assert q.rejections == {"full": 1, "dead_worker": 1}  # counts survive
+
+
 def test_request_validation():
     r = Request(np.ones((1, 5), np.int64), 3)      # [1, T0] squeezed
     assert r.prompt.shape == (5,) and r.total_len == 8
@@ -321,6 +339,40 @@ def test_drive_applies_backpressure_on_bounded_queue(session):
     for i, rid in enumerate(sorted(got)):      # submitted in arrival order
         ref = session.generate(jnp.asarray(prompts[i])[None], 6, seed=i)
         np.testing.assert_array_equal(got[rid], np.asarray(ref)[0])
+
+
+def test_stats_snapshot_is_consistent_copy(session):
+    """stats_snapshot() hands a reader in another logical context (the
+    fleet router, a benchmark) a copy with the derived gauges folded in —
+    mutating it must not touch the live runtime state."""
+    rt = ServingRuntime(session, n_slots=2, chunk=3, max_len=24,
+                        queue_size=1)
+    rt.submit(_prompt(4, seed=0), 6)
+    with pytest.raises(QueueFull):
+        rt.submit(_prompt(4, seed=1), 6)
+    snap = rt.stats_snapshot()
+    assert snap["queue_depth"] == 1 and snap["in_flight"] == 0
+    assert snap["rejected"] == 1 and snap["rejections"] == {"full": 1}
+    snap["steps"] = 999
+    snap["rejections"]["full"] = 999
+    assert rt.stats["steps"] == 0
+    assert rt.queue.rejections == {"full": 1}
+    rt.run()
+    snap2 = rt.stats_snapshot()
+    assert snap2["completed"] == 1 and snap2["queue_depth"] == 0
+    assert snap2["in_flight"] == 0 and snap2["steps"] == rt.stats["steps"]
+
+
+def test_drain_requests_empties_queue_and_pools(session):
+    """drain_requests() (the fleet dead-worker path) hands back queued AND
+    in-flight requests; the runtime is left empty."""
+    rt = ServingRuntime(session, n_slots=2, chunk=3, max_len=24)
+    reqs = [rt.submit(_prompt(4, seed=i), 6, seed=i) for i in range(3)]
+    rt.step()                               # 2 in flight + 1 queued
+    drained = rt.drain_requests()
+    assert {r.id for r in drained} == {r.id for r in reqs}
+    assert len(rt.queue) == 0 and rt.idle
+    assert rt.stats_snapshot()["in_flight"] == 0
 
 
 def test_prime_slot_temperature_is_traced(session):
