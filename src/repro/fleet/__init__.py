@@ -16,14 +16,22 @@ token-exactly on heartbeat miss.
     router = FleetRouter(registry)
     req, rec = router.submit(prompt, n_new=16)
     print(rec.explain())                  # the full scored ranking
+
+Robustness (PR 7): dispatch failures stream through ``Worker.pop_faults``
+into a per-worker :class:`~repro.runtime.fault.CircuitBreaker`; a
+:class:`~repro.runtime.fault.RetryPolicy` bounds local re-dispatch and
+placement retries; ``FleetRouter.readmit`` runs the full revive →
+re-calibrate → re-profile → re-place cycle.  Faults are injected — never
+ad-hoc — through :mod:`repro.chaos`.
 """
 from repro.fleet.registry import (DeviceRegistry, SimCompletion, SimWorker,
                                   Worker, WorkerHandle, scaled_hardware)
 from repro.fleet.router import (FleetRejected, FleetRouter, PlacementRecord,
-                                WorkerScore)
+                                ReadmissionEvent, WorkerScore)
 
 __all__ = [
     "DeviceRegistry", "Worker", "WorkerHandle", "SimWorker",
     "SimCompletion", "scaled_hardware",
-    "FleetRouter", "FleetRejected", "PlacementRecord", "WorkerScore",
+    "FleetRouter", "FleetRejected", "PlacementRecord", "ReadmissionEvent",
+    "WorkerScore",
 ]

@@ -32,9 +32,10 @@ import dataclasses
 import time
 from typing import Callable, Dict, Iterator, List, Optional
 
+from repro.chaos.schedule import DispatchFault
 from repro.profiling.hardware import (JETSON_ORIN_NANO, WIFI_GLOO,
                                       HardwareProfile, LinkProfile)
-from repro.runtime.fault import HeartbeatMonitor
+from repro.runtime.fault import HeartbeatMonitor, RetryPolicy
 from repro.serving.queue import Request, RequestQueue
 
 
@@ -64,6 +65,7 @@ class Worker:
     link: LinkProfile
     queue: RequestQueue
     n_slots: int
+    codec_bws: Dict[str, float] = {}       # per-device codec calibration
 
     # -- placement inputs ----------------------------------------------------
 
@@ -109,6 +111,17 @@ class Worker:
         """Give up every queued and in-flight request (dead-worker path)."""
         raise NotImplementedError
 
+    def pop_faults(self) -> List[DispatchFault]:
+        """Dispatch failures since the last call (consume pattern — the
+        router feeds these to the per-worker circuit breaker)."""
+        return []
+
+    def reprofile(self, codec_bws: Optional[Dict[str, float]] = None) -> None:
+        """Re-run this worker's profiling sweep (re-admission path); when
+        ``codec_bws`` is given the sweep sees those per-device measured
+        codec decode throughputs."""
+        raise NotImplementedError
+
     def stats_snapshot(self) -> Dict:
         raise NotImplementedError
 
@@ -135,21 +148,41 @@ class WorkerHandle(Worker):
                  hardware: HardwareProfile = JETSON_ORIN_NANO,
                  link: LinkProfile = WIFI_GLOO,
                  runtime=None, n_slots: int = 4, chunk: int = 8,
-                 max_len: int = 256, queue_size: int = 64):
+                 max_len: int = 256, queue_size: int = 64, sweep=None):
         from repro.serving.engine import ServingRuntime
         self.name = name
         self.session = session
         self.hardware = hardware
         self.link = link
+        self.sweep = sweep
+        self.codec_bws: Dict[str, float] = {}
+        self.profiled_count = 1 if session.perfmap is not None else 0
         self.runtime = runtime or ServingRuntime(
             session, n_slots=n_slots, chunk=chunk, max_len=max_len,
             queue_size=queue_size)
         self.queue = self.runtime.queue
         self.n_slots = self.runtime.n_slots
+        self.runtime.chaos_name = name
 
     @property
     def bandwidth(self) -> float:
         return self.session.bandwidth
+
+    def observe_bandwidth(self, mbps: float) -> None:
+        self.session.observe_bandwidth(mbps)
+
+    def reprofile(self, codec_bws: Optional[Dict[str, float]] = None) -> None:
+        """Re-sweep this worker's session at its own hardware/link pin,
+        with its per-device codec calibration installed for the sweep.
+        Simulated backend: re-admission must not monopolize the device."""
+        from repro.transport.codecs import codec_overrides
+        bws = codec_bws if codec_bws is not None else self.codec_bws
+        if codec_bws is not None:
+            self.codec_bws = dict(codec_bws)
+        with codec_overrides(bws or {}):
+            self.session.profile(self.sweep, backend="simulated",
+                                 hardware=self.hardware, link=self.link)
+        self.profiled_count += 1
 
     def table(self, objective=None):
         return self.session.policy.table(objective or self.session.objective)
@@ -225,22 +258,40 @@ class SimWorker(Worker):
                  link: LinkProfile = WIFI_GLOO,
                  bandwidth_mbps: float = 400.0, n_slots: int = 4,
                  queue_size: int = 64, objective="latency",
-                 allow_modes=("local", "prism")):
+                 allow_modes=("local", "prism"), sweep=None,
+                 adaptive: bool = True, shed_expired: bool = False,
+                 dispatch_timeout_s: Optional[float] = None,
+                 retry: Optional[RetryPolicy] = None):
         from repro.core.policy import AdaptivePolicy, resolve_objective
         self.name = name
         self.hardware = hardware
         self.link = link
         self.n_slots = n_slots
-        self.queue = RequestQueue(queue_size)
+        self.queue = RequestQueue(queue_size, shed_expired=shed_expired)
         self._bandwidth = float(bandwidth_mbps)
+        # static baseline: plan at the bandwidth seen at construction and
+        # never look again (what a non-adaptive deployment would run)
+        self._plan_bandwidth = float(bandwidth_mbps)
+        self.adaptive = adaptive
         self.objective = resolve_objective(objective)
+        self._allow_modes = tuple(allow_modes)
+        self.sweep = sweep
+        self.codec_bws: Dict[str, float] = {}
+        self.profiled_count = 0
         if perfmap is None:
-            from repro.profiling import (ProfileContext, SweepSpec,
-                                         get_backend)
-            perfmap = get_backend("simulated").profile(
-                ProfileContext(hardware=hardware, link=link), SweepSpec())
+            perfmap = self._sweep_perfmap()
+            self.profiled_count = 1
         self.perfmap = perfmap
-        self.policy = AdaptivePolicy(perfmap, allow_modes=tuple(allow_modes))
+        self.policy = AdaptivePolicy(perfmap, allow_modes=self._allow_modes)
+        # fault-injection / response state
+        self.chaos = None                     # set by ChaosController.attach
+        self.retry = retry or RetryPolicy()
+        self.dispatch_timeout_s = dispatch_timeout_s
+        self._stall_until = 0.0
+        self._fail_kind: Optional[str] = None  # in-service dispatch doomed?
+        self._faults: List[DispatchFault] = []
+        self._attempts: Dict[int, int] = {}    # request id → failed tries
+        self._consec_failures = 0
         # virtual service state
         self._in_service: List[Request] = []
         self._service_start = 0.0
@@ -248,7 +299,28 @@ class SimWorker(Worker):
         self._service_key = "local"
         self.completions: List[SimCompletion] = []
         self.stats = {"steps": 0, "admitted": 0, "served": 0, "tokens": 0,
-                      "max_concurrent": 0, "busy_s": 0.0}
+                      "max_concurrent": 0, "busy_s": 0.0, "retries": 0,
+                      "timeouts": 0, "transport_errors": 0, "straggled": 0,
+                      "gave_up": 0}
+
+    def _sweep_perfmap(self):
+        from repro.profiling import ProfileContext, SweepSpec, get_backend
+        from repro.transport.codecs import codec_overrides
+        with codec_overrides(self.codec_bws or {}):
+            return get_backend("simulated").profile(
+                ProfileContext(hardware=self.hardware, link=self.link),
+                self.sweep or SweepSpec())
+
+    def reprofile(self, codec_bws: Optional[Dict[str, float]] = None) -> None:
+        """Rebuild the perf map / policy table (re-admission path), sweeping
+        under this device's measured codec decode throughputs if given."""
+        from repro.core.policy import AdaptivePolicy
+        if codec_bws is not None:
+            self.codec_bws = dict(codec_bws)
+        self.perfmap = self._sweep_perfmap()
+        self.policy = AdaptivePolicy(self.perfmap,
+                                     allow_modes=self._allow_modes)
+        self.profiled_count += 1
 
     @property
     def bandwidth(self) -> float:
@@ -271,48 +343,126 @@ class SimWorker(Worker):
 
     def step(self, now: Optional[float] = None) -> List[SimCompletion]:
         """Advance to virtual time ``now``: finish the in-service batch if
-        its modeled service time has elapsed, then (if idle) admit the next
-        table-formed micro-batch from the EDF queue."""
+        its modeled service time has elapsed, then (if idle and not in a
+        stall/backoff window) admit the next table-formed micro-batch."""
         if now is None:
             raise ValueError("SimWorker.step needs the virtual time `now`")
         self.stats["steps"] += 1
         done: List[SimCompletion] = []
         if self._in_service and now >= self._busy_until - 1e-12:
             fin = self._busy_until
-            for req in self._in_service:
-                done.append(SimCompletion(
-                    request_id=req.id, n_tokens=req.n_new, worker=self.name,
-                    arrival_ts=req.arrival_ts,
-                    admitted_ts=self._service_start, finished_ts=fin,
-                    plan_key=self._service_key, slo_ms=req.slo_ms))
-                self.stats["served"] += 1
-                self.stats["tokens"] += req.n_new
-            self.completions.extend(done)
-            self._in_service = []
-        if not self._in_service and self.queue:
-            bp = self.table().plan_batch(len(self.queue), self.bandwidth,
-                                         max_batch=self.n_slots)
-            reqs = self.queue.pop_many(bp.n_admit)
-            self._in_service = reqs
-            self._service_start = now
-            self._service_key = bp.decision.exec_key
-            # one profiled pass per generated token; wall time is charged
-            # even under the energy objective (the clock is not an
-            # objective), so total_ms — not objective.cost — is the model
-            service_s = 1e-3 * bp.decision.expected.total_ms * max(
-                r.n_new for r in reqs)
-            self._busy_until = now + service_s
-            self.stats["admitted"] += len(reqs)
-            self.stats["busy_s"] += service_s
-            self.stats["max_concurrent"] = max(self.stats["max_concurrent"],
-                                               len(reqs))
+            if self._fail_kind is not None:
+                self._finish_failed(fin)
+            else:
+                for req in self._in_service:
+                    done.append(SimCompletion(
+                        request_id=req.id, n_tokens=req.n_new,
+                        worker=self.name, arrival_ts=req.arrival_ts,
+                        admitted_ts=self._service_start, finished_ts=fin,
+                        plan_key=self._service_key, slo_ms=req.slo_ms))
+                    self.stats["served"] += 1
+                    self.stats["tokens"] += req.n_new
+                    self._attempts.pop(req.id, None)
+                self.completions.extend(done)
+                self._in_service = []
+                self._consec_failures = 0
+        if (not self._in_service and self.queue
+                and now >= self._stall_until - 1e-12):
+            self._admit(now)
         return done
+
+    def _admit(self, now: float) -> None:
+        table = self.table()
+        plan_bw = self._bandwidth if self.adaptive else self._plan_bandwidth
+        bp = table.plan_batch(len(self.queue), plan_bw,
+                              max_batch=self.n_slots)
+        reqs = self.queue.pop_many(bp.n_admit, now=now)
+        if not reqs:                       # everything queued had expired
+            return
+        self._in_service = reqs
+        self._service_start = now
+        self._service_key = bp.decision.exec_key
+        # one profiled pass per generated token; wall time is charged even
+        # under the energy objective (the clock is not an objective), so
+        # total_ms — not objective.cost — is the model.  A static planner
+        # still pays the TRUE link: its chosen plan is re-costed at the
+        # live bandwidth.
+        service_s = 1e-3 * self._charged_ms(table, bp) * max(
+            r.n_new for r in reqs)
+        self._fail_kind = None
+        fault = (self.chaos.dispatch_fault(self.name, now)
+                 if self.chaos is not None else None)
+        if fault is not None and fault.kind == "straggle":
+            service_s *= max(fault.value, 1.0)
+            self.stats["straggled"] += 1
+        elif fault is not None and fault.kind == "error":
+            # transport error surfaces after `value` seconds of wire time
+            self._fail_kind = "error"
+            service_s = min(service_s, max(fault.value, 1e-6))
+        if (self._fail_kind is None and self.dispatch_timeout_s is not None
+                and service_s > self.dispatch_timeout_s):
+            self._fail_kind = "timeout"
+            service_s = self.dispatch_timeout_s
+        self._busy_until = now + service_s
+        self.stats["admitted"] += len(reqs)
+        self.stats["busy_s"] += service_s
+        self.stats["max_concurrent"] = max(self.stats["max_concurrent"],
+                                           len(reqs))
+
+    def _charged_ms(self, table, bp) -> float:
+        """Modeled per-token service: the planned decision's cost at the
+        TRUE bandwidth (identical to ``expected.total_ms`` for an adaptive
+        worker, which planned at the true bandwidth already)."""
+        d = bp.decision
+        if self.adaptive:
+            return d.expected.total_ms
+        for key, exp in table.candidates(bp.batch, self._bandwidth):
+            if (key.mode, key.cr, key.codec) == (d.mode, d.cr, d.codec):
+                return exp.total_ms
+        return d.expected.total_ms
+
+    def _finish_failed(self, fin: float) -> None:
+        """The in-service dispatch failed (transport error / timeout):
+        requeue within the retry budget, give up past it, and back off
+        exponentially before the next local dispatch."""
+        kind = self._fail_kind or "error"
+        self.stats["timeouts" if kind == "timeout"
+                   else "transport_errors"] += 1
+        retried, gave_up = [], []
+        for req in self._in_service:
+            n = self._attempts.get(req.id, 0) + 1
+            self._attempts[req.id] = n
+            if n > self.retry.max_retries:
+                gave_up.append(req)
+                self._attempts.pop(req.id, None)
+                self.stats["gave_up"] += 1
+            else:
+                self.queue.put(req, force=True)
+                retried.append(req.id)
+                self.stats["retries"] += 1
+        self._in_service = []
+        self._fail_kind = None
+        self._consec_failures += 1
+        self._stall_until = max(
+            self._stall_until,
+            fin + self.retry.backoff_s(self._consec_failures - 1))
+        self._faults.append(DispatchFault(
+            worker=self.name, kind=kind, t=fin,
+            retried=tuple(retried), gave_up=tuple(gave_up)))
+
+    def apply_stall(self, t: float, duration: float) -> None:
+        """Scripted stall: no admissions until ``t + duration``; an
+        in-service batch finishes late by the stall length."""
+        self._stall_until = max(self._stall_until, t + duration)
+        if self._in_service:
+            self._busy_until += duration
+            self.stats["busy_s"] += duration
 
     def next_event_at(self, now: float) -> float:
         if self._in_service:
             return self._busy_until
         if self.queue:
-            return now
+            return max(now, self._stall_until)
         return float("inf")
 
     # -- failure / telemetry -------------------------------------------------
@@ -322,7 +472,12 @@ class SimWorker(Worker):
         reqs.extend(self._in_service)
         self._in_service = []
         self._busy_until = 0.0
+        self._fail_kind = None
         return reqs
+
+    def pop_faults(self) -> List[DispatchFault]:
+        out, self._faults = self._faults, []
+        return out
 
     def stats_snapshot(self) -> Dict:
         snap = dict(self.stats)
@@ -331,6 +486,8 @@ class SimWorker(Worker):
         snap["completed"] = len(self.completions)
         snap["rejected"] = self.queue.rejected
         snap["rejections"] = dict(self.queue.rejections)
+        snap["expired"] = self.queue.rejections.get("expired", 0)
+        snap["profiled_count"] = self.profiled_count
         return snap
 
     @property
@@ -350,18 +507,25 @@ class DeviceRegistry:
 
     ``calibrate_codecs=True`` runs the measured decode-throughput
     micro-benchmark (:func:`~repro.transport.codecs.calibrate_codec_bws`)
-    at registry construction, so every worker profiled afterwards sweeps
-    with *measured* codec reconstruction costs instead of the documented
-    constants.
+    at registry construction — once, on this host — and every worker
+    added afterwards gets a *per-device* copy scaled to its own
+    :class:`HardwareProfile` (``eff_inf`` ratio vs ``host_hardware``): a
+    board that computes at 0.35× the host reconstructs codec payloads at
+    0.35× the host's measured throughput.  The worker is then re-profiled
+    under its own calibration, so its policy table prices codecs the way
+    *that device* would pay for them.  ``readmit()`` repeats the scale +
+    re-profile on revival.
     """
 
     def __init__(self, *, heartbeat_timeout_s: float = 10.0,
                  clock: Callable[[], float] = time.monotonic,
-                 calibrate_codecs: bool = False):
+                 calibrate_codecs: bool = False,
+                 host_hardware: HardwareProfile = JETSON_ORIN_NANO):
         self.monitor = HeartbeatMonitor([], timeout_s=heartbeat_timeout_s,
                                         clock=clock)
         self.workers: Dict[str, Worker] = {}
         self._dead: set = set()
+        self.host_hardware = host_hardware
         self.codec_bws: Dict[str, float] = {}
         if calibrate_codecs:
             from repro.transport.codecs import calibrate_codec_bws
@@ -374,7 +538,25 @@ class DeviceRegistry:
             raise ValueError(f"worker {worker.name!r} already registered")
         self.workers[worker.name] = worker
         self.monitor.beat(worker.name)       # starts the liveness deadline
+        if self.codec_bws:
+            self.calibrate_worker(worker)
         return worker
+
+    def device_codec_bws(self, worker: Worker) -> Dict[str, float]:
+        """Host-measured codec decode throughputs scaled to this worker's
+        compute (``eff_inf`` ratio) — the per-device calibration estimate
+        until an on-device backend can measure for real."""
+        scale = worker.hardware.eff_inf / max(self.host_hardware.eff_inf,
+                                              1e-9)
+        return {name: bw * scale for name, bw in self.codec_bws.items()}
+
+    def calibrate_worker(self, worker: Worker) -> Dict[str, float]:
+        """Install the per-device codec calibration and re-profile the
+        worker under it (no-op dict if the host never calibrated)."""
+        bws = self.device_codec_bws(worker)
+        if bws:
+            worker.reprofile(codec_bws=bws)
+        return bws
 
     def get(self, name: str) -> Worker:
         try:
@@ -412,6 +594,22 @@ class DeviceRegistry:
     def revive(self, name: str) -> None:
         self._dead.discard(name)
         self.monitor.revive(name)
+
+    def readmit(self, name: str, *, recalibrate: bool = True,
+                reprofile: bool = True) -> Worker:
+        """Full re-admission: revive → re-calibrate codecs for this device
+        → re-profile → the worker is placeable again.  A revived board may
+        come back throttled or on a different link, so its policy table
+        must be rebuilt before placement trusts it (the router's
+        :meth:`~repro.fleet.router.FleetRouter.readmit` also resets the
+        worker's circuit breaker)."""
+        worker = self.get(name)
+        self.revive(name)
+        if recalibrate and self.codec_bws:
+            worker.codec_bws = self.device_codec_bws(worker)
+        if reprofile:
+            worker.reprofile(codec_bws=worker.codec_bws or None)
+        return worker
 
     def is_alive(self, name: str) -> bool:
         return (name in self.workers and name not in self._dead

@@ -28,25 +28,43 @@ telemetry, not a silent exception).
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.policy import resolve_objective
 from repro.fleet.registry import DeviceRegistry, Worker
+from repro.runtime.fault import CircuitBreaker, RetryPolicy
 from repro.serving.queue import QueueFull, Request
 from repro.serving.scheduler import FailoverEvent
+
+# FleetRejected reasons a placement retry can cure (queue pressure and
+# breaker windows pass; a pinned-dead worker does not)
+RETRYABLE_REASONS = ("all_full", "no_workers", "breaker_open")
 
 
 class FleetRejected(RuntimeError):
     """The fleet shed a request.  ``reason``: ``"all_full"`` (every live
     worker's queue at capacity), ``"full"`` (the pinned worker's queue at
     capacity), ``"dead_worker"`` (pinned to a worker that missed its
-    heartbeat), ``"no_workers"`` (nothing alive to route to)."""
+    heartbeat), ``"no_workers"`` (nothing alive to route to),
+    ``"breaker_open"`` (the only candidates are breaker-blocked)."""
 
     def __init__(self, msg: str, reason: str):
         super().__init__(msg)
         self.reason = reason
+
+
+@dataclasses.dataclass
+class ReadmissionEvent:
+    """One revive → re-calibrate → re-profile → re-enter-placement cycle."""
+    worker: str
+    at: float
+    recalibrated: bool = False
+    reprofiled: bool = True
 
 
 @dataclasses.dataclass
@@ -109,15 +127,37 @@ class FleetRouter:
     event-driven loop for :class:`~repro.fleet.registry.SimWorker` fleets.
     """
 
-    def __init__(self, registry: DeviceRegistry, *, objective=None):
+    def __init__(self, registry: DeviceRegistry, *, objective=None,
+                 retry: Optional[RetryPolicy] = None,
+                 breaker_threshold: int = 3, breaker_reset_s: float = 1.0,
+                 clock: Callable[[], float] = time.monotonic):
         self.registry = registry
         self.objective = (resolve_objective(objective)
                           if objective is not None else None)
+        self.clock = clock
+        # retry=None keeps the pre-chaos semantics: one placement attempt,
+        # shed on rejection.  With a RetryPolicy, drive_virtual re-offers
+        # rejected arrivals after backoff, within the budget.
+        self.retry = retry
+        self._breaker_cfg = (breaker_threshold, breaker_reset_s)
+        self.breakers: Dict[str, CircuitBreaker] = {}
         self.placements: List[PlacementRecord] = []
-        self.events: List[FailoverEvent] = []
+        self.events: List = []               # Failover + Readmission events
         self.stats = {"routed": 0, "rejected": 0, "rerouted": 0,
-                      "lost": 0, "fanout": 0,
+                      "lost": 0, "fanout": 0, "retries": 0,
+                      "timeouts": 0, "transport_errors": 0, "gave_up": 0,
+                      "placement_retries": 0, "breaker_opened": 0,
+                      "readmitted": 0,
                       "rejections": {}}      # shed counts by reason
+
+    def breaker(self, name: str) -> CircuitBreaker:
+        """This worker's circuit breaker (created closed on first use)."""
+        br = self.breakers.get(name)
+        if br is None:
+            thresh, reset = self._breaker_cfg
+            br = self.breakers[name] = CircuitBreaker(
+                fail_threshold=thresh, reset_timeout_s=reset)
+        return br
 
     # -- scoring -------------------------------------------------------------
 
@@ -134,10 +174,12 @@ class FleetRouter:
                            bandwidth_mbps=w.bandwidth,
                            mode=d.mode, cr=d.cr, codec=d.codec)
 
-    def rank(self, exclude: Sequence[str] = ()) -> List[WorkerScore]:
-        """Live workers' bids, cheapest first."""
+    def rank(self, exclude: Sequence[str] = (),
+             now: Optional[float] = None) -> List[WorkerScore]:
+        """Live, breaker-admitted workers' bids, cheapest first."""
+        now = self.clock() if now is None else now
         scores = [self.score_worker(w) for w in self.registry.alive()
-                  if w.name not in exclude]
+                  if w.name not in exclude and self.breaker(w.name).allows(now)]
         return sorted(scores, key=lambda s: (s.score, s.worker))
 
     # -- admission -----------------------------------------------------------
@@ -155,21 +197,29 @@ class FleetRouter:
 
     def route(self, req: Request, *, pin: Optional[str] = None,
               force: bool = False, exclude: Sequence[str] = (),
-              reason: str = "scored") -> PlacementRecord:
+              reason: str = "scored",
+              now: Optional[float] = None) -> PlacementRecord:
         """Admit ``req`` to a worker queue; raises :class:`FleetRejected`
         (with the shed counted) when it cannot.
 
         ``pin`` bypasses scoring (caller-chosen worker — affinity, tests);
         ``force`` bypasses the queue bound (reserved for re-routing work
         the fleet already admitted); ``exclude`` removes workers from the
-        candidate set (e.g. the one that just died).
+        candidate set (e.g. the one that just died).  A worker whose
+        circuit breaker is open receives no placements until its reset
+        window elapses (the next placement after that is the probe).
         """
+        now = self.clock() if now is None else now
         if pin is not None:
             w = self.registry.get(pin)
             if not self.registry.is_alive(pin):
                 w.queue.reject("dead_worker")
                 return self._shed("dead_worker",
                                   f"worker {pin!r} is dead")
+            if not self.breaker(pin).allows(now):
+                w.queue.reject("breaker_open")
+                return self._shed("breaker_open",
+                                  f"worker {pin!r} breaker is open")
             scores = [self.score_worker(w)]
             try:
                 w.submit_request(req, force=force)
@@ -178,8 +228,11 @@ class FleetRouter:
                                   f"worker {pin!r} queue is full")
             rec = PlacementRecord(req.id, pin, scores, reason="pinned")
         else:
-            ranked = self.rank(exclude)
+            ranked = self.rank(exclude, now=now)
             if not ranked:
+                if any(w.name not in exclude for w in self.registry.alive()):
+                    return self._shed("breaker_open",
+                                      "every live worker is breaker-blocked")
                 return self._shed("no_workers", "no live workers")
             placed = None
             for s in ranked:
@@ -232,11 +285,39 @@ class FleetRouter:
         """One fleet round on the real clock: fault check, then one
         ``ServingRuntime.step`` per live worker (auto-beat on success)."""
         self._check_faults()
+        now = self.clock()
         done: List = []
         for w in self.registry.alive():
-            done.extend(w.step())
+            done.extend(self._step_worker(w, now))
             self.registry.beat(w.name)
         return done
+
+    def _step_worker(self, w: Worker, now: float) -> List:
+        """Step one worker and feed its dispatch-fault stream into the
+        breaker/telemetry (completions are breaker successes)."""
+        done = w.step(now)
+        for fault in w.pop_faults():
+            self._on_fault(w, fault, now)
+        if done:
+            self.breaker(w.name).record_success(now)
+        return done
+
+    def _on_fault(self, w: Worker, fault, now: float) -> None:
+        """One dispatch failure: count it, trip the breaker if it's the
+        threshold-th in a row, and re-place work the worker gave up on."""
+        self.stats["retries"] += len(fault.retried)
+        self.stats["timeouts" if fault.kind == "timeout"
+                   else "transport_errors"] += 1
+        if self.breaker(w.name).record_failure(now):
+            self.stats["breaker_opened"] += 1
+        for req in fault.gave_up:
+            self.stats["gave_up"] += 1
+            try:
+                self.route(req, force=True, exclude=(w.name,),
+                           reason="rerouted", now=now)
+                self.stats["rerouted"] += 1
+            except FleetRejected:
+                self.stats["lost"] += 1
 
     def run(self, max_steps: int = 100_000) -> List:
         """Step until every live worker is drained; returns the completions
@@ -258,16 +339,40 @@ class FleetRouter:
         ``requests`` carry virtual ``arrival_ts`` (seconds); each is routed
         when the virtual clock reaches it, with the fleet's queue state *at
         that instant* — so placement reflects load, exactly like the real
-        loop.  ``events`` are ``(t, fn)`` callbacks (e.g. ``lambda:
-        registry.fail("w2")`` to kill a worker mid-run).  Returns the drive
-        summary: served completions, shed requests, and the virtual
+        loop.  ``events`` are ``(t, fn)`` callbacks (e.g. a
+        :meth:`ChaosController.events` schedule, or ``lambda:
+        registry.fail("w2")`` to kill a worker mid-run).  When the router
+        was built with a :class:`RetryPolicy`, a retryably-rejected arrival
+        (queues full, breakers open, fleet momentarily empty) is re-offered
+        after exponential backoff instead of shed outright.  Returns the
+        drive summary: served completions, shed requests, and the virtual
         makespan.
         """
         pending = sorted(requests, key=lambda r: (r.arrival_ts, r.id))
         evs = sorted(events, key=lambda e: e[0])
+        retry_q: List[Tuple[float, int, Request]] = []   # (due, seq, req)
+        attempts: Dict[int, int] = {}
+        seq = itertools.count()
         shed: List[Request] = []
         done: List = []
         now, iters = 0.0, 0
+
+        def offer(req: Request) -> None:
+            try:
+                self.route(req, now=now)
+            except FleetRejected as e:
+                n = attempts.get(req.id, 0)
+                if (self.retry is not None
+                        and e.reason in RETRYABLE_REASONS
+                        and n < self.retry.max_retries):
+                    attempts[req.id] = n + 1
+                    self.stats["placement_retries"] += 1
+                    heapq.heappush(
+                        retry_q,
+                        (now + self.retry.backoff_s(n), next(seq), req))
+                else:
+                    shed.append(req)
+
         while True:
             iters += 1
             if iters > max_iters:
@@ -277,8 +382,9 @@ class FleetRouter:
                 (w.next_event_at(now) for w in self.registry.alive()),
                 default=float("inf"))
             next_arrival = pending[0].arrival_ts if pending else float("inf")
+            next_retry = retry_q[0][0] if retry_q else float("inf")
             next_inject = evs[0][0] if evs else float("inf")
-            t = min(next_service, next_arrival, next_inject)
+            t = min(next_service, next_arrival, next_retry, next_inject)
             if t == float("inf"):
                 break
             now = max(now, t)
@@ -286,13 +392,12 @@ class FleetRouter:
                 evs.pop(0)[1]()
             self._check_faults()
             while pending and pending[0].arrival_ts <= now:
-                req = pending.pop(0)
-                try:
-                    self.route(req)
-                except FleetRejected:
-                    shed.append(req)
+                offer(pending.pop(0))
+            while retry_q and retry_q[0][0] <= now:
+                offer(heapq.heappop(retry_q)[2])
             for w in self.registry.alive():
-                done.extend(w.step(now))
+                done.extend(self._step_worker(w, now))
+        shed.extend(req for _, _, req in sorted(retry_q))
         return {"completions": done, "shed": shed, "makespan_s": now,
                 "served_tokens": sum(c.n_tokens for c in done)}
 
@@ -324,6 +429,18 @@ class FleetRouter:
             requeued=rerouted))
         return newly
 
+    def readmit(self, name: str, *, now: Optional[float] = None) -> Worker:
+        """Re-admit a revived worker: registry-level revive + re-calibrate
+        + re-profile (:meth:`DeviceRegistry.readmit`), then reset its
+        circuit breaker so placement trusts it again immediately."""
+        now = self.clock() if now is None else now
+        worker = self.registry.readmit(name)
+        self.breaker(name).reset()
+        self.stats["readmitted"] += 1
+        self.events.append(ReadmissionEvent(
+            worker=name, at=now, recalibrated=bool(worker.codec_bws)))
+        return worker
+
     # -- reduce / telemetry --------------------------------------------------
 
     def completions(self) -> Dict[str, List]:
@@ -353,6 +470,12 @@ class FleetRouter:
         snap["rejections"] = dict(self.stats["rejections"])
         snap["alive"] = [w.name for w in self.registry.alive()]
         snap["dead"] = self.registry.dead()
+        snap["failovers"] = sum(isinstance(e, FailoverEvent)
+                                for e in self.events)
+        snap["readmissions"] = sum(isinstance(e, ReadmissionEvent)
+                                   for e in self.events)
+        snap["breakers"] = {name: br.snapshot()
+                            for name, br in self.breakers.items()}
         snap["workers"] = {w.name: w.stats_snapshot()
                            for w in self.registry}
         return snap

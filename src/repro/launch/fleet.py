@@ -2,12 +2,17 @@
 
     PYTHONPATH=src python -m repro.launch.fleet \
         [--workers 3] [--requests 24] [--arrival-rate 40] [--tokens 16] \
-        [--kill edge-b] [--objective latency|energy] [--explain 3] [--real]
+        [--kill edge-b] [--chaos "kill:edge-b@1;revive:edge-b@3"] \
+        [--objective latency|energy] [--explain 3] [--real]
 
 Default mode drives virtual-time workers (:class:`repro.fleet.SimWorker`):
 three boards with effective-FLOP/s scaled 1.0 / 0.6 / 0.35 of the Jetson
 Orin Nano profile, each placing through its own compiled policy table.
-``--kill NAME`` fails a worker mid-run to demonstrate drain + re-route.
+``--kill NAME`` fails a worker mid-run to demonstrate drain + re-route;
+``--chaos SPEC`` replays a full :class:`repro.chaos.FaultSchedule`
+(``kill``/``revive``/``bw``/``drift``/``flap``/``stall``/``straggle``/
+``error`` clauses — see :meth:`FaultSchedule.parse`) through the same
+:class:`~repro.chaos.ChaosController` the tests and benchmarks use.
 
 ``--real`` builds two *real* workers (``InferenceSession`` +
 ``ServingRuntime`` sharing identical params), serves a small burst, kills
@@ -33,12 +38,15 @@ def _sim_main(args):
         print(f"measured codec decode throughput: {bws}")
     for i, f in enumerate(factors):
         name = f"edge-{chr(ord('a') + i)}"
-        reg.add(SimWorker(name,
-                          hardware=scaled_hardware(JETSON_ORIN_NANO, f,
-                                                   name=f"jetson-{name}"),
-                          n_slots=args.slots, queue_size=args.queue_size,
-                          objective=args.objective))
-        print(f"registered {name}: eff x{f:g}")
+        w = reg.add(SimWorker(
+            name,
+            hardware=scaled_hardware(JETSON_ORIN_NANO, f,
+                                     name=f"jetson-{name}"),
+            n_slots=args.slots, queue_size=args.queue_size,
+            objective=args.objective,
+            dispatch_timeout_s=(args.timeout or None)))
+        extra = (f", codecs x{f:g}" if w.codec_bws else "")
+        print(f"registered {name}: eff x{f:g}{extra}")
 
     rng = np.random.RandomState(args.seed)
     arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
@@ -47,8 +55,18 @@ def _sim_main(args):
                     n_new=args.tokens, seed=i, arrival_ts=float(arrivals[i]))
             for i in range(args.requests)]
 
-    router = FleetRouter(reg, objective=args.objective)
+    from repro.runtime.fault import RetryPolicy
+    router = FleetRouter(reg, objective=args.objective,
+                         retry=RetryPolicy(max_retries=args.retries),
+                         clock=lambda: 0.0)
     events = []
+    chaos = None
+    if args.chaos:
+        from repro.chaos import ChaosController, FaultSchedule
+        schedule = FaultSchedule.parse(args.chaos)
+        chaos = ChaosController(reg, schedule, router=router)
+        events.extend(chaos.events())
+        print(f"chaos schedule: {len(schedule)} scripted events")
     if args.kill:
         kill_at = float(arrivals[len(arrivals) // 3])
         events.append((kill_at, lambda: reg.fail(args.kill)))
@@ -73,6 +91,19 @@ def _sim_main(args):
     snap = router.stats_snapshot()
     print(f"router: routed {snap['routed']}  rerouted {snap['rerouted']}  "
           f"rejections {snap['rejections']}  dead {snap['dead']}")
+    open_breakers = sorted(n for n, b in snap["breakers"].items()
+                           if b["state"] != "closed")
+    print(f"resilience: retries {snap['retries']}  "
+          f"timeouts {snap['timeouts']}  "
+          f"transport errors {snap['transport_errors']}  "
+          f"placement retries {snap['placement_retries']}  "
+          f"breaker opened {snap['breaker_opened']}x"
+          f" (now open: {open_breakers or 'none'})  "
+          f"failovers {snap['failovers']}  "
+          f"readmissions {snap['readmissions']}  lost {snap['lost']}")
+    if chaos is not None:
+        print(f"chaos log: {len(chaos.log)} applied events, "
+              f"{chaos.pending_faults} never consumed")
     print("FLEET OK")
 
 
@@ -142,6 +173,15 @@ def main():
                     choices=["latency", "energy"])
     ap.add_argument("--kill", default="",
                     help="worker name to fail mid-run (e.g. edge-b)")
+    ap.add_argument("--chaos", default="",
+                    help="fault-schedule spec, e.g. "
+                         "'kill:edge-b@1;revive:edge-b@3;"
+                         "drift:edge-a@0:600->60:4'")
+    ap.add_argument("--retries", type=int, default=3,
+                    help="placement retry budget (exponential backoff)")
+    ap.add_argument("--timeout", type=float, default=0.0,
+                    help="per-dispatch timeout in virtual seconds "
+                         "(0 = none)")
     ap.add_argument("--explain", type=int, default=3,
                     help="print the scored ranking of the first N "
                          "placements")

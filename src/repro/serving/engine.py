@@ -241,6 +241,7 @@ class ServingRuntime:
                  scheduler: Optional[AdaptiveScheduler] = None,
                  fault_hook: Optional[FaultHook] = None,
                  straggler_hook: Optional[StragglerHook] = None,
+                 shed_expired: bool = False,
                  clock: Callable[[], float] = time.monotonic):
         if n_slots <= 0 or chunk <= 0:
             raise ValueError("n_slots and chunk must be >= 1")
@@ -248,15 +249,18 @@ class ServingRuntime:
         self.n_slots = n_slots
         self.chunk = chunk
         self.max_len = max_len
-        self.queue = RequestQueue(queue_size)
+        self.queue = RequestQueue(queue_size, shed_expired=shed_expired)
         self.scheduler = scheduler or AdaptiveScheduler(session)
         self.fault_hook = fault_hook
         self.straggler_hook = straggler_hook
+        self.chaos = None                 # ChaosController.attach target
+        self.chaos_name = "runtime"       # fault-schedule key for this node
         self.clock = clock
         self.pools: Dict[str, SlotPool] = {}
         self.completions: List[Completion] = []
         self.stats = {"steps": 0, "chunks": 0, "admitted": 0,
-                      "requeued": 0, "max_concurrent": 0,
+                      "requeued": 0, "max_concurrent": 0, "retries": 0,
+                      "straggled": 0,
                       "wire_bytes": 0}      # modeled bytes-on-wire admitted
 
     # -- request intake ------------------------------------------------------
@@ -314,6 +318,9 @@ class ServingRuntime:
         snap["completed"] = len(self.completions)
         snap["rejected"] = self.queue.rejected
         snap["rejections"] = dict(self.queue.rejections)
+        snap["expired"] = self.queue.rejections.get("expired", 0)
+        snap["failovers"] = (len(self.fault_hook.events)
+                             if self.fault_hook is not None else 0)
         return snap
 
     # -- fleet support -------------------------------------------------------
@@ -341,9 +348,20 @@ class ServingRuntime:
         for key, pool in self.pools.items():
             if pool.n_active == 0:
                 continue
+            straggle = 1.0
+            if self.chaos is not None:
+                fault = self.chaos.dispatch_fault(self.chaos_name, now)
+                if fault is not None and fault.kind == "error":
+                    # the chunk's exchange failed before any token was
+                    # committed: nothing to roll back, retry next step
+                    self.stats["retries"] += 1
+                    continue
+                if fault is not None and fault.kind == "straggle":
+                    straggle = max(fault.value, 1.0)
+                    self.stats["straggled"] += 1
             wall_ms = pool.decode_chunk(self.chunk)
             self.stats["chunks"] += 1
-            self._observe_stragglers(pool, wall_ms)
+            self._observe_stragglers(pool, wall_ms * straggle)
             fin = self.clock()
             for i, act in enumerate(pool.slots):
                 if act is not None and act.done:

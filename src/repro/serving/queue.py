@@ -82,13 +82,21 @@ class RequestQueue:
     need explicit backpressure, not an unbounded buffer.  ``pop`` hands out
     the earliest-deadline request (arrival order among equals), which is
     what the scheduler admits into free slots.
+
+    ``shed_expired=True`` makes ``pop``/``pop_many`` drop requests whose
+    SLO deadline has already passed (counted under the ``"expired"``
+    rejection reason, kept in ``self.expired``) instead of dispatching
+    work that can no longer meet its deadline — opt-in, because a
+    best-effort deployment may prefer late answers over none.
     """
 
-    def __init__(self, max_size: int = 1024):
+    def __init__(self, max_size: int = 1024, shed_expired: bool = False):
         if max_size <= 0:
             raise ValueError("max_size must be >= 1")
         self.max_size = max_size
+        self.shed_expired = shed_expired
         self._q: Deque[Request] = deque()
+        self.expired: List[Request] = []
         # shed accounting: every refused put, by reason — the router's shed
         # rate must be visible in telemetry, not a silent exception
         self.rejections: Dict[str, int] = {}
@@ -121,8 +129,23 @@ class RequestQueue:
         self._q.clear()
         return out
 
-    def pop(self) -> Request:
-        """Earliest deadline first; FIFO among equal deadlines."""
+    def shed_expired_now(self, now: Optional[float] = None) -> List[Request]:
+        """Drop every queued request whose deadline has passed (counted
+        under the ``"expired"`` reason); returns what was shed."""
+        now = time.monotonic() if now is None else now
+        shed = [r for r in self._q if r.deadline() < now]
+        if shed:
+            self._q = deque(r for r in self._q if r.deadline() >= now)
+            self.expired.extend(shed)
+            for _ in shed:
+                self.reject("expired")
+        return shed
+
+    def pop(self, now: Optional[float] = None) -> Request:
+        """Earliest deadline first; FIFO among equal deadlines.  With
+        ``shed_expired``, deadline-passed requests are dropped first."""
+        if self.shed_expired:
+            self.shed_expired_now(now)
         if not self._q:
             raise IndexError("pop from empty RequestQueue")
         best_i = min(range(len(self._q)),
@@ -133,8 +156,14 @@ class RequestQueue:
         self._q.rotate(best_i)
         return req
 
-    def pop_many(self, n: int) -> List[Request]:
-        return [self.pop() for _ in range(min(n, len(self._q)))]
+    def pop_many(self, n: int, now: Optional[float] = None) -> List[Request]:
+        out: List[Request] = []
+        while self._q and len(out) < n:
+            try:
+                out.append(self.pop(now))
+            except IndexError:      # every remaining request expired
+                break
+        return out
 
     def oldest_wait_ms(self, now: Optional[float] = None) -> float:
         """Milliseconds the longest-waiting request has queued (0 if empty)."""

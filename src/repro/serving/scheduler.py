@@ -84,7 +84,9 @@ class AdaptiveScheduler:
         if (not idle and plan.n_admit < plan.batch
                 and queue.oldest_wait_ms(now) < self.max_wait_ms):
             return None
-        reqs = queue.pop_many(plan.n_admit)
+        reqs = queue.pop_many(plan.n_admit, now=now)
+        if not reqs:                   # everything queued had expired
+            return None
         mb = MicroBatch(requests=reqs, plan=plan,
                         exec_key=plan.decision.exec_key)
         self.history.append(mb)

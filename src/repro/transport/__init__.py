@@ -21,23 +21,25 @@ through the session/policy stack; :func:`exchange_cost` /
 the serving telemetry share.
 """
 from repro.transport.codecs import (CodecSpec, ExchangeCodec,
-                                    calibrate_codec_bws, get_codec,
-                                    list_codecs, measure_decode_bw,
-                                    payload_nbytes, register_codec)
+                                    calibrate_codec_bws, codec_overrides,
+                                    get_codec, list_codecs,
+                                    measure_decode_bw, payload_nbytes,
+                                    register_codec)
 from repro.transport.executor import (codec_prefill_attention,
                                       codec_sim_attention,
                                       codec_sim_prefill_attention,
                                       ring_prefill_attention)
-from repro.transport.links import (LinkCost, TransportLink, exchange_cost,
-                                   exchange_wire_bytes, get_link,
-                                   list_links, plan_wire_bytes,
+from repro.transport.links import (LinkCost, TransportError, TransportLink,
+                                   exchange_cost, exchange_wire_bytes,
+                                   get_link, list_links, plan_wire_bytes,
                                    register_link)
 
 __all__ = [
     "ExchangeCodec", "CodecSpec", "register_codec", "get_codec",
     "list_codecs", "payload_nbytes", "measure_decode_bw",
-    "calibrate_codec_bws",
-    "TransportLink", "LinkCost", "register_link", "get_link", "list_links",
+    "calibrate_codec_bws", "codec_overrides",
+    "TransportLink", "TransportError", "LinkCost", "register_link",
+    "get_link", "list_links",
     "exchange_cost", "exchange_wire_bytes", "plan_wire_bytes",
     "ring_prefill_attention", "codec_prefill_attention",
     "codec_sim_attention", "codec_sim_prefill_attention",

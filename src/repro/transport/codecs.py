@@ -27,6 +27,7 @@ session/policy surface work unchanged.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 from typing import Dict, List, Type
@@ -418,3 +419,38 @@ def calibrate_codec_bws(names=None, *, force: bool = False,
         codec.decode_bw_measured = True
         out[name] = bw
     return out
+
+
+@contextlib.contextmanager
+def codec_overrides(decode_bws: Dict[str, float]):
+    """Temporarily install per-codec ``decode_bw`` values on the registry
+    instances (shadowing whatever is installed now) for the duration of
+    the block, then restore the previous state exactly.
+
+    This is how *per-device* calibration feeds a profiling sweep: the
+    registry scales the host-measured throughputs to one worker's
+    :class:`~repro.profiling.hardware.HardwareProfile` and runs that
+    worker's sweep inside the override, so each worker's policy table
+    prices reconstruction at *its* device speed — without leaking the
+    scaled values into any other worker's sweep.
+    """
+    saved = {}
+    for name, bw in decode_bws.items():
+        codec = get_codec(name)
+        saved[name] = (codec.__dict__.get("decode_bw"),
+                       codec.__dict__.get("decode_bw_measured"))
+        codec.decode_bw = float(bw)
+        codec.decode_bw_measured = True
+    try:
+        yield
+    finally:
+        for name, (bw, measured) in saved.items():
+            codec = get_codec(name)
+            if bw is None:
+                codec.__dict__.pop("decode_bw", None)
+            else:
+                codec.decode_bw = bw
+            if measured is None:
+                codec.__dict__.pop("decode_bw_measured", None)
+            else:
+                codec.decode_bw_measured = measured

@@ -27,6 +27,23 @@ from typing import Dict, List, Optional, Type
 from repro.transport.codecs import CodecSpec, get_codec
 
 
+class TransportError(RuntimeError):
+    """One exchange over a link failed (flap, reset, staged-copy abort).
+
+    Raised/recorded by the fault-injection layer and consumed by the
+    retry machinery: a transport error is *retryable* by construction —
+    the payload never left intact, so re-sending cannot duplicate work.
+    ``worker`` names the endpoint whose dispatch failed; ``stage`` is the
+    link stage that broke (``"staging"`` | ``"wire"`` | ``"decode"``).
+    """
+
+    def __init__(self, msg: str, worker: str = "", stage: str = "wire"):
+        super().__init__(msg)
+        self.worker = worker
+        self.stage = stage
+        self.retryable = True
+
+
 @dataclasses.dataclass(frozen=True)
 class LinkCost:
     """Per-stage cost of moving one dispatch's exchange traffic."""

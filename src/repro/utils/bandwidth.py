@@ -1,14 +1,21 @@
-"""Shared EWMA bandwidth estimator.
+"""Shared EWMA bandwidth estimator + deterministic drift model.
 
 The paper's runtime probes the link and alpha-blends observations into a
 running estimate the policy queries.  The blend used to be duplicated in
 ``AdaptiveDispatcher.observe_bandwidth`` and ``InferenceSession`` (same
 formula, two drifting copies); :class:`BandwidthEstimator` is now the one
 implementation both consume — and the serving scheduler reads it too.
+
+:class:`BandwidthWalk` is the drift side of the same story: a seeded,
+replayable bandwidth-over-time curve (linear ramp + bounded jitter) that
+the chaos layer scripts into fault schedules — WiFi links drift, and the
+scenario suite must drift them *identically* on every run.
 """
 from __future__ import annotations
 
 import dataclasses
+
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -53,3 +60,42 @@ class BandwidthEstimator:
     @property
     def observations(self) -> int:
         return self._n
+
+
+@dataclasses.dataclass
+class BandwidthWalk:
+    """Seeded bandwidth-over-time curve for drift injection.
+
+    ``at(u)`` (``u`` ∈ [0, 1], fraction of the drift window) returns the
+    linear ramp from ``from_mbps`` to ``to_mbps`` perturbed by a bounded,
+    seed-deterministic jitter — the same seed always produces the same
+    curve, which is what makes a chaos schedule replayable.
+    """
+
+    from_mbps: float
+    to_mbps: float
+    seed: int = 0
+    jitter: float = 0.1            # max relative perturbation
+    resolution: int = 64           # jitter sample points over [0, 1]
+
+    def __post_init__(self):
+        if self.from_mbps <= 0 or self.to_mbps <= 0:
+            raise ValueError("bandwidth endpoints must be > 0")
+        if not 0.0 <= self.jitter < 1.0:
+            raise ValueError(f"jitter must be in [0, 1), got {self.jitter}")
+        rng = np.random.RandomState(self.seed)
+        self._noise = rng.uniform(-1.0, 1.0, max(self.resolution, 2))
+
+    def at(self, u: float) -> float:
+        """Bandwidth (Mbps) at fraction ``u`` of the drift window."""
+        u = min(max(float(u), 0.0), 1.0)
+        base = self.from_mbps + (self.to_mbps - self.from_mbps) * u
+        x = u * (len(self._noise) - 1)
+        i = int(x)
+        j = min(i + 1, len(self._noise) - 1)
+        noise = self._noise[i] + (self._noise[j] - self._noise[i]) * (x - i)
+        return max(base * (1.0 + self.jitter * noise), 1e-3)
+
+    def sample(self, n: int):
+        """``n`` evenly-spaced values over the window (drift events)."""
+        return [self.at((i + 1) / n) for i in range(n)]
