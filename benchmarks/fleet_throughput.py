@@ -24,7 +24,13 @@ worker mid-run (``--kill``) to exercise drain + re-route, and writes
 --min-speedup 1.3`` — routed serving must beat the best single worker by
 ≥1.3x aggregate tok/s at equal load.
 
-    PYTHONPATH=src python benchmarks/fleet_throughput.py [--smoke] [--kill]
+``--rpc`` swaps the virtual fleet for two real subprocess workers
+(``repro.rpc``) under a short real-clock Poisson load, gated on zero
+lost/shed requests, and writes ``BENCH_fleet_rpc.json`` with per-worker
+``measured: true`` codec-bandwidth provenance (CI runs this too).
+
+    PYTHONPATH=src python benchmarks/fleet_throughput.py \
+        [--smoke] [--kill] [--rpc]
 """
 from __future__ import annotations
 
@@ -133,6 +139,13 @@ def run(smoke: bool = True, kill: bool = False,
         "fleet_factors": FLEET_FACTORS,
         "kernel_backend": backend_info(),
         "codec_decode_bw_measured": reg.codec_bws,
+        # per-worker calibration provenance: sim workers carry eff_inf-
+        # scaled host estimates (measured: false); process-backed workers
+        # (--rpc) measure on their own process (measured: true)
+        "codec_bw_provenance": {
+            w.name: {"bws": dict(w.codec_bws),
+                     "measured": bool(w.codec_bws_measured)}
+            for w in reg},
         "fleet": fleet,
         "single": singles, "best_single": best_name,
         "speedup_tok_s": speedup,
@@ -161,6 +174,88 @@ def run(smoke: bool = True, kill: bool = False,
     return results
 
 
+def run_rpc(smoke: bool = True, out_path: str = "BENCH_fleet_rpc.json"):
+    """Process-boundary smoke: two subprocess workers (``repro.rpc``)
+    under a short real-clock Poisson load.  Gated on ZERO lost or shed
+    requests — the wire, placement, and exactly-once machinery must not
+    drop anything even at this scale.  Records per-worker measured codec
+    bandwidth provenance (``measured: true`` — calibrated on the worker's
+    own process, not eff_inf-scaled)."""
+    import sys
+
+    from repro.fleet import DeviceRegistry, FleetRouter
+    from repro.kernels import backend_info
+    from repro.rpc import RpcWorker
+    from repro.runtime.fault import RetryPolicy
+    from repro.transport.codecs import get_codec
+
+    n_req = 10 if smoke else 24
+    n_new = 8
+    rng = np.random.RandomState(7)
+    trace = make_trace(rng, n_req, 4.0, 6, n_new)
+
+    reg = DeviceRegistry(heartbeat_timeout_s=30.0)
+    kw = dict(vocab=64, seed=0, n_slots=2, chunk=4, max_len=32,
+              retry=RetryPolicy(max_retries=3, backoff_base_s=0.02))
+    workers = [RpcWorker("rpc-a", **kw), RpcWorker("rpc-b", **kw)]
+    try:
+        for w in workers:
+            reg.add(w)
+        router = FleetRouter(reg, retry=RetryPolicy(max_retries=3))
+        out = router.drive_real(make_requests(trace, n_new),
+                                timeout_s=300.0)
+        lats = [c.latency_ms for c in out["completions"]]
+        snap = router.stats_snapshot()
+        provenance = {
+            w.name: {"bws": dict(w.codec_bws),
+                     "measured": bool(w.codec_bws_measured),
+                     "pid": w.proc.pid if w.proc else None}
+            for w in workers}
+        results = {
+            "smoke": smoke, "rpc": True, "n_requests": n_req,
+            "n_new": n_new, "arrival_rate_hz": 4.0,
+            "kernel_backend": backend_info(),
+            "codec_bw_provenance": provenance,
+            "served": len(out["completions"]), "shed": len(out["shed"]),
+            "lost": snap["lost"], "served_tokens": out["served_tokens"],
+            "makespan_s": out["makespan_s"],
+            "tok_s": out["served_tokens"] / max(out["makespan_s"], 1e-9),
+            "p50_ms": float(np.percentile(lats, 50)) if lats else 0.0,
+            "p99_ms": float(np.percentile(lats, 99)) if lats else 0.0,
+            "frames": {w.name: {"in": w.stats["frames_in"],
+                                "out": w.stats["frames_out"],
+                                "bytes_in": w.stats["bytes_in"],
+                                "bytes_out": w.stats["bytes_out"]}
+                       for w in workers},
+        }
+        for w in workers:
+            for name in sorted(w.codec_bws):
+                modeled = type(get_codec(name)).decode_bw
+                print(f"{w.name}  {name:14s} measured "
+                      f"{w.codec_bws[name] / 1e6:9.1f} MB/s   modeled "
+                      f"{modeled / 1e6:9.1f} MB/s")
+        print(f"rpc fleet   {results['tok_s']:8.1f} tok/s  "
+              f"p50 {results['p50_ms']:7.0f} ms  "
+              f"p99 {results['p99_ms']:7.0f} ms  "
+              f"({results['served']}/{n_req} served, "
+              f"{results['shed']} shed, {results['lost']} lost)")
+    finally:
+        for w in workers:
+            w.close()
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {out_path}")
+    ok = (results["served"] == n_req and results["shed"] == 0
+          and results["lost"] == 0
+          and all(p["measured"] for p in provenance.values()))
+    if not ok:
+        print("FAIL: rpc fleet lost or shed requests, or calibration "
+              "was not measured")
+        sys.exit(1)
+    print("RPC FLEET OK")
+    return results
+
+
 def main():
     import sys
     ap = argparse.ArgumentParser()
@@ -168,12 +263,20 @@ def main():
                     help="small trace (CI)")
     ap.add_argument("--kill", action="store_true",
                     help="also kill a worker mid-run (failover stats)")
-    ap.add_argument("--out", default="BENCH_fleet.json")
+    ap.add_argument("--rpc", action="store_true",
+                    help="2 subprocess workers over real sockets instead "
+                         "of the virtual-time fleet (gates on zero lost)")
+    ap.add_argument("--out", default="")
     ap.add_argument("--min-speedup", type=float, default=0.0,
                     help="fail (exit 1) if fleet tok/s over the best "
                          "single worker is below this")
     args = ap.parse_args()
-    results = run(smoke=args.smoke, kill=args.kill, out_path=args.out)
+    if args.rpc:
+        run_rpc(smoke=args.smoke,
+                out_path=args.out or "BENCH_fleet_rpc.json")
+        return
+    results = run(smoke=args.smoke, kill=args.kill,
+                  out_path=args.out or "BENCH_fleet.json")
     if results["speedup_tok_s"] < args.min_speedup:
         print(f"FAIL: fleet speedup {results['speedup_tok_s']:.2f}x "
               f"below {args.min_speedup}x")

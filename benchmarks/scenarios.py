@@ -20,11 +20,14 @@ the whole suite is wall-clock-free and deterministic):
     at pop time, every loose request still completes, and the
     served/shed/expired accounting is exact.
 
-Every scenario runs TWICE and must produce an identical fingerprint
-(chaos event log + completion sequence + makespan): same seed, same run.
+Every virtual-time scenario runs TWICE and must produce an identical
+fingerprint (chaos event log + completion sequence + makespan): same seed,
+same run.  ``--rpc`` adds a fifth, wall-clock scenario — ``rpc_kill`` —
+which SIGKILLs a real subprocess worker (``repro.rpc``) mid-decode and
+gates on exact-once, token-exact re-serving instead of replay determinism.
 Writes ``BENCH_scenarios.json``; exits 1 if any gate fails.
 
-    PYTHONPATH=src python benchmarks/scenarios.py [--smoke]
+    PYTHONPATH=src python benchmarks/scenarios.py [--smoke] [--rpc]
 """
 from __future__ import annotations
 
@@ -297,6 +300,83 @@ def scenario_mixed_slo(smoke: bool):
     return result, fingerprint
 
 
+def scenario_rpc_kill(smoke: bool):
+    """Process-boundary variant of kill_revive: two subprocess workers
+    (``repro.rpc``), a real ``SIGKILL`` mid-decode, breaker + drain +
+    EDF re-route over actual sockets, then readmission respawning the
+    process.  Wall-clock, so it is opt-in (``--rpc``) and exempt from the
+    deterministic-replay fingerprint — the gates are exactness gates:
+    every request served exactly once, token-exact against a local
+    reference session with identical parameters."""
+    from repro.chaos import ChaosController, FaultSchedule
+    from repro.fleet import DeviceRegistry, FleetRouter
+    from repro.rpc import RpcWorker
+    from repro.rpc.worker import build_session
+    from repro.runtime.fault import RetryPolicy
+
+    n_req = 8 if smoke else 16
+    n_new = 8
+    rng = np.random.RandomState(505)
+    trace = make_trace(rng, n_req, rate_hz=4.0, prompt_len=6)
+
+    reg = DeviceRegistry(heartbeat_timeout_s=30.0)
+    kw = dict(vocab=64, seed=0, n_slots=2, chunk=4, max_len=32,
+              retry=RetryPolicy(max_retries=3, backoff_base_s=0.02))
+    w1 = RpcWorker("rpc-a", **kw)
+    w2 = RpcWorker("rpc-b", **kw)
+    reg.add(w1)
+    reg.add(w2)
+    router = FleetRouter(reg, retry=RetryPolicy(max_retries=3))
+    victim_pid = w2.proc.pid
+
+    t_kill = trace[n_req // 4][0]
+    t_revive = trace[-1][0] + 2.0
+    sched = FaultSchedule([FaultSchedule.kill("rpc-b", t_kill),
+                           FaultSchedule.revive("rpc-b", t_revive)])
+    chaos = ChaosController(reg, sched, router=router)
+    reqs, idmap = make_requests(trace, n_new, slo_ms=600_000.0)
+    try:
+        out = router.drive_real(reqs, events=chaos.events(),
+                                timeout_s=300.0)
+        s = summarize(out, idmap)
+        snap = router.stats_snapshot()
+
+        # token-exactness oracle: same (arch, vocab, seed) session
+        ref, _, _ = build_session("llama3.2-1b", vocab=64, seed=0)
+        by_id = {c.request_id: c for c in out["completions"]}
+        req_by_id = {r.id: r for r in reqs}
+        exact = all(
+            np.array_equal(
+                np.asarray(by_id[rid].tokens),
+                np.asarray(ref.generate(
+                    np.asarray(req_by_id[rid].prompt)[None],
+                    req_by_id[rid].n_new,
+                    seed=req_by_id[rid].seed)[0]))
+            for rid in by_id)
+        respawned = (w2.proc.pid != victim_pid
+                     and w2.proc.poll() is None and w2.healthy)
+        gates = {
+            "zero_lost": snap["lost"] == 0,
+            "all_served_exactly_once": (
+                exactly_once(s, idmap) and s["served"] == n_req),
+            "token_exact": exact,
+            "process_killed_for_real": any(
+                row[1] == "kill" for row in chaos.log),
+            "breaker_or_failover_ran": (snap["breaker_opened"] >= 1
+                                        or snap["failovers"] >= 1),
+            "process_respawned": respawned,
+        }
+        result = {**s, "gates": gates, "t_kill": t_kill,
+                  "t_revive": t_revive, "rerouted": snap["rerouted"],
+                  "killed_pid": victim_pid, "respawned_pid": w2.proc.pid,
+                  "wall_clock": True}
+    finally:
+        w1.close()
+        w2.close()
+    # no fingerprint: real sockets and a real scheduler are not replayable
+    return result, None
+
+
 def _plan_mix(completions):
     mix = {}
     for c in completions:
@@ -313,18 +393,22 @@ SCENARIOS = {
 
 
 def run(smoke: bool = True, out_path: str = "BENCH_scenarios.json",
-        only=None):
+        only=None, rpc: bool = False):
     from repro.kernels import backend_info
     results = {"smoke": smoke, "kernel_backend": backend_info(),
                "scenarios": {}}
     failed = []
-    for name, fn in SCENARIOS.items():
+    scenarios = dict(SCENARIOS)
+    if rpc:
+        scenarios["rpc_kill"] = scenario_rpc_kill
+    for name, fn in scenarios.items():
         if only and name not in only:
             continue
         res1, fp1 = fn(smoke)
-        _, fp2 = fn(smoke)           # replay: same seed → same event log
-        res1["deterministic"] = fp1 == fp2
-        res1["gates"]["deterministic_replay"] = res1["deterministic"]
+        if fp1 is not None:          # replay: same seed → same event log
+            _, fp2 = fn(smoke)
+            res1["deterministic"] = fp1 == fp2
+            res1["gates"]["deterministic_replay"] = res1["deterministic"]
         results["scenarios"][name] = res1
         bad = sorted(g for g, ok in res1["gates"].items() if not ok)
         status = "OK" if not bad else f"FAIL {bad}"
@@ -351,11 +435,15 @@ def run(smoke: bool = True, out_path: str = "BENCH_scenarios.json",
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="small traces (CI)")
-    ap.add_argument("--only", nargs="*", choices=sorted(SCENARIOS),
+    ap.add_argument("--only", nargs="*",
+                    choices=sorted(SCENARIOS) + ["rpc_kill"],
                     help="run a subset of scenarios")
+    ap.add_argument("--rpc", action="store_true",
+                    help="also run the process-boundary kill scenario "
+                         "(2 subprocess workers, real SIGKILL; wall-clock)")
     ap.add_argument("--out", default="BENCH_scenarios.json")
     args = ap.parse_args()
-    run(smoke=args.smoke, out_path=args.out, only=args.only)
+    run(smoke=args.smoke, out_path=args.out, only=args.only, rpc=args.rpc)
 
 
 if __name__ == "__main__":

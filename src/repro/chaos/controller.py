@@ -75,6 +75,17 @@ class ChaosController:
 
     def apply(self, ev: ChaosEvent) -> None:
         if ev.kind == "kill":
+            # process-backed workers die for real: SIGKILL the subprocess
+            # first so the wire goes down exactly like an actual crash,
+            # then mark the membership change
+            w = self.registry.workers.get(ev.target)
+            killer = getattr(w, "kill_process", None)
+            if killer is not None:
+                killer()
+                # the router stops stepping a dead member, so the client
+                # would never discover the corpse on its own — record what
+                # this controller just did, and readmission knows to respawn
+                w.healthy = False
             if self.registry.is_alive(ev.target):
                 self.registry.fail(ev.target)
             self._log(ev.t, "kill", ev.target, 0.0)

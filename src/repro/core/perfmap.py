@@ -118,8 +118,10 @@ class PerfMap:
 
     # --- persistence ------------------------------------------------------
 
-    def save(self, path: str) -> None:
-        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    def to_doc(self) -> Dict:
+        """The JSON-able document form — shared by ``save`` and the RPC
+        ``Profile`` reply (``repro.rpc``), so a map measured in a worker
+        process round-trips byte-identically to one read from disk."""
         doc = {"schema_version": SCHEMA_VERSION,
                "entries": {k: e.to_dict() for k, e in self._d.items()}}
         hw = {}
@@ -129,27 +131,22 @@ class PerfMap:
             hw["link"] = self.link.to_dict()
         if hw:
             doc["hardware"] = hw
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(doc, f, indent=1)
-        os.replace(tmp, path)      # atomic
+        return doc
 
     @staticmethod
-    def load(path: str) -> "PerfMap":
+    def from_doc(data: Dict, *, source: str = "<doc>") -> "PerfMap":
         pm = PerfMap()
-        with open(path) as f:
-            data = json.load(f)
         if "schema_version" in data:
             ver = data["schema_version"]
             if ver not in _READABLE_VERSIONS:
                 raise ValueError(
-                    f"{path}: performance-map schema version {ver!r} is not "
-                    f"supported (this build reads versions "
+                    f"{source}: performance-map schema version {ver!r} is "
+                    f"not supported (this build reads versions "
                     f"{list(_READABLE_VERSIONS)}); re-run the profiling "
                     "sweep to regenerate it")
             entries = data["entries"]
             if data.get("hardware") is not None:
-                pm._load_hardware(data["hardware"], path)
+                pm._load_hardware(data["hardware"], source)
         else:                      # pre-versioning flat map (v0 seed format)
             entries = data
         for k, d in entries.items():
@@ -157,6 +154,19 @@ class PerfMap:
             pm._d[k] = PerfEntry.from_dict(d)
             pm._keys[k] = key
         return pm
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.to_doc(), f, indent=1)
+        os.replace(tmp, path)      # atomic
+
+    @staticmethod
+    def load(path: str) -> "PerfMap":
+        with open(path) as f:
+            data = json.load(f)
+        return PerfMap.from_doc(data, source=path)
 
     def _load_hardware(self, block, path: str) -> None:
         from repro.profiling.hardware import HardwareProfile, LinkProfile

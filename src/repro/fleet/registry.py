@@ -66,6 +66,13 @@ class Worker:
     queue: RequestQueue
     n_slots: int
     codec_bws: Dict[str, float] = {}       # per-device codec calibration
+    # provenance: True when codec_bws was measured on the worker's own
+    # process (RpcWorker Calibrate); False for eff_inf-scaled host estimates
+    codec_bws_measured: bool = False
+    # wire-health flag: in-process workers are always healthy; an RpcWorker
+    # flips this when its socket/process is gone so the router stops
+    # beating it and the heartbeat-death drain path takes over
+    healthy: bool = True
 
     # -- placement inputs ----------------------------------------------------
 
@@ -538,22 +545,38 @@ class DeviceRegistry:
             raise ValueError(f"worker {worker.name!r} already registered")
         self.workers[worker.name] = worker
         self.monitor.beat(worker.name)       # starts the liveness deadline
-        if self.codec_bws:
+        if self.codec_bws or hasattr(worker, "measure_codec_bws"):
             self.calibrate_worker(worker)
         return worker
 
     def device_codec_bws(self, worker: Worker) -> Dict[str, float]:
         """Host-measured codec decode throughputs scaled to this worker's
-        compute (``eff_inf`` ratio) — the per-device calibration estimate
-        until an on-device backend can measure for real."""
+        compute (``eff_inf`` ratio) — the per-device calibration *estimate*,
+        used only for workers that cannot measure on their own process."""
         scale = worker.hardware.eff_inf / max(self.host_hardware.eff_inf,
                                               1e-9)
         return {name: bw * scale for name, bw in self.codec_bws.items()}
 
+    def _codec_bws_for(self, worker: Worker):
+        """(bws, measured) for this worker: measured on the worker's own
+        process when it can (``measure_codec_bws`` — the RPC boundary), the
+        eff_inf-scaled host estimate otherwise."""
+        measure = getattr(worker, "measure_codec_bws", None)
+        if measure is not None:
+            try:
+                bws = measure()
+            except Exception:          # wire hiccup: fall back to estimate
+                bws = None
+            if bws:
+                return dict(bws), True
+        return self.device_codec_bws(worker), False
+
     def calibrate_worker(self, worker: Worker) -> Dict[str, float]:
         """Install the per-device codec calibration and re-profile the
-        worker under it (no-op dict if the host never calibrated)."""
-        bws = self.device_codec_bws(worker)
+        worker under it (no-op dict if neither the worker nor the host can
+        supply numbers).  Records ``codec_bws_measured`` provenance."""
+        bws, measured = self._codec_bws_for(worker)
+        worker.codec_bws_measured = measured
         if bws:
             worker.reprofile(codec_bws=bws)
         return bws
@@ -604,9 +627,16 @@ class DeviceRegistry:
         :meth:`~repro.fleet.router.FleetRouter.readmit` also resets the
         worker's circuit breaker)."""
         worker = self.get(name)
+        # a process-backed worker whose process died must come back up
+        # before it can recalibrate/reprofile (RpcWorker.respawn)
+        respawn = getattr(worker, "respawn", None)
+        if respawn is not None and not getattr(worker, "healthy", True):
+            respawn()
         self.revive(name)
-        if recalibrate and self.codec_bws:
-            worker.codec_bws = self.device_codec_bws(worker)
+        if recalibrate and (self.codec_bws
+                            or hasattr(worker, "measure_codec_bws")):
+            worker.codec_bws, worker.codec_bws_measured = \
+                self._codec_bws_for(worker)
         if reprofile:
             worker.reprofile(codec_bws=worker.codec_bws or None)
         return worker

@@ -289,7 +289,14 @@ class FleetRouter:
         done: List = []
         for w in self.registry.alive():
             done.extend(self._step_worker(w, now))
-            self.registry.beat(w.name)
+            # beat on the worker's word: an in-process worker is healthy by
+            # construction; an RpcWorker flips `healthy` off when its
+            # socket/process is gone, and an explicit fail() routes it into
+            # the heartbeat-death drain path the next _check_faults
+            if getattr(w, "healthy", True):
+                self.registry.beat(w.name)
+            else:
+                self.registry.fail(w.name)
         return done
 
     def _step_worker(self, w: Worker, now: float) -> List:
@@ -324,7 +331,14 @@ class FleetRouter:
         produced (fleet-wide, arbitrary worker interleaving)."""
         done: List = []
         steps = 0
-        while any(w.queue or not w.idle for w in self.registry.alive()):
+        while True:
+            # drain newly-dead workers *before* the exit check: a fleet
+            # whose only survivors are idle must still re-route a dead
+            # worker's orphans rather than exit and lose them
+            self._check_faults()
+            if not any(w.queue or not w.idle
+                       for w in self.registry.alive()):
+                break
             done.extend(self.step())
             steps += 1
             if steps >= max_steps:
@@ -400,6 +414,73 @@ class FleetRouter:
         shed.extend(req for _, _, req in sorted(retry_q))
         return {"completions": done, "shed": shed, "makespan_s": now,
                 "served_tokens": sum(c.n_tokens for c in done)}
+
+    def drive_real(self, requests: Sequence[Request], *,
+                   events: Sequence[Tuple[float, Callable]] = (),
+                   timeout_s: float = 600.0, poll_s: float = 0.002) -> Dict:
+        """Real-clock analog of :meth:`drive_virtual` for process-backed
+        fleets (``RpcWorker``/``WorkerHandle``).
+
+        ``requests`` carry *relative* ``arrival_ts`` offsets (seconds from
+        drive start); each is rebased to the wall clock and routed when its
+        offset elapses.  ``events`` are ``(offset_s, fn)`` callbacks — a
+        :meth:`ChaosController.events` schedule realizes kills as actual
+        ``SIGKILL`` and errors as actual socket sabotage here.  Rejected
+        retryable arrivals re-offer after the router's ``RetryPolicy``
+        backoff.  Returns the same summary shape as ``drive_virtual``
+        (``served_tokens`` counts real token payloads).
+        """
+        t0 = self.clock()
+        pending = sorted(requests, key=lambda r: (r.arrival_ts, r.id))
+        evs = sorted(events, key=lambda e: e[0])
+        retry_q: List[Tuple[float, int, Request]] = []   # (due, seq, req)
+        attempts: Dict[int, int] = {}
+        seq = itertools.count()
+        shed: List[Request] = []
+        done: List = []
+
+        def offer(req: Request, now: float) -> None:
+            try:
+                self.route(req)
+            except FleetRejected as e:
+                n = attempts.get(req.id, 0)
+                if (self.retry is not None
+                        and e.reason in RETRYABLE_REASONS
+                        and n < self.retry.max_retries):
+                    attempts[req.id] = n + 1
+                    self.stats["placement_retries"] += 1
+                    heapq.heappush(
+                        retry_q,
+                        (now + self.retry.backoff_s(n), next(seq), req))
+                else:
+                    shed.append(req)
+
+        while True:
+            now = self.clock() - t0
+            if now > timeout_s:
+                raise RuntimeError(f"drive_real exceeded {timeout_s}s with "
+                                   f"{len(pending)} arrivals pending")
+            while evs and evs[0][0] <= now:
+                evs.pop(0)[1]()
+            while pending and pending[0].arrival_ts <= now:
+                req = pending.pop(0)
+                req.arrival_ts = self.clock()    # rebase to the wall clock
+                offer(req, now)
+            while retry_q and retry_q[0][0] <= now:
+                offer(heapq.heappop(retry_q)[2], now)
+            self._check_faults()
+            done.extend(self.step())
+            busy = any(w.queue or not w.idle
+                       for w in self.registry.alive())
+            if not pending and not evs and not retry_q and not busy \
+                    and not self.registry.monitor.dead_nodes():
+                break
+            if not busy:
+                time.sleep(poll_s)
+        shed.extend(req for _, _, req in sorted(retry_q))
+        return {"completions": done, "shed": shed,
+                "makespan_s": self.clock() - t0,
+                "served_tokens": sum(len(c.tokens) for c in done)}
 
     # -- failure semantics ---------------------------------------------------
 

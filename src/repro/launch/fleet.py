@@ -18,6 +18,13 @@ Orin Nano profile, each placing through its own compiled policy table.
 ``ServingRuntime`` sharing identical params), serves a small burst, kills
 one mid-decode, and verifies the re-routed requests are token-exact
 against ``session.generate`` — the fleet-level failover acceptance check.
+
+``--rpc N`` spawns N *subprocess* workers (:mod:`repro.rpc`) and drives
+them over real sockets: it prints each worker's measured-vs-modeled codec
+decode-throughput table (calibration runs on the worker's own process),
+``--chaos`` faults are realized on the wire (kill = SIGKILL, error =
+truncated frame + hard close), and the fleet shuts down cleanly on
+SIGINT.
 """
 import argparse
 
@@ -158,6 +165,116 @@ def _real_main(args):
     print("FLEET OK (real workers, token-exact failover)")
 
 
+def _rpc_main(args):
+    """--rpc N: spawn N real subprocess workers (``repro.rpc``), print the
+    measured-vs-modeled codec decode-throughput table, drive a short
+    real-clock Poisson load (``--chaos`` faults are realized on the wire:
+    kills are SIGKILLs, errors are sabotaged sockets), and shut the fleet
+    down cleanly — including on Ctrl-C."""
+    import signal
+
+    import numpy as np
+
+    from repro.fleet import DeviceRegistry, FleetRouter
+    from repro.rpc import RpcWorker
+    from repro.runtime.fault import RetryPolicy
+    from repro.serving.queue import Request
+    from repro.transport.codecs import get_codec
+
+    n = max(args.rpc, 1)
+    reg = DeviceRegistry(heartbeat_timeout_s=60.0)
+    workers = []
+    interrupted = []
+
+    def on_sigint(signum, frame):
+        # first Ctrl-C: finish the loop and shut down cleanly; the drive
+        # checks the flag through the chaos-free event path below
+        interrupted.append(True)
+        print("\nSIGINT: draining and shutting the fleet down...")
+
+    old_handler = signal.signal(signal.SIGINT, on_sigint)
+    try:
+        for i in range(n):
+            name = f"rpc-{chr(ord('a') + i)}"
+            w = RpcWorker(name, vocab=64, seed=args.seed, n_slots=args.slots,
+                          chunk=4, max_len=max(args.prompt_len + args.tokens,
+                                               32),
+                          queue_size=args.queue_size,
+                          hw_scale=[1.0, 0.8, 0.6, 0.5, 0.4][i % 5],
+                          arch=args.arch,
+                          retry=RetryPolicy(max_retries=args.retries,
+                                            backoff_base_s=0.05))
+            workers.append(w)
+            reg.add(w)
+            print(f"spawned {name}: pid {w.proc.pid}, "
+                  f"port {w.address[1]}, calibration "
+                  f"{'measured' if w.codec_bws_measured else 'estimated'}")
+        print(f"{'worker':8s} {'codec':14s} {'measured MB/s':>14s} "
+              f"{'modeled MB/s':>13s}")
+        for w in workers:
+            for cname in sorted(w.codec_bws):
+                modeled = type(get_codec(cname)).decode_bw
+                print(f"{w.name:8s} {cname:14s} "
+                      f"{w.codec_bws[cname] / 1e6:14.1f} "
+                      f"{modeled / 1e6:13.1f}")
+
+        router = FleetRouter(reg, objective=args.objective,
+                             retry=RetryPolicy(max_retries=args.retries))
+        rng = np.random.RandomState(args.seed)
+        n_req = min(args.requests, 24)
+        arrivals = np.cumsum(rng.exponential(1.0 / min(args.arrival_rate,
+                                                       8.0), n_req))
+        reqs = [Request(prompt=rng.randint(0, 64, args.prompt_len),
+                        n_new=args.tokens, seed=i,
+                        arrival_ts=float(arrivals[i]))
+                for i in range(n_req)]
+        events = []
+        chaos = None
+        if args.chaos:
+            from repro.chaos import ChaosController, FaultSchedule
+            schedule = FaultSchedule.parse(args.chaos)
+            chaos = ChaosController(reg, schedule, router=router)
+            events.extend(chaos.events())
+            print(f"chaos schedule: {len(schedule)} scripted events "
+                  "(realized on the wire: kill=SIGKILL, "
+                  "error=truncated frame)")
+        if interrupted:
+            return
+        out = router.drive_real(reqs, events=events, timeout_s=600.0)
+        comps = out["completions"]
+        lats = [c.latency_ms for c in comps]
+        by_worker = {}
+        for c in comps:
+            by_worker[c.worker] = by_worker.get(c.worker, 0) + 1
+        tok_s = out["served_tokens"] / max(out["makespan_s"], 1e-9)
+        print(f"served {len(comps)}/{n_req} requests "
+              f"({out['served_tokens']} tokens) in "
+              f"{out['makespan_s']:.2f}s -> {tok_s:.1f} tok/s aggregate")
+        if lats:
+            print(f"latency p50 {np.percentile(lats, 50):.0f} ms  "
+                  f"p99 {np.percentile(lats, 99):.0f} ms  "
+                  f"by worker {by_worker}  shed {len(out['shed'])}")
+        snap = router.stats_snapshot()
+        print(f"router: routed {snap['routed']}  "
+              f"rerouted {snap['rerouted']}  lost {snap['lost']}  "
+              f"breaker opened {snap['breaker_opened']}x")
+        if chaos is not None:
+            print(f"chaos log: {len(chaos.log)} applied events, "
+                  f"{chaos.pending_faults} never consumed")
+        print("RPC FLEET OK")
+    finally:
+        signal.signal(signal.SIGINT, old_handler)
+        for w in workers:
+            try:
+                w.close()
+            except Exception:
+                w.kill_process()
+        live = [w.name for w in workers
+                if w.proc is not None and w.proc.poll() is None]
+        print(f"shutdown: {len(workers)} workers closed"
+              + (f" (still alive: {live})" if live else ""))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workers", type=int, default=3,
@@ -187,10 +304,16 @@ def main():
                          "placements")
     ap.add_argument("--real", action="store_true",
                     help="two real workers + token-exact failover demo")
+    ap.add_argument("--rpc", type=int, default=0, metavar="N",
+                    help="spawn N subprocess workers (repro.rpc) and "
+                         "drive them over real sockets; --chaos faults "
+                         "are realized on the wire")
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    if args.real:
+    if args.rpc:
+        _rpc_main(args)
+    elif args.real:
         _real_main(args)
     else:
         _sim_main(args)

@@ -80,6 +80,7 @@ class Completion:
     extrapolated: bool = False         # scheduled off the profiled grid
     codec: str = ""                    # exchange codec of the serving plan
     wire_bytes: int = 0                # modeled bytes-on-wire, this request
+    worker: str = ""                   # serving worker, when fleet-routed
 
     @property
     def latency_ms(self) -> float:
@@ -255,6 +256,10 @@ class ServingRuntime:
         self.straggler_hook = straggler_hook
         self.chaos = None                 # ChaosController.attach target
         self.chaos_name = "runtime"       # fault-schedule key for this node
+        # optional streaming hook: called after every decode chunk with
+        # (request_id, tokens-so-far) per active request — the RPC worker
+        # turns this into TokenChunk frames (repro.rpc.worker)
+        self.on_progress: Optional[Callable[[int, List[int]], None]] = None
         self.clock = clock
         self.pools: Dict[str, SlotPool] = {}
         self.completions: List[Completion] = []
@@ -362,6 +367,10 @@ class ServingRuntime:
             wall_ms = pool.decode_chunk(self.chunk)
             self.stats["chunks"] += 1
             self._observe_stragglers(pool, wall_ms * straggle)
+            if self.on_progress is not None:
+                for act in pool.slots:
+                    if act is not None:
+                        self.on_progress(act.request.id, act.tokens)
             fin = self.clock()
             for i, act in enumerate(pool.slots):
                 if act is not None and act.done:

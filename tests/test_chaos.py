@@ -580,3 +580,31 @@ def test_serving_runtime_consumes_dispatch_faults():
     for key in ("expired", "failovers"):
         assert key in snap, key
     assert chaos.pending_faults == 0
+
+
+def test_chaos_kill_reaches_a_real_process_boundary():
+    """A ``kill`` event on a process-backed worker must SIGKILL the
+    subprocess (not just flip registry membership): the controller calls
+    ``kill_process`` when the worker exposes one and marks the worker
+    unhealthy so ``readmit`` knows to respawn it."""
+    reg = DeviceRegistry(heartbeat_timeout_s=1e9)
+    w = reg.add(_sim_worker("proc", factor=1.0))
+    killed = []
+    w.kill_process = lambda: killed.append(True)
+    chaos = ChaosController(reg, FaultSchedule())
+    chaos.apply(ChaosEvent(0.5, "kill", "proc"))
+    assert killed == [True]                 # the process died for real
+    assert w.healthy is False               # recorded for readmission
+    assert not reg.is_alive("proc")
+    assert ["kill", "proc"] in [[r[1], r[2]] for r in chaos.log]
+
+
+def test_chaos_kill_on_sim_worker_is_membership_only():
+    """SimWorkers have no subprocess — kill stays a membership change and
+    leaves ``healthy`` alone (the model does not pretend a process died)."""
+    reg = DeviceRegistry(heartbeat_timeout_s=1e9)
+    w = reg.add(_sim_worker("sim", factor=1.0))
+    chaos = ChaosController(reg, FaultSchedule())
+    chaos.apply(ChaosEvent(0.5, "kill", "sim"))
+    assert w.healthy is True
+    assert not reg.is_alive("sim")

@@ -332,3 +332,57 @@ def test_failover_midstream_token_exact(sessions):
     snap = router.stats_snapshot()
     assert snap["dead"] == ["w1"] and snap["alive"] == ["w2"]
     assert snap["workers"]["w2"]["completed"] == len(w2.completions) == 4
+
+
+# --- calibration provenance --------------------------------------------------
+
+def test_calibration_provenance_measured_vs_estimated():
+    """A worker that can measure codec throughput on its own process wins
+    over the eff_inf-scaled host estimate, and ``codec_bws_measured``
+    records which path was used (surfaced in BENCH_fleet.json)."""
+    reg = DeviceRegistry(heartbeat_timeout_s=1e9)
+    reg.codec_bws = {"int8": 1e9}          # host-measured calibration
+
+    est = reg.add(_sim_worker("est", factor=0.5))
+    assert est.codec_bws_measured is False
+    assert est.codec_bws["int8"] == pytest.approx(0.5e9)  # scaled estimate
+
+    meas = _sim_worker("meas", factor=0.5)
+    meas.measure_codec_bws = lambda: {"int8": 123.0}   # the RPC boundary
+    reg.add(meas)
+    assert meas.codec_bws_measured is True
+    assert meas.codec_bws == {"int8": 123.0}           # measured, unscaled
+
+
+def test_calibration_falls_back_to_estimate_on_measure_failure():
+    """A wire hiccup during Calibrate must not leave the worker
+    uncalibrated: the registry falls back to the scaled estimate and the
+    provenance flag says so."""
+    reg = DeviceRegistry(heartbeat_timeout_s=1e9)
+    reg.codec_bws = {"int8": 1e9}
+
+    def boom():
+        raise RuntimeError("wire hiccup")
+
+    w = _sim_worker("flaky", factor=0.5)
+    w.measure_codec_bws = boom
+    reg.add(w)
+    assert w.codec_bws_measured is False
+    assert w.codec_bws["int8"] == pytest.approx(0.5e9)
+
+
+def test_readmit_remeasures_through_the_worker():
+    """Re-admission re-runs calibration through the worker's own
+    measurement when it supports one (a revived process may perform
+    differently than it did before it died)."""
+    reg = DeviceRegistry(heartbeat_timeout_s=1e9)
+    w = _sim_worker("m", factor=1.0)
+    calls = []
+    w.measure_codec_bws = lambda: calls.append(1) or {"int8": 7.0}
+    reg.add(w)
+    assert calls == [1] and w.codec_bws == {"int8": 7.0}
+    reg.fail("m")
+    assert reg.check_dead() == ["m"]
+    reg.readmit("m")
+    assert calls == [1, 1]                 # measured again on revive
+    assert w.codec_bws_measured is True
