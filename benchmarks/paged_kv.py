@@ -1,0 +1,232 @@
+"""Paged-KV benchmark: concurrency at a fixed memory budget + prefix-cache
+prefill speedup.
+
+Two claims, both CI-gated, both asserted token-exact against sequential
+``session.generate`` before any number is reported:
+
+1. **Concurrency** — at the SAME device KV budget (dense ``n_slots x
+   max_len`` positions vs a paged pool of equally many positions,
+   trash page included), short requests reach >= ``--min-concurrency-ratio``
+   (default 4x) more concurrent in-flight requests through the paged pool:
+   dense strands ``max_len - total_len`` positions per slot, pages don't.
+
+2. **Prefix caching** — N requests extending one cached system prompt
+   serve >= ``--min-prefix-speedup`` faster wall-clock than the same
+   requests with the prefix cache off, because admission prefills only the
+   few suffix tokens instead of the whole prompt.
+
+Writes ``BENCH_paged.json`` at the repo root (CI's ``BENCH_*.json``
+artifact wildcard picks it up).
+
+    PYTHONPATH=src python benchmarks/paged_kv.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _pool_bytes(tree) -> int:
+    import jax
+    return sum(int(l.size) * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+def _serve_exact(rt, session, prompts, n_new, *, seeds):
+    """Submit a burst, run to completion, assert every completion matches
+    session.generate token-for-token; returns (wall_s, completions)."""
+    import jax.numpy as jnp
+    reqs = [rt.submit(p, n_new, seed=s) for p, s in zip(prompts, seeds)]
+    t0 = time.perf_counter()
+    done = rt.run()
+    wall = time.perf_counter() - t0
+    got = {c.request_id: c.tokens for c in done}
+    for p, s, r in zip(prompts, seeds, reqs):
+        ref = session.generate(jnp.asarray(p)[None], n_new, seed=s)
+        if not np.array_equal(got[r.id], np.asarray(ref)[0]):
+            raise AssertionError(
+                f"paged serving diverged from session.generate (seed {s}): "
+                f"{got[r.id]} vs {np.asarray(ref)[0]}")
+    return wall, done
+
+
+def bench_concurrency(session, *, budget_positions: int, page_size: int,
+                      dense_slots: int, n_req: int, T0: int, n_new: int,
+                      chunk: int):
+    """Same KV budget both ways; report max concurrent in-flight."""
+    from repro.serving import ServingRuntime
+    dense_max_len = budget_positions // dense_slots
+    n_pages = budget_positions // page_size - 1     # -1: the trash page
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, session.cfg.vocab_size, T0)
+               for _ in range(n_req)]
+    seeds = list(range(n_req))
+
+    out = {}
+    for name, kwargs in (
+            ("dense", dict(n_slots=dense_slots, max_len=dense_max_len)),
+            ("paged", dict(max_len=dense_max_len, page_size=page_size,
+                           n_pages=n_pages, prefix_cache=False))):
+        warm = ServingRuntime(session, chunk=chunk, **kwargs)
+        warm.submit(prompts[0], n_new, seed=seeds[0])
+        warm.run()                                   # compile out of band
+        rt = ServingRuntime(session, chunk=chunk, **kwargs)
+        wall, _ = _serve_exact(rt, session, prompts, n_new, seeds=seeds)
+        pool = next(iter(rt.pools.values()))
+        kv = pool.pool if name == "paged" else pool.cache
+        out[name] = {
+            "max_concurrent": rt.stats_snapshot()["max_concurrent"],
+            "wall_s": wall, "kv_bytes": _pool_bytes(kv),
+            "positions": (n_pages + 1) * page_size if name == "paged"
+            else dense_slots * dense_max_len}
+    out["concurrency_ratio"] = (out["paged"]["max_concurrent"]
+                                / max(out["dense"]["max_concurrent"], 1))
+    if out["paged"]["kv_bytes"] > out["dense"]["kv_bytes"]:
+        raise AssertionError(
+            f"paged pool exceeds the dense budget: "
+            f"{out['paged']['kv_bytes']} > {out['dense']['kv_bytes']} bytes")
+    return out
+
+
+def bench_prefix(session, *, prefix_len: int, n_sharers: int,
+                 suffix_len: int, n_new: int, page_size: int, chunk: int):
+    """One primer request caches the shared prompt; N extenders then serve
+    with the prefix cache on vs off."""
+    from repro.serving import ServingRuntime
+    rng = np.random.RandomState(1)
+    prefix = list(rng.randint(1, session.cfg.vocab_size, prefix_len))
+    sharers = [prefix + list(rng.randint(1, session.cfg.vocab_size,
+                                         suffix_len))
+               for _ in range(n_sharers)]
+    max_len = prefix_len + suffix_len + n_new
+    pages = (n_sharers + 2) * (-(-max_len // page_size))
+    out = {}
+    V = session.cfg.vocab_size
+    for name, on in (("cache_on", True), ("cache_off", False)):
+        kwargs = dict(chunk=chunk, max_len=max_len, page_size=page_size,
+                      n_pages=pages, n_rows=n_sharers + 1, prefix_cache=on)
+        # warm on a disjoint prompt family: compiles the prefill shapes and
+        # (cache on) the suffix-scan executable, shared session-wide
+        wprefix = list(rng.randint(1, V, prefix_len))
+        warm = ServingRuntime(session, **kwargs)
+        warm.submit(wprefix, n_new, seed=99)
+        warm.run()
+        warm.submit(wprefix + list(rng.randint(1, V, suffix_len)),
+                    n_new, seed=98)
+        warm.run()
+        wall = None
+        for _ in range(3):                 # best-of-3 against CI jitter
+            rt = ServingRuntime(session, **kwargs)
+            _serve_exact(rt, session, [prefix], n_new,
+                         seeds=[1000])     # primer seeds the prefix entry
+            w, _ = _serve_exact(rt, session, sharers, n_new,
+                                seeds=list(range(100, 100 + n_sharers)))
+            wall = w if wall is None else min(wall, w)
+        snap = rt.stats_snapshot()
+        out[name] = {"wall_s": wall,
+                     "prefix_hits": snap["prefix_hits"],
+                     "partial_hits": snap["partial_hits"],
+                     "cow_splits": snap["cow_splits"],
+                     "hit_rate": snap["prefix_hit_rate"]}
+    if out["cache_on"]["partial_hits"] < n_sharers:
+        raise AssertionError(
+            f"expected every sharer to hit the cached prefix, got "
+            f"{out['cache_on']['partial_hits']}/{n_sharers}")
+    out["prefill_speedup"] = (out["cache_off"]["wall_s"]
+                              / max(out["cache_on"]["wall_s"], 1e-9))
+    return out
+
+
+def run(smoke: bool = True, arch: str = "llama3.2-1b",
+        out_path: str = "BENCH_paged.json"):
+    from repro.api import ExecutionPlan, InferenceSession
+    from repro.kernels import backend_info
+
+    if smoke:
+        reduced = {"vocab_size": 64}
+        budget, ps, dense_slots = 512, 16, 4
+        n_req, T0, n_new, chunk = 24, 8, 8, 2
+        # prefix long enough that prefill compute dominates the admission
+        # (the cache trades O(T0) prefill for an O(suffix) scan, so short
+        # prompts hide the win behind fixed dispatch latency)
+        prefix_len, n_sharers, suffix_len, pre_new = 512, 8, 4, 4
+    else:
+        reduced = {"vocab_size": 256, "n_layers": 4, "d_model": 256,
+                   "d_ff": 512, "n_heads": 8, "n_kv_heads": 8,
+                   "head_dim": 32}
+        budget, ps, dense_slots = 2048, 16, 8
+        n_req, T0, n_new, chunk = 64, 16, 16, 4
+        prefix_len, n_sharers, suffix_len, pre_new = 512, 16, 8, 8
+
+    session = InferenceSession.from_config(arch, reduced=reduced,
+                                           plans=[ExecutionPlan.local()])
+    session.profile(backend="simulated")
+
+    conc = bench_concurrency(session, budget_positions=budget, page_size=ps,
+                             dense_slots=dense_slots, n_req=n_req, T0=T0,
+                             n_new=n_new, chunk=chunk)
+    pref = bench_prefix(session, prefix_len=prefix_len,
+                        n_sharers=n_sharers, suffix_len=suffix_len,
+                        n_new=pre_new, page_size=ps, chunk=chunk)
+
+    results = {"arch": session.cfg.name, "smoke": smoke,
+               "kernel_backend": backend_info(),
+               "budget_positions": budget, "page_size": ps,
+               "concurrency": conc, "prefix": pref,
+               "token_exact": True}        # _serve_exact raised otherwise
+    print(f"concurrency @ {budget} KV positions: dense "
+          f"{conc['dense']['max_concurrent']} in flight "
+          f"({conc['dense']['kv_bytes'] / 1e6:.2f} MB) vs paged "
+          f"{conc['paged']['max_concurrent']} "
+          f"({conc['paged']['kv_bytes'] / 1e6:.2f} MB) → "
+          f"{conc['concurrency_ratio']:.1f}x")
+    print(f"prefix cache ({prefix_len}-token shared prompt, {n_sharers} "
+          f"sharers): {pref['cache_off']['wall_s']:.2f}s off vs "
+          f"{pref['cache_on']['wall_s']:.2f}s on → "
+          f"{pref['prefill_speedup']:.2f}x "
+          f"({pref['cache_on']['partial_hits']} partial hits, "
+          f"{pref['cache_on']['cow_splits']} COW splits)")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {out_path}")
+    return results
+
+
+def main():
+    import sys
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CPU config (CI)")
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--out", default="BENCH_paged.json")
+    ap.add_argument("--min-concurrency-ratio", type=float, default=0.0,
+                    help="fail (exit 1) if paged/dense max-concurrent at "
+                         "the same KV budget is below this")
+    ap.add_argument("--min-prefix-speedup", type=float, default=0.0,
+                    help="fail (exit 1) if the cache-on/cache-off wall "
+                         "ratio is below this")
+    args = ap.parse_args()
+    results = run(smoke=args.smoke, arch=args.arch, out_path=args.out)
+    ratio = results["concurrency"]["concurrency_ratio"]
+    speedup = results["prefix"]["prefill_speedup"]
+    ok = True
+    if ratio < args.min_concurrency_ratio:
+        print(f"FAIL: concurrency ratio {ratio:.2f}x below "
+              f"{args.min_concurrency_ratio}x")
+        ok = False
+    if speedup < args.min_prefix_speedup:
+        print(f"FAIL: prefix speedup {speedup:.2f}x below "
+              f"{args.min_prefix_speedup}x")
+        ok = False
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    main()

@@ -226,8 +226,8 @@ def supports_slot_pool(cfg: ModelConfig) -> bool:
 
 
 def build_prefill_fn(cfg: ModelConfig, xcfg: ExchangeConfig, *,
-                     total_len: int,
-                     prefill_mode: str = "auto") -> Callable:
+                     total_len: int, prefill_mode: str = "auto",
+                     with_logits: bool = False) -> Callable:
     """One jitted request-admission executable.
 
     ``fn(params, prompt_tokens [B, T0], extras, key, temp) → (tok0 [B, 1],
@@ -237,7 +237,10 @@ def build_prefill_fn(cfg: ModelConfig, xcfg: ExchangeConfig, *,
     decoded by chunks reproduces ``generate`` token-for-token).  ``temp``
     is a traced scalar (≤0 = greedy), not a compile-time constant — serving
     traffic carries per-request temperatures and must not recompile the
-    prefill per distinct value.
+    prefill per distinct value.  ``with_logits=True`` appends the raw
+    last-position logits [B, 1, V] to the return (the paged prefix cache
+    stores them so a later full-prefix hit can re-sample its own first
+    token without re-running the prefill).
     """
     mode = resolve_prefill_mode(cfg, xcfg, prefill_mode)
 
@@ -260,6 +263,8 @@ def build_prefill_fn(cfg: ModelConfig, xcfg: ExchangeConfig, *,
         sampled = jax.random.categorical(
             sub, logits / jnp.maximum(temp, 1e-6), axis=-1).astype(jnp.int32)
         tok = jnp.where(temp > 0.0, sampled, greedy)[:, 0:1]
+        if with_logits:
+            return tok, cache, key, logits
         return tok, cache, key
 
     jitted = jax.jit(pf)
@@ -357,6 +362,192 @@ def build_decode_chunk_fn(cfg: ModelConfig, xcfg: ExchangeConfig, *,
     def counted(params, cache, tok, lengths, keys, temps):
         _STATS["dispatches"] += 1
         return jitted(params, cache, tok, lengths, keys, temps)
+
+    counted.jitted = jitted
+    return counted
+
+
+# ---------------------------------------------------------------------------
+# paged-pool serving primitives (block KV cache + prefix caching)
+# ---------------------------------------------------------------------------
+#
+# The paged runtime (repro.serving.pages) replaces per-slot dense caches
+# with ONE shared pool of fixed-size KV pages; each request owns a row of a
+# [rows, max_pages] page table.  Admission still primes a B=1 dense cache
+# with the ordinary prefill executable (page-aligned length), then ONE
+# fused scatter moves it into the request's pages.  Decode is ONE jitted
+# executable per (plan, rows, max_pages): all rows step together against
+# the shared pool (per-row vmap would fork the pool), with per-row
+# positions/keys/temps — the per-row sampling math is identical to
+# `build_decode_chunk_fn`'s, so paged serving stays token-exact vs
+# `session.generate`.
+
+def build_paged_admit_fn(cfg: ModelConfig) -> Callable:
+    """Fused paged admission: scatter a primed B=1 dense request cache
+    (page-aligned length P0·ps) into pool pages ``page_ids`` [P0] AND set
+    the row's state vector entries, in ONE executable (compiled per P0,
+    like the prefill is per prompt length).
+
+    ``fn(pool, tok, lengths, keys, temps, req_cache, page_ids, row, tok0,
+    length0, key0, temp0) → (pool, tok, lengths, keys, temps)``.
+    """
+
+    def admit(pool, tok, lengths, keys, temps, req_cache, page_ids, row,
+              tok0, length0, key0, temp0):
+        def scatter(p, r):
+            # p: [L, P, ps, Hk, dh] pool leaf; r: [L, 1, P0*ps, Hk, dh]
+            ps = p.shape[2]
+            P0 = r.shape[2] // ps
+            r = r.astype(p.dtype).reshape(r.shape[0], P0, ps, *r.shape[3:])
+            return p.at[:, page_ids].set(r)
+
+        pool = jax.tree_util.tree_map(scatter, pool, req_cache)
+        tok = tok.at[row].set(tok0[0, 0])
+        lengths = lengths.at[row].set(length0)
+        keys = keys.at[row].set(key0)
+        temps = temps.at[row].set(temp0)
+        return pool, tok, lengths, keys, temps
+
+    # the pool is donated: it is orders of magnitude larger than anything
+    # else here and every caller rebinds the returned pool, so XLA can
+    # scatter in place instead of copying the whole pool per admission
+    jitted = jax.jit(admit, donate_argnums=(0,))
+    _STATS["builds"] += 1
+
+    def counted(*args):
+        _STATS["dispatches"] += 1
+        return jitted(*args)
+
+    counted.jitted = jitted
+    return counted
+
+
+def build_paged_hit_fn(cfg: ModelConfig) -> Callable:
+    """Fused full-prefix-hit admission: no prefill runs — the request's
+    first token is sampled from the prefix entry's *cached* last-position
+    logits with the request's own key (the same split/argmax/categorical
+    sequence ``build_prefill_fn`` applies, so a hit stays token-exact vs a
+    miss), and the row state vectors are set in the same executable.
+
+    ``fn(tok, lengths, keys, temps, row, logits [1,1,V], length0, key0,
+    temp0) → (tok, lengths, keys, temps)``.
+    """
+
+    def hit(tok, lengths, keys, temps, row, logits, length0, key0, temp0):
+        key0, sub = jax.random.split(key0)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        sampled = jax.random.categorical(
+            sub, logits / jnp.maximum(temp0, 1e-6),
+            axis=-1).astype(jnp.int32)
+        t0 = jnp.where(temp0 > 0.0, sampled, greedy)[0, 0]
+        tok = tok.at[row].set(t0)
+        lengths = lengths.at[row].set(length0)
+        keys = keys.at[row].set(key0)
+        temps = temps.at[row].set(temp0)
+        return tok, lengths, keys, temps
+
+    jitted = jax.jit(hit)
+    _STATS["builds"] += 1
+
+    def counted(*args):
+        _STATS["dispatches"] += 1
+        return jitted(*args)
+
+    counted.jitted = jitted
+    return counted
+
+
+def build_paged_suffix_fn(cfg: ModelConfig, xcfg: ExchangeConfig, *,
+                          n_suffix: int) -> Callable:
+    """Partial-prefix-hit admission: the shared prefix pages are already
+    hot, so only the ``n_suffix`` remaining prompt tokens run — a
+    teacher-forced ``lax.scan`` of ``decode_step_paged`` writing straight
+    into the request's pages, then the first-token sampling tail of
+    ``build_prefill_fn``.  Scanned prefill is token-exact vs single-pass
+    for the families the page pool serves (the `test_generate_parity_local`
+    equivalence), so hit admissions reproduce miss admissions exactly.
+
+    ``fn(params, pool, row_table [1, MP], suffix [1, n], start_len [1],
+    key, temp) → (tok0 [1, 1], pool, key', logits [1, 1, V])``.
+    """
+
+    def pf(params, pool, row_table, suffix, start_len, key, temp):
+        def step(carry, xs):
+            pool, _ = carry
+            t, i = xs
+            logits, pool = tfm.decode_step_paged(
+                params, {"tokens": t[:, None]}, pool, row_table,
+                start_len + i, cfg, xcfg)
+            return (pool, logits), None
+
+        logits0 = jnp.zeros((1, 1, cfg.vocab_size), jnp.float32)
+        (pool, logits), _ = jax.lax.scan(
+            step, (pool, logits0),
+            (suffix.T, jnp.arange(n_suffix, dtype=jnp.int32)))
+        key, sub = jax.random.split(key)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        sampled = jax.random.categorical(
+            sub, logits / jnp.maximum(temp, 1e-6), axis=-1).astype(jnp.int32)
+        tok = jnp.where(temp > 0.0, sampled, greedy)[:, 0:1]
+        return tok, pool, key, logits
+
+    # donated pool: in-place page writes instead of a pool-sized copy per
+    # scan carry (the caller always rebinds the returned pool)
+    jitted = jax.jit(pf, donate_argnums=(1,))
+    _STATS["builds"] += 1
+
+    def counted(*args):
+        _STATS["dispatches"] += 1
+        return jitted(*args)
+
+    counted.jitted = jitted
+    return counted
+
+
+def build_paged_decode_chunk_fn(cfg: ModelConfig, xcfg: ExchangeConfig, *,
+                                n_steps: int) -> Callable:
+    """One jitted continuous-batching decode chunk over the paged pool.
+
+    ``fn(params, pool, page_table [S, MP], caps [S], tok [S], lengths [S],
+    keys [S], temps [S]) → (tokens [S, n_steps], pool, lengths, keys)``.
+    All rows advance together through ``decode_step_paged`` (the pool is
+    shared state); per-row sampling applies exactly the per-slot math of
+    ``build_decode_chunk_fn``.  ``caps`` [S] is each row's last writable
+    position (pages assigned · page_size − 1): rows whose requests are done
+    or freed keep decoding harmlessly, their writes clamped inside their
+    own last page (or the trash page) — active rows are never clamped
+    because the runtime allocates pages covering the whole chunk first.
+    """
+
+    def samp(row, key, temp):
+        key, sub = jax.random.split(key)
+        greedy = jnp.argmax(row, axis=-1).astype(jnp.int32)
+        sampled = jax.random.categorical(
+            sub, row / jnp.maximum(temp, 1e-6)).astype(jnp.int32)
+        return jnp.where(temp > 0.0, sampled, greedy), key
+
+    def chunk(params, pool, page_table, caps, tok, lengths, keys, temps):
+        def step(carry, _):
+            tok, pool, lengths, keys = carry
+            pos = jnp.minimum(lengths, caps)
+            logits, pool = tfm.decode_step_paged(
+                params, {"tokens": tok[:, None]}, pool, page_table, pos,
+                cfg, xcfg)
+            nxt, keys = jax.vmap(samp)(logits[:, 0], keys, temps)
+            return (nxt, pool, pos + 1, keys), nxt
+
+        (tok, pool, lengths, keys), toks = jax.lax.scan(
+            step, (tok, pool, lengths, keys), None, length=n_steps)
+        return toks.T, pool, lengths, keys
+
+    # donated pool: the chunk runs every scheduler step, and an undonated
+    # pool costs a full pool copy at the jit boundary each time
+    jitted = jax.jit(chunk, donate_argnums=(1,))
+    _STATS["builds"] += 1
+
+    def counted(*args):
+        _STATS["dispatches"] += 1
+        return jitted(*args)
 
     counted.jitted = jitted
     return counted

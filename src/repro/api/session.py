@@ -135,6 +135,8 @@ class InferenceSession:
         # plan → {(kind, *shape): compiled slot-pool executable}
         self._serve_execs: Dict[Any, Dict] = {}
         self._admit_fn = None
+        self._paged_admit_fn = None
+        self._paged_hit_fn = None
         self.history: List[DispatchRecord] = []
         self._calibrated_upto = 0
         self.perfmap = perfmap
@@ -489,10 +491,12 @@ class InferenceSession:
     def prime_slot(self, prompt_tokens, *, total_len: int,
                    plan: Optional[ExecutionPlan] = None, seed: int = 0,
                    temperature: Optional[float] = None,
-                   prefill_mode: str = "auto"):
+                   prefill_mode: str = "auto", with_logits: bool = False):
         """Prefill ONE request (prompt ``[1, T0]``) against a fresh cache of
         the pool's length → ``(tok0 [1,1], cache, key)`` — exactly the front
-        half of :meth:`generate`, compiled per (plan, T0, total_len)."""
+        half of :meth:`generate`, compiled per (plan, T0, total_len).
+        ``with_logits=True`` appends the last-position logits (the paged
+        prefix cache stores them for full-hit first-token sampling)."""
         import jax
         from repro.api import generation as gen
         if not gen.supports_slot_pool(self.cfg):
@@ -506,10 +510,12 @@ class InferenceSession:
         # temperature is a traced argument, NOT part of the cache key —
         # per-request temperatures must not recompile the prefill
         fn = self._serve_exec(
-            plan, ("prefill", B, T0, int(total_len), prefill_mode),
+            plan, ("prefill", B, T0, int(total_len), prefill_mode,
+                   with_logits),
             lambda: gen.build_prefill_fn(self.cfg, plan.to_exchange_config(),
                                          total_len=total_len,
-                                         prefill_mode=prefill_mode))
+                                         prefill_mode=prefill_mode,
+                                         with_logits=with_logits))
         return fn(self.params, prompt_tokens, {}, jax.random.key(seed),
                   float(T))
 
@@ -540,6 +546,72 @@ class InferenceSession:
                 self.cfg, plan.to_exchange_config(), n_steps=n_steps,
                 max_len=max_len))
         return fn(self.params, pool, tok, lengths, keys, temps)
+
+    # -- paged-pool serving primitives (used by repro.serving.pages) ---------
+
+    def init_page_pool(self, n_pages: int, page_size: int):
+        """Shared paged KV pool (``[n_layers, n_pages, page_size, Hk, dh]``
+        leaves) — the state the paged admission/decode executables operate
+        on.  Raises for families without a paged decode path."""
+        from repro.models import transformer as tfm
+        return tfm.init_page_pool(self.cfg, n_pages, page_size)
+
+    def admit_paged(self, pool, tok, lengths, keys, temps, request_cache,
+                    page_ids, row: int, tok0, length0: int, key0,
+                    temp0: float):
+        """Fused paged admission: scatter a primed (page-aligned) request
+        cache into pool pages ``page_ids`` + set the row state, in one
+        jitted executable → ``(pool, tok, lengths, keys, temps)``."""
+        from repro.api import generation as gen
+        if self._paged_admit_fn is None:
+            self._paged_admit_fn = gen.build_paged_admit_fn(self.cfg)
+        return self._paged_admit_fn(pool, tok, lengths, keys, temps,
+                                    request_cache, page_ids, row, tok0,
+                                    length0, key0, temp0)
+
+    def hit_paged(self, tok, lengths, keys, temps, row: int, logits,
+                  length0: int, key0, temp0: float):
+        """Full-prefix-hit admission: sample the first token from cached
+        prefill logits with the request's own key + set the row state →
+        ``(tok, lengths, keys, temps)`` (no prefill, no cache writes)."""
+        from repro.api import generation as gen
+        if self._paged_hit_fn is None:
+            self._paged_hit_fn = gen.build_paged_hit_fn(self.cfg)
+        return self._paged_hit_fn(tok, lengths, keys, temps, row, logits,
+                                  length0, key0, temp0)
+
+    def suffix_paged(self, pool, row_table, suffix, start_len, key0,
+                     temp0: float, *, plan: Optional[ExecutionPlan] = None):
+        """Partial-prefix-hit admission: teacher-force the ``suffix``
+        [1, n] prompt tail through the paged pool from position
+        ``start_len`` → ``(tok0 [1,1], pool, key', logits)``; compiled per
+        (plan, n_suffix, max_pages)."""
+        from repro.api import generation as gen
+        plan = self._plan_or_default(plan)
+        n = int(suffix.shape[1])
+        fn = self._serve_exec(
+            plan, ("paged_suffix", n, int(row_table.shape[1])),
+            lambda: gen.build_paged_suffix_fn(
+                self.cfg, plan.to_exchange_config(), n_suffix=n))
+        return fn(self.params, pool, row_table, suffix, start_len, key0,
+                  float(temp0))
+
+    def paged_decode_chunk(self, pool, page_table, caps, tok, lengths, keys,
+                           temps, *, n_steps: int,
+                           plan: Optional[ExecutionPlan] = None):
+        """``n_steps`` continuous-batching decode steps over every page-
+        table row → ``(tokens [S, n_steps], pool, lengths, keys)``;
+        compiled once per (plan, rows, max_pages, n_steps) and reused
+        across admissions — page tables/caps/lengths are traced inputs."""
+        from repro.api import generation as gen
+        plan = self._plan_or_default(plan)
+        fn = self._serve_exec(
+            plan, ("paged_chunk", int(tok.shape[0]), int(n_steps),
+                   int(page_table.shape[1])),
+            lambda: gen.build_paged_decode_chunk_fn(
+                self.cfg, plan.to_exchange_config(), n_steps=n_steps))
+        return fn(self.params, pool, page_table, caps, tok, lengths, keys,
+                  temps)
 
     # -- explanation (the paper's reported artifacts) ------------------------
 

@@ -151,6 +151,40 @@ def decode_attention(q: jnp.ndarray,        # [B, 1, H, dh]
         logit_softcap=logit_softcap, scale=scale)
 
 
+def decode_attention_paged(q: jnp.ndarray,           # [B, 1, H, dh]
+                           k_pool: jnp.ndarray,      # [P, ps, Hk, dh]
+                           v_pool: jnp.ndarray,
+                           page_table: jnp.ndarray,  # [B, max_pages] int32
+                           cache_len,                # [B] — valid prefix
+                           *,
+                           logit_softcap: Optional[float] = None,
+                           scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-token attention against a *paged* KV pool: each request's
+    cache is the concatenation of the pool pages named by its page-table
+    row, masked to the valid ``cache_len`` prefix.
+
+    Reference path: materialize the gather with ``jnp.take`` and run the
+    exact dense reference (CPU/interpret parity oracle).  Pallas path: the
+    paged flash-decode kernel indexes pool pages through the scalar-
+    prefetched table — no gather is ever materialized.
+    """
+    if _use_pallas():
+        from repro.kernels.flash_decode.paged import flash_decode_paged_op
+        o, m, l = flash_decode_paged_op(q, k_pool, v_pool, page_table,
+                                        cache_len, scale=scale,
+                                        softcap=logit_softcap,
+                                        interpret=_interpret())
+        out = o / jnp.maximum(l, 1e-38)[..., None]                # [B, H, dh]
+        return out[:, None].astype(q.dtype)                       # [B,1,H,dh]
+    from repro.kernels.flash_decode.ops import validity_mask
+    from repro.kernels.flash_decode.paged import gather_pages
+    k = gather_pages(k_pool, page_table)
+    v = gather_pages(v_pool, page_table)
+    valid = validity_mask(q.shape[0], k.shape[1], cache_len)
+    return ref_attn.reference_attention(
+        q, k, v, kv_mask=valid, logit_softcap=logit_softcap, scale=scale)
+
+
 # ---------------------------------------------------------------------------
 # PRISM prefill attention (scaling-aware softmax over local ‖ remote means)
 # ---------------------------------------------------------------------------

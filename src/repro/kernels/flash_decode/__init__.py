@@ -1,4 +1,8 @@
 from repro.kernels.flash_decode.ops import flash_decode_op
+from repro.kernels.flash_decode.paged import (flash_decode_paged_op,
+                                              flash_decode_paged_ref,
+                                              gather_pages)
 from repro.kernels.flash_decode.ref import flash_decode_ref
 
-__all__ = ["flash_decode_op", "flash_decode_ref"]
+__all__ = ["flash_decode_op", "flash_decode_ref", "flash_decode_paged_op",
+           "flash_decode_paged_ref", "gather_pages"]

@@ -2,6 +2,7 @@
 and merges shard partials (the exact LSE combine used across devices)."""
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -12,6 +13,16 @@ from repro.kernels.flash_decode.kernel import NEG_INF, flash_decode_pallas
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+@functools.lru_cache(maxsize=None)
+def pick_s_block(S: int) -> int:
+    """Largest power-of-two tile (≤512) dividing ``S``.  Cached per S — the
+    divisor search used to rerun on every trace of ``flash_decode_op``, and
+    the paged op shares the same selection for its page-size tiles."""
+    if S % 512 == 0:
+        return 512
+    return max(t for t in (256, 128, 64, 32, 16, 8, 4, 2, 1) if S % t == 0)
 
 
 def validity_mask(B: int, S: int, cache_len, offset=0,
@@ -53,10 +64,8 @@ def flash_decode_op(q: jnp.ndarray,      # [B, 1, H, dh] or [B, H, dh]
     B, H, dh = q.shape
     S = k.shape[1]
     bias = validity_bias(B, S, cache_len, offset=offset, window=window)
-    s_block = 512 if S % 512 == 0 else max(
-        t for t in (256, 128, 64, 32, 16, 8, 4, 2, 1) if S % t == 0)
     return flash_decode_pallas(q, k, v, bias, scale=scale, softcap=softcap,
-                               s_block=s_block, interpret=interpret)
+                               s_block=pick_s_block(S), interpret=interpret)
 
 
 def merge_partials(o, m, l) -> jnp.ndarray:

@@ -1,0 +1,135 @@
+"""Paged flash-decode: one-token attention gathered through a page table.
+
+The KV cache lives in a shared pool of fixed-size pages
+(``[n_pages, page_size, Hk, dh]``); each request owns a row of a
+``[B, max_pages]`` int32 page table mapping its logical block ``p`` to a
+physical page id.  The reference path materializes the gather with
+``jnp.take``; the Pallas path never materializes it — the page table rides
+in as a scalar-prefetch operand and the K/V block index maps read
+``pt[b, p]`` directly, so each (b, h, p) grid step streams exactly one
+physical page HBM→VMEM.  Grid (B, H, max_pages) with the page axis
+minor-most sequential, so the online-softmax state in VMEM scratch is the
+*same* ``_kernel`` body the dense flash-decode uses.
+
+Validity masking arrives as an additive bias [B, max_pages·page_size]
+built by ``ops.validity_bias`` — the ONE definition of cache validity,
+shared with the dense op.  Free/overhanging table entries may point at a
+trash page; the bias masks those positions so their values never count.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_decode.kernel import _kernel
+from repro.kernels.flash_decode.ref import flash_decode_ref
+
+
+def gather_pages(pool: jnp.ndarray,         # [P, ps, Hk, dh]
+                 page_table: jnp.ndarray    # [B, MP] int32
+                 ) -> jnp.ndarray:          # [B, MP*ps, Hk, dh]
+    """Materialize a per-request contiguous KV view from the page pool."""
+    B, MP = page_table.shape
+    ps = pool.shape[1]
+    return jnp.take(pool, page_table, axis=0).reshape(
+        B, MP * ps, *pool.shape[2:])
+
+
+def flash_decode_paged_ref(q: jnp.ndarray,           # [B, H, dh]
+                           k_pool: jnp.ndarray,      # [P, ps, Hk, dh]
+                           v_pool: jnp.ndarray,
+                           page_table: jnp.ndarray,  # [B, MP] int32
+                           kv_bias: jnp.ndarray,     # [B, MP*ps] f32
+                           *, scale: Optional[float] = None,
+                           softcap: Optional[float] = None
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """``jnp.take`` gather + the dense reference math → (o·l, m, l)."""
+    k = gather_pages(k_pool, page_table)
+    v = gather_pages(v_pool, page_table)
+    return flash_decode_ref(q, k, v, kv_bias, scale=scale, softcap=softcap)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "interpret"))
+def flash_decode_paged_pallas(q: jnp.ndarray,           # [B, H, dh]
+                              k_pool: jnp.ndarray,      # [P, ps, Hk, dh]
+                              v_pool: jnp.ndarray,
+                              page_table: jnp.ndarray,  # [B, MP] int32
+                              kv_bias: jnp.ndarray,     # [B, MP*ps] f32
+                              *, scale: Optional[float] = None,
+                              softcap: Optional[float] = None,
+                              interpret: bool = False):
+    """Pallas paged flash-decode → (o·l, m, l) partials.
+
+    The page table is the first operand (scalar prefetch), available to the
+    K/V BlockSpec index maps: logical block ``p`` of row ``b`` resolves to
+    physical page ``pt[b, p]`` of the pool, block shape (1, ps, 1, dh).
+    """
+    B, H, dh = q.shape
+    ps, Hk = k_pool.shape[1], k_pool.shape[2]
+    MP = page_table.shape[1]
+    scale = (dh ** -0.5) if scale is None else scale
+    group = H // Hk
+    grid = (B, H, MP)
+
+    def _paged_kernel(pt_ref, q_ref, k_ref, v_ref, bias_ref,
+                      o_ref, m_ref, l_ref, acc_ref, mm_ref, ll_ref):
+        del pt_ref  # consumed by the index maps
+        _kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref,
+                acc_ref, mm_ref, ll_ref, scale=scale, softcap=softcap,
+                n_s_blocks=MP)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda b, h, p, pt: (b, h, 0)),
+            pl.BlockSpec((1, ps, 1, dh),
+                         lambda b, h, p, pt: (pt[b, p], 0, h // group, 0)),
+            pl.BlockSpec((1, ps, 1, dh),
+                         lambda b, h, p, pt: (pt[b, p], 0, h // group, 0)),
+            pl.BlockSpec((1, ps), lambda b, h, p, pt: (b, p)),
+        ],
+        out_specs=(pl.BlockSpec((1, 1, dh), lambda b, h, p, pt: (b, h, 0)),
+                   pl.BlockSpec((1, 1), lambda b, h, p, pt: (b, h)),
+                   pl.BlockSpec((1, 1), lambda b, h, p, pt: (b, h))),
+        scratch_shapes=[pltpu.VMEM((1, dh), jnp.float32),   # acc
+                        pltpu.VMEM((1,), jnp.float32),      # m
+                        pltpu.VMEM((1,), jnp.float32)],     # l
+    )
+    out_shapes = (jax.ShapeDtypeStruct((B, H, dh), jnp.float32),
+                  jax.ShapeDtypeStruct((B, H), jnp.float32),
+                  jax.ShapeDtypeStruct((B, H), jnp.float32))
+    o, m, l = pl.pallas_call(
+        _paged_kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), q, k_pool, v_pool, kv_bias)
+    return o, m, l
+
+
+def flash_decode_paged_op(q: jnp.ndarray,           # [B, 1, H, dh] / [B,H,dh]
+                          k_pool: jnp.ndarray,      # [P, ps, Hk, dh]
+                          v_pool: jnp.ndarray,
+                          page_table: jnp.ndarray,  # [B, MP] int32
+                          cache_len,                # [B] valid prefix length
+                          *, scale: Optional[float] = None,
+                          softcap: Optional[float] = None,
+                          interpret: Optional[bool] = None
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Bias construction + Pallas paged kernel → (o·l, m, l) partials."""
+    from repro.kernels.flash_decode.ops import _on_cpu, validity_bias
+    interpret = _on_cpu() if interpret is None else interpret
+    if q.ndim == 4:
+        q = q[:, 0]
+    B = q.shape[0]
+    ps, MP = k_pool.shape[1], page_table.shape[1]
+    bias = validity_bias(B, MP * ps, cache_len)
+    return flash_decode_paged_pallas(q, k_pool, v_pool, page_table, bias,
+                                     scale=scale, softcap=softcap,
+                                     interpret=interpret)

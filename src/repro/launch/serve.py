@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         [--mode prism|local|adaptive] [--requests 12] [--arrival-rate 50] \
         [--slo-ms 5000] [--slots 4] [--chunk 8] [--tokens 16] \
-        [--bandwidth 400] [--objective latency|energy]
+        [--bandwidth 400] [--objective latency|energy] \
+        [--pages 64 --page-size 16]   # paged KV mode (prefix caching on)
 
 The hand-rolled per-token decode loop is gone: requests flow through the
 bounded queue → adaptive scheduler (micro-batches formed from the compiled
@@ -63,9 +64,23 @@ def main():
     ap.add_argument("--slo-ms", type=float, default=0.0,
                     help="per-request latency SLO (0 = best effort)")
     ap.add_argument("--slots", type=int, default=0,
-                    help="slot-pool size (default: --batch)")
+                    help="slot-pool size (default: --batch); with --pages/"
+                         "--page-size it aliases the page BUDGET instead "
+                         "(slots x max_len positions worth of pages)")
     ap.add_argument("--chunk", type=int, default=8,
                     help="decode steps per continuous-batching chunk")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="paged KV mode: shared pool of this many pages "
+                         "(admission bounded by free pages, prefix caching "
+                         "on).  0 with --page-size set = --slots' budget")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="positions per KV page (paged mode; default 16 "
+                         "when only --pages is given)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="paged mode: disable prompt prefix sharing")
+    ap.add_argument("--cold-horizon", type=int, default=0,
+                    help="paged mode: quantize prefix-cache pages idle for "
+                         "this many admissions (LOSSY; 0 = never)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -112,8 +127,22 @@ def main():
     arrivals = np.cumsum(gaps)
     prompts = [rng.randint(0, session.cfg.vocab_size, t) for t in lens]
     max_len = max(buckets) + args.tokens
-    rt = ServingRuntime(session, n_slots=n_slots, chunk=args.chunk,
-                        max_len=max_len)
+    paged = bool(args.pages or args.page_size)
+    if paged:
+        # --slots stays an alias for the memory budget: n_slots dense rows
+        # of max_len positions = the same positions' worth of pages
+        rt = ServingRuntime(session, n_slots=n_slots, chunk=args.chunk,
+                            max_len=max_len,
+                            page_size=args.page_size or None,
+                            n_pages=args.pages or None,
+                            prefix_cache=not args.no_prefix_cache,
+                            cold_horizon=args.cold_horizon or None)
+        print(f"paged KV pool: {rt.n_pages} pages x {rt.page_size} "
+              f"positions ({rt.n_slots} rows, prefix cache "
+              f"{'off' if args.no_prefix_cache else 'on'})")
+    else:
+        rt = ServingRuntime(session, n_slots=n_slots, chunk=args.chunk,
+                            max_len=max_len)
 
     t_start = time.monotonic()
     comps = rt.drive(prompts, arrivals, args.tokens,
@@ -140,6 +169,12 @@ def main():
     if stats["rejected"]:
         print(f"backpressure: {stats['rejected']} puts shed "
               f"{stats['rejections']}")
+    if paged:
+        print(f"pages: occupancy {stats['page_occupancy']:.0%} peak-free "
+              f"{stats['pages_free']}/{stats['pages_total']}  prefix "
+              f"hit-rate {stats['prefix_hit_rate']:.0%} "
+              f"({stats['full_hits']} full / {stats['partial_hits']} "
+              f"partial, {stats['cow_splits']} COW splits)")
     if args.slo_ms:
         met = sum(1 for c in comps if c.slo_met)
         print(f"SLO {args.slo_ms:g} ms: {met}/{len(comps)} met")

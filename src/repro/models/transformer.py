@@ -35,7 +35,8 @@ from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models.layers import (AttnSpec, apply_mlp, apply_norm,
-                                 attention_block, attention_decode, embed,
+                                 attention_block, attention_decode,
+                                 attention_decode_paged, embed,
                                  init_attention, init_embedding, init_kv_cache,
                                  init_mlp, init_norm, prefill_kv_cache,
                                  project_qkv, unembed)
@@ -772,6 +773,71 @@ def decode_step(params: Params, batch: Dict[str, jnp.ndarray], cache: Params,
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     logits = unembed(head, x, final_softcap=cfg.final_softcap)
     return logits, new_cache
+
+
+def _apply_attn_mlp_decode_paged(p: Params, x, cfg: ModelConfig, xcfg,
+                                 spec: AttnSpec, cache, page_table, lengths):
+    """Pre-norm block around ``attention_decode_paged`` — the paged twin of
+    ``_apply_attn_mlp_decode`` (identical residual/norm/MLP math)."""
+    h, new_cache = attention_decode_paged(
+        p["attn"], apply_norm(cfg.norm_type, p["ln1"], x), spec, xcfg,
+        cache, page_table, lengths)
+    if cfg.post_norms:
+        h = apply_norm(cfg.norm_type, p["post_attn"], h)
+    x = x + h
+    hin = apply_norm(cfg.norm_type, p["ln2"], x)
+    h2 = apply_mlp(p["mlp"], hin, cfg.act)
+    if cfg.post_norms:
+        h2 = apply_norm(cfg.norm_type, p["post_mlp"], h2)
+    return x + h2, new_cache
+
+
+def supports_page_pool(cfg: ModelConfig) -> bool:
+    """Paged decode covers the plain dense stack: one homogeneous KV cache
+    per layer, no sliding-window alternation (gemma local/global needs
+    per-page window masks) and no per-slot int8 cache (cold pages quantize
+    through the transport codecs instead, in ``repro.serving.pages``)."""
+    return (cfg.family == "dense" and not cfg.local_global
+            and not cfg.kv_quant)
+
+
+def init_page_pool(cfg: ModelConfig, n_pages: int, page_size: int) -> Params:
+    """Shared paged KV pool: same pytree as ``init_decode_cache`` but the
+    (batch, seq) axes become (page, in-page position) — leaves are
+    ``[n_layers, n_pages, page_size, Hk, dh]``.  Requests address it through
+    per-row page tables; physical rows are interchangeable."""
+    if not supports_page_pool(cfg):
+        raise ValueError(f"family {cfg.family!r} (local_global="
+                         f"{cfg.local_global}, kv_quant={cfg.kv_quant}) "
+                         f"has no paged decode path")
+    return init_decode_cache(cfg, n_pages, page_size)
+
+
+def decode_step_paged(params: Params, batch: Dict[str, jnp.ndarray],
+                      pool: Params, page_table: jnp.ndarray,
+                      lengths: jnp.ndarray, cfg: ModelConfig,
+                      xcfg: ExchangeConfig) -> Tuple[jnp.ndarray, Params]:
+    """One-token step for every row against the shared paged pool.
+
+    batch: {"tokens": [S, 1]}; ``page_table`` [S, max_pages] int32 maps each
+    row's logical blocks to pool pages; ``lengths`` [S] int32 is each row's
+    current sequence length (= this step's write position).  Returns
+    (logits [S, 1, V], updated pool).
+    """
+    if not supports_page_pool(cfg):
+        raise ValueError(f"family {cfg.family!r} has no paged decode path")
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, scale_by_sqrt_d=cfg.embed_scale)
+
+    def body(xc, lp, c):
+        return _apply_attn_mlp_decode_paged(lp, xc, cfg, xcfg,
+                                            _attn_spec(cfg), c,
+                                            page_table, lengths)
+    x, nkv = _scan_decode_layers(body, x, params["layers"], pool["kv"])
+    x = apply_norm(cfg.norm_type, params["final_norm"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(head, x, final_softcap=cfg.final_softcap)
+    return logits, {"kv": nkv}
 
 
 # single-pass prefill is defined for the attention-cached families; the

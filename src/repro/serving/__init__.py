@@ -11,6 +11,10 @@ Request traffic goes queue → scheduler → runtime:
   KV-cache pool (admit between chunks, evict finished, one executable per
   (plan, slot-count)), with fault/straggler hooks; completions carry the
   serving plan's exchange codec and modeled bytes-on-wire.
+* :class:`PagedPool` / :class:`PageAllocator` / :class:`PrefixCache` —
+  paged mode (``ServingRuntime(page_size=..., n_pages=...)``): a shared
+  block pool of fixed-size KV pages with commitment-based admission,
+  copy-on-write prefix sharing, and optional cold-page quantization.
 
 The deprecated ``AdaptiveDispatcher``/``ServeEngine`` shims have been
 **removed** — use ``repro.api.InferenceSession`` (single batches /
@@ -19,6 +23,8 @@ builders stay canonical for dry-run shape analysis.
 """
 from repro.serving.engine import (Completion, ServingRuntime, SlotPool,
                                   build_decode_step, build_prefill_step)
+from repro.serving.pages import (PageAllocator, PagedPool, PagesExhausted,
+                                 PrefixCache, PrefixEntry)
 from repro.serving.queue import QueueFull, Request, RequestQueue
 from repro.serving.scheduler import (AdaptiveScheduler, FailoverEvent,
                                      FaultHook, MicroBatch, RebalanceEvent,
@@ -27,5 +33,7 @@ from repro.serving.scheduler import (AdaptiveScheduler, FailoverEvent,
 __all__ = ["Request", "RequestQueue", "QueueFull",
            "AdaptiveScheduler", "MicroBatch",
            "ServingRuntime", "SlotPool", "Completion",
+           "PagedPool", "PageAllocator", "PrefixCache", "PrefixEntry",
+           "PagesExhausted",
            "FaultHook", "StragglerHook", "FailoverEvent", "RebalanceEvent",
            "build_prefill_step", "build_decode_step"]

@@ -25,8 +25,9 @@ batches) or :class:`ServingRuntime` (request traffic).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +66,23 @@ def build_decode_step(cfg: ModelConfig, xcfg: ExchangeConfig) -> Callable:
 
 # canonical home is repro.api.generation; re-exported for legacy imports
 from repro.api.generation import sample_token  # noqa: E402,F401
+
+
+@functools.lru_cache(maxsize=None)
+def _placeholder_keys(n: int):
+    """One shared ``[n]`` placeholder PRNG-key array per size.
+
+    Every pool used to rebuild ``jnp.stack([jax.random.key(0)] * n)`` in
+    its constructor — n host→device transfers plus a stack, re-done for
+    every plan's pool.  The values are placeholders (``admit`` overwrites a
+    row's key before any decode reads it), so one cached array per size is
+    safe to share: jax arrays are immutable and the pools only ever
+    functionally replace the whole vector."""
+    base = jax.random.key(0)
+    try:
+        return jnp.broadcast_to(base, (n,))
+    except Exception:                  # older jax: key arrays can't broadcast
+        return jnp.stack([base] * n)
 
 
 @dataclasses.dataclass
@@ -144,7 +162,7 @@ class SlotPool:
         self.cache = session.init_slot_pool(n_slots, max_len)
         self.tok = jnp.zeros((n_slots,), jnp.int32)
         self.lengths = jnp.zeros((n_slots,), jnp.int32)
-        self.keys = jnp.stack([jax.random.key(0)] * n_slots)
+        self.keys = _placeholder_keys(n_slots)
         self.temps = jnp.zeros((n_slots,), jnp.float32)
         self.slots: List[Optional[_Active]] = [None] * n_slots
 
@@ -229,12 +247,20 @@ class ServingRuntime:
     pools keep decode executables at one per (plan, slot-count); all pools
     share the session's params.
 
-    Memory note: every plan that receives traffic lazily allocates its own
-    ``n_slots``-row cache pool even though global concurrency is capped at
-    ``n_slots`` — with K plans in rotation the resident decode-cache HBM
-    is up to K× what the admitted load can use.  Budget-aware per-pool
-    sizing would need one chunk executable per (plan, residual-slot-count);
-    deliberately not done yet.
+    **Paged mode** (``page_size=``/``n_pages=``): pools become
+    :class:`~repro.serving.pages.PagedPool` — a budget-sized shared page
+    pool instead of ``n_slots`` dense ``max_len`` rows.  Admission is then
+    bounded by free *pages* (each request commits
+    ``ceil(total_len/page_size)`` pages), row count defaults to
+    ``n_pages`` (one-page requests can fill the whole budget), and prompts
+    sharing a cached prefix skip the shared part of prefill entirely.
+
+    Memory note (dense mode): every plan that receives traffic lazily
+    allocates its own ``n_slots``-row cache pool even though global
+    concurrency is capped at ``n_slots`` — with K plans in rotation the
+    resident decode-cache HBM is up to K× what the admitted load can use.
+    Paged mode is the budget-sized answer: pools size by pages, not by
+    worst-case rows.
     """
 
     def __init__(self, session, *, n_slots: int = 4, chunk: int = 8,
@@ -243,9 +269,29 @@ class ServingRuntime:
                  fault_hook: Optional[FaultHook] = None,
                  straggler_hook: Optional[StragglerHook] = None,
                  shed_expired: bool = False,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None,
+                 n_rows: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 cold_horizon: Optional[int] = None,
+                 cold_codec: str = "int8"):
         if n_slots <= 0 or chunk <= 0:
             raise ValueError("n_slots and chunk must be >= 1")
+        self.paged = page_size is not None or n_pages is not None
+        if self.paged:
+            # --slots stays meaningful as a *budget* alias: the dense pool
+            # held n_slots·max_len positions, so that is the page budget
+            self.page_size = page_size or 16
+            self.n_pages = (n_pages if n_pages is not None
+                            else max(1, n_slots * max_len // self.page_size))
+            self.max_pages = -(-max_len // self.page_size)
+            # rows bound concurrency; pages bound memory — default to one
+            # row per page so short requests can fill the whole budget
+            n_slots = n_rows if n_rows is not None else self.n_pages
+        self.prefix_cache = prefix_cache
+        self.cold_horizon = cold_horizon
+        self.cold_codec = cold_codec
         self.session = session
         self.n_slots = n_slots
         self.chunk = chunk
@@ -261,7 +307,7 @@ class ServingRuntime:
         # turns this into TokenChunk frames (repro.rpc.worker)
         self.on_progress: Optional[Callable[[int, List[int]], None]] = None
         self.clock = clock
-        self.pools: Dict[str, SlotPool] = {}
+        self.pools: Dict[str, Union[SlotPool, "PagedPool"]] = {}
         self.completions: List[Completion] = []
         self.stats = {"steps": 0, "chunks": 0, "admitted": 0,
                       "requeued": 0, "max_concurrent": 0, "retries": 0,
@@ -286,12 +332,23 @@ class ServingRuntime:
 
     # -- plan / pool resolution ----------------------------------------------
 
-    def _pool(self, exec_key: str) -> SlotPool:
+    def _pool(self, exec_key: str) -> Union[SlotPool, "PagedPool"]:
         key, plan = self.session.plan_for_key(exec_key)
         pool = self.pools.get(key)
         if pool is None:
-            pool = self.pools[key] = SlotPool(self.session, plan,
-                                              self.n_slots, self.max_len)
+            if self.paged:
+                from repro.serving.pages import PagedPool
+                pool = PagedPool(self.session, plan, self.n_slots,
+                                 n_pages=self.n_pages,
+                                 page_size=self.page_size,
+                                 max_pages=self.max_pages,
+                                 prefix_cache=self.prefix_cache,
+                                 cold_horizon=self.cold_horizon,
+                                 cold_codec=self.cold_codec)
+            else:
+                pool = SlotPool(self.session, plan, self.n_slots,
+                                self.max_len)
+            self.pools[key] = pool
         return pool
 
     def _free_slots(self) -> int:
@@ -326,6 +383,24 @@ class ServingRuntime:
         snap["expired"] = self.queue.rejections.get("expired", 0)
         snap["failovers"] = (len(self.fault_hook.events)
                              if self.fault_hook is not None else 0)
+        if self.paged:
+            agg: Dict[str, Any] = {
+                "pages_total": 0, "pages_free": 0, "pages_committed": 0,
+                "prefix_hits": 0, "prefix_misses": 0, "full_hits": 0,
+                "partial_hits": 0, "cow_splits": 0, "cold_pages": 0,
+                "dequant_pages": 0, "prefix_entries": 0,
+                "prefix_evictions": 0, "admit_ms": 0.0}
+            for p in self.pools.values():
+                for k, v in p.page_stats().items():
+                    if k in agg:
+                        agg[k] += v
+            snap.update(agg)
+            snap["page_occupancy"] = (
+                1.0 - agg["pages_free"] / agg["pages_total"]
+                if agg["pages_total"] else 0.0)
+            looked = agg["prefix_hits"] + agg["prefix_misses"]
+            snap["prefix_hit_rate"] = (agg["prefix_hits"] / looked
+                                       if looked else 0.0)
         return snap
 
     # -- fleet support -------------------------------------------------------
@@ -433,8 +508,31 @@ class ServingRuntime:
 
     # -- admission -----------------------------------------------------------
 
+    def _page_feasible(self) -> int:
+        """How many queue-head requests (EDF order) the paged pool could
+        commit pages for right now — the admission bound the scheduler
+        sees instead of raw free rows."""
+        if not self.pools:
+            return self.n_slots           # first pool allocates fresh/empty
+        avail = max(p.alloc.available()
+                    + (p.prefix.reclaimable() if p.prefix is not None else 0)
+                    for p in self.pools.values())
+        k = 0
+        for req in sorted(self.queue,
+                          key=lambda r: (r.deadline(), r.arrival_ts)):
+            need = -(-req.total_len // self.page_size)
+            if need > avail:
+                break
+            avail -= need
+            k += 1
+        return k
+
     def _admit(self, now: float) -> Optional[MicroBatch]:
         free = self._free_slots()
+        if self.paged:
+            # admit against free *pages*, not free rows: the policy table's
+            # plan_batch sees only what the page budget can commit to
+            free = min(free, self._page_feasible())
         mb = self.scheduler.next_batch(self.queue, free, idle=self.idle,
                                        now=now)
         if mb is None:
@@ -442,6 +540,12 @@ class ServingRuntime:
         pool = self._pool(mb.exec_key)
         free_ids = pool.free_slots()
         for req, slot in zip(mb.requests, free_ids):
+            if self.paged and not pool.can_admit(req):
+                # feasibility was estimated across pools / before this
+                # micro-batch's own commitments — recheck per request
+                self.queue.put(req, force=True)
+                self.stats["requeued"] += 1
+                continue
             act = pool.admit(req, slot, mb.exec_key, mb.extrapolated, now)
             self.stats["admitted"] += 1
             self.stats["wire_bytes"] += act.wire_bytes

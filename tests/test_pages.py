@@ -1,0 +1,282 @@
+"""Paged KV pool: allocator/COW/commitment invariants, prefix-cache
+token-exactness vs sequential ``session.generate``, cold-page codec round
+trips, and the one-executable regression for the paged chunk."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_fallback import given, settings, st
+from repro.api import ExecutionPlan, InferenceSession
+from repro.api import generation as gen
+from repro.serving import (PageAllocator, PagedPool, PagesExhausted,
+                           ServingRuntime)
+
+
+@pytest.fixture(scope="module")
+def session():
+    s = InferenceSession.from_config(
+        "llama3.2-1b", reduced={"vocab_size": 64},
+        plans=[ExecutionPlan.local(), ExecutionPlan.prism_sim(L=4, cr=9.9)])
+    s.profile(backend="simulated")
+    return s
+
+
+def _prompt(T0, seed=0):
+    return np.random.RandomState(seed).randint(1, 64, T0)
+
+
+def _served(rt, reqs):
+    done = rt.run()
+    got = {c.request_id: c.tokens for c in done}
+    return [got[r.id] for r in reqs]
+
+
+# --- allocator property tests ----------------------------------------------
+
+@given(st.lists(st.integers(0, 999), min_size=1, max_size=80),
+       st.integers(1, 12))
+@settings(deadline=None, max_examples=25)
+def test_allocator_churn_never_leaks_or_double_frees(ops, n_pages):
+    """Random alloc/retain/release churn: the free list and the refcounts
+    always partition the pages, and releasing every holder drains the pool
+    back to fully free."""
+    alloc = PageAllocator(n_pages)
+    holders = {}
+    for op in ops:
+        act = op % 3
+        if act == 0 and alloc.available() >= 1:
+            alloc.commit(1)
+            pid = alloc.alloc(1)[0]
+            assert pid not in holders
+            holders[pid] = 1
+        elif act in (1, 2) and holders:
+            pid = sorted(holders)[op % len(holders)]
+            if act == 1:
+                alloc.retain(pid)
+                holders[pid] += 1
+            else:
+                alloc.release(pid)
+                holders[pid] -= 1
+                if holders[pid] == 0:
+                    del holders[pid]
+        alloc.check()
+        assert alloc.refs == holders
+    for pid, n in list(holders.items()):
+        for _ in range(n):
+            alloc.release(pid)
+    alloc.check()
+    assert len(alloc.free) == n_pages
+    assert not alloc.refs and alloc.committed == 0
+
+
+def test_allocator_rejects_double_free_and_overcommit():
+    alloc = PageAllocator(4)
+    alloc.commit(2)
+    a, b = alloc.alloc(2)
+    alloc.release(a)
+    with pytest.raises(KeyError):
+        alloc.release(a)                       # double free
+    with pytest.raises(PagesExhausted):
+        alloc.commit(4)                        # only 3 free, 0 uncommitted? 3
+    alloc.release(b)
+    with pytest.raises(RuntimeError):
+        alloc.alloc(1)                         # draws past the commitment
+
+
+# --- serving token-exactness ------------------------------------------------
+
+def test_paged_runtime_token_exact_vs_generate(session):
+    """The acceptance bar: every request served through the paged pool
+    (greedy AND sampled, unaligned prompt lengths, on-demand page growth
+    across chunks) matches ``session.generate`` token-for-token."""
+    rt = ServingRuntime(session, chunk=3, max_len=32, page_size=8,
+                        n_pages=16, n_rows=3)
+    reqs = []
+    for i, (T0, n_new, temp) in enumerate(
+            [(4, 6, 0.0), (9, 5, 1.0), (13, 7, 0.0), (6, 4, 1.0),
+             (16, 5, 0.0), (5, 9, 0.7)]):
+        reqs.append(rt.submit(_prompt(T0, seed=i), n_new, seed=i,
+                              temperature=temp))
+    outs = _served(rt, reqs)
+    for req, out in zip(reqs, outs):
+        ref = session.generate(jnp.asarray(req.prompt)[None], req.n_new,
+                               seed=req.seed, temperature=req.temperature)
+        np.testing.assert_array_equal(out, np.asarray(ref)[0])
+
+
+def test_paged_prism_pool_token_exact():
+    """Paged decode under a PRISM-routed plan (the prefill runs the plan's
+    exchange semantics; decode reads the paged pool) still matches the
+    per-request compiled generate on that plan."""
+    sess = InferenceSession.from_config(
+        "llama3.2-1b", reduced={"vocab_size": 64},
+        plans=[ExecutionPlan.prism_sim(L=2, cr=9.9)],
+        allow_modes=("prism",))
+    sess.profile(backend="simulated")
+    rt = ServingRuntime(sess, chunk=4, max_len=16, page_size=4, n_pages=12,
+                        n_rows=3)
+    reqs = [rt.submit(_prompt(5, seed=i), 5, seed=i,
+                      temperature=float(i % 2)) for i in range(4)]
+    outs = _served(rt, reqs)
+    plan = sess.plans["prism@9.9"]
+    for req, out in zip(reqs, outs):
+        ref = sess.generate(jnp.asarray(req.prompt)[None], req.n_new,
+                            plan=plan, seed=req.seed,
+                            temperature=req.temperature)
+        np.testing.assert_array_equal(out, np.asarray(ref)[0])
+
+
+def test_prefix_hits_token_exact_vs_unshared(session):
+    """Full hits (cached-logits first token + COW tail), partial hits
+    (suffix-only prefill over shared pages), and concurrent sharers must
+    all reproduce the unshared ``session.generate`` chain exactly."""
+    base = _prompt(13, seed=42)                # unaligned vs page_size=8
+    cases = [(list(base), 0.0),                # miss → inserts the entry
+             (list(base), 1.0),                # full hit, sampled
+             (list(base) + [7, 3, 9], 0.0),    # partial hit past the tail
+             (list(base) + [5], 0.8)]          # partial hit, sampled
+    rt = ServingRuntime(session, chunk=4, max_len=32, page_size=8,
+                        n_pages=24, n_rows=4)
+    outs, reqs = [], []
+    for i, (p, temp) in enumerate(cases):      # sequential: hits see entry
+        r = rt.submit(p, 5, seed=50 + i, temperature=temp)
+        reqs.append(r)
+        outs.append(_served(rt, [r])[0])
+    for (p, temp), req, out in zip(cases, reqs, outs):
+        ref = session.generate(jnp.asarray([p]), 5, seed=req.seed,
+                               temperature=temp)
+        np.testing.assert_array_equal(out, np.asarray(ref)[0])
+    pool = next(iter(rt.pools.values()))
+    assert pool.stats["full_hits"] == 1
+    assert pool.stats["partial_hits"] == 2
+    assert pool.stats["cow_splits"] >= 3       # every unaligned-tail share
+    pool.alloc.check()
+
+
+def test_prefix_sharing_saves_pages_and_prefill(session):
+    """N requests extending one cached prefix: page use stays far below
+    N x prompt pages (full pages are shared, only tails split), and no
+    full-length prefill executable runs for the sharers."""
+    base = list(_prompt(16, seed=7))           # exactly 2 pages @ ps=8
+    rt = ServingRuntime(session, chunk=4, max_len=32, page_size=8,
+                        n_pages=24, n_rows=6)
+    r0 = rt.submit(base, 4, seed=0)
+    _served(rt, [r0])                          # entry now cached
+    before = gen.build_count()
+    reqs = [rt.submit(base + [10 + j], 4, seed=j) for j in range(4)]
+    outs = _served(rt, reqs)
+    pool = next(iter(rt.pools.values()))
+    assert pool.stats["partial_hits"] == 4
+    # sharers compile no new prefill: the 1-token suffix scan was built by
+    # nothing else, so allow exactly the first sharer's suffix build
+    assert gen.build_count() - before <= 1
+    for j, (req, out) in enumerate(zip(reqs, outs)):
+        ref = session.generate(jnp.asarray([base + [10 + j]]), 4, seed=j)
+        np.testing.assert_array_equal(out, np.asarray(ref)[0])
+
+
+# --- admission is page-bounded ----------------------------------------------
+
+def test_admission_bounded_by_pages_not_rows(session):
+    """With plentiful rows but few pages, concurrency is capped by the page
+    budget (commitments), yet everything still completes via requeue."""
+    rt = ServingRuntime(session, chunk=4, max_len=32, page_size=8,
+                        n_pages=4, n_rows=8)   # 4 pages, 8 rows
+    # each request commits ceil((5+4)/8) = 2 pages → at most 2 in flight
+    reqs = [rt.submit(_prompt(5, seed=i), 4, seed=i) for i in range(5)]
+    outs = _served(rt, reqs)
+    assert rt.stats["max_concurrent"] <= 2
+    for req, out in zip(reqs, outs):
+        ref = session.generate(jnp.asarray(req.prompt)[None], req.n_new,
+                               seed=req.seed)
+        np.testing.assert_array_equal(out, np.asarray(ref)[0])
+    pool = next(iter(rt.pools.values()))
+    pool.alloc.check()
+    assert pool.alloc.committed == 0           # all commitments returned
+
+
+def test_paged_pool_rejects_oversized_and_occupied(session):
+    plan = session.plans["local"]
+    pool = PagedPool(session, plan, 2, n_pages=4, page_size=4, max_pages=4)
+    from repro.serving import Request
+    big = Request(_prompt(4), n_new=20, arrival_ts=0.0)   # 24 > 16 positions
+    with pytest.raises(ValueError):
+        pool.admit(big, 0, "local", False, 0.0)
+    with pytest.raises(ValueError):
+        PagedPool(session, plan, 2, n_pages=2, page_size=4, max_pages=4)
+
+
+def test_evicting_all_requests_frees_every_page(session):
+    """Serve → drain → drop prefix entries: the pool must return to fully
+    free with zero refcounts and zero commitments (no leak across the
+    admit/ensure/evict/COW lifecycle)."""
+    rt = ServingRuntime(session, chunk=4, max_len=32, page_size=8,
+                        n_pages=16, n_rows=4)
+    base = list(_prompt(13, seed=3))
+    for i, p in enumerate([base, base + [1, 2], list(_prompt(6, seed=4))]):
+        r = rt.submit(p, 4, seed=i)
+        _served(rt, [r])
+    pool = next(iter(rt.pools.values()))
+    pool.alloc.check()
+    for digest in list(pool.prefix.entries):
+        pool.prefix.evict_entry(digest)
+    pool.alloc.check()
+    assert len(pool.alloc.free) == pool.n_pages
+    assert not pool.alloc.refs and pool.alloc.committed == 0
+    assert (pool.page_table == pool.trash).all()
+
+
+# --- cold pages --------------------------------------------------------------
+
+def test_cold_pages_roundtrip_within_codec_tolerance(session):
+    """Quantize-to-cold then revive: page contents must come back within
+    the int8 codec's per-vector tolerance (scale = maxabs/127, plus the
+    pool dtype's own rounding)."""
+    rt = ServingRuntime(session, chunk=4, max_len=32, page_size=8,
+                        n_pages=16, n_rows=4, cold_horizon=1)
+    r0 = rt.submit(list(_prompt(12, seed=9)), 4, seed=0)
+    _served(rt, [r0])
+    pool = next(iter(rt.pools.values()))
+    entry = next(iter(pool.prefix.entries.values()))
+    idx = jnp.asarray(entry.pages(), jnp.int32)
+    before = [np.asarray(l[:, idx], np.float32)
+              for l in jax.tree_util.tree_leaves(pool.pool)]
+    pool.prefix.clock += 2                     # age the entry past horizon
+    pool._sweep_cold()
+    assert entry.cold and entry.payloads is not None
+    pool.alloc.check()
+    revived = pool._revive(entry)
+    assert revived is not None and not revived.cold
+    idx2 = jnp.asarray(revived.pages(), jnp.int32)
+    after = [np.asarray(l[:, idx2], np.float32)
+             for l in jax.tree_util.tree_leaves(pool.pool)]
+    for b, a in zip(before, after):
+        tol = np.abs(b).max(axis=-1, keepdims=True) * 0.02 + 1e-6
+        assert np.all(np.abs(a - b) <= tol)
+    # the revived entry serves a (lossy-tolerated) hit end to end
+    r1 = rt.submit(list(_prompt(12, seed=9)), 4, seed=5)
+    out = _served(rt, [r1])[0]
+    assert out.shape == (4,)
+    assert pool.stats["dequant_pages"] == len(entry.pages())
+
+
+# --- compilation discipline ---------------------------------------------------
+
+def test_paged_one_executable_per_shape(session):
+    """Admissions, page growth, and varying page tables must NOT build new
+    executables: one compiled paged chunk per (plan, rows, max_pages,
+    chunk), reused across runtimes of the same shape."""
+    def drive(seeds):
+        rt = ServingRuntime(session, chunk=3, max_len=32, page_size=8,
+                            n_pages=16, n_rows=3, prefix_cache=False)
+        reqs = [rt.submit(_prompt(5, seed=s), 4, seed=s) for s in seeds]
+        _served(rt, reqs)
+        return rt
+
+    drive([0, 1, 2, 3])                        # warm every executable
+    before = gen.build_count()
+    rt = drive([7, 8, 9, 10, 11])
+    assert gen.build_count() == before         # everything cache-hit
+    assert rt.stats["admitted"] == 5

@@ -454,3 +454,39 @@ def test_estimator_observe_transfer():
     assert est.mbps == pytest.approx(300.0)
     with pytest.raises(ValueError):
         est.observe_transfer(0, 10.0)
+
+
+# --- slot-pool key init (shared placeholder keys) ---------------------------
+
+def test_placeholder_keys_cached_per_size():
+    """Satellite: pools no longer rebuild jnp.stack([key(0)] * n) per
+    construction — one cached placeholder array per size, shared."""
+    from repro.serving.engine import _placeholder_keys
+    a = _placeholder_keys(4)
+    assert a is _placeholder_keys(4)           # same object, not a rebuild
+    assert a.shape == (4,)
+    assert _placeholder_keys(3) is not a
+
+
+def test_sampled_decode_deterministic_across_admit_order(session):
+    """Sharing placeholder key arrays must not couple requests: sampled
+    decode stays per-request deterministic whatever order (and into
+    whatever slot) requests are admitted."""
+    specs = [(_prompt(4, seed=i), 40 + i, 1.0) for i in range(4)]
+
+    def serve(order):
+        rt = ServingRuntime(session, n_slots=2, chunk=3, max_len=16)
+        reqs = {}
+        for i in order:
+            p, seed, temp = specs[i]
+            reqs[i] = rt.submit(p, 5, seed=seed, temperature=temp)
+        done = {c.request_id: c.tokens for c in rt.run()}
+        return {i: done[r.id] for i, r in reqs.items()}
+
+    a = serve([0, 1, 2, 3])
+    b = serve([3, 1, 0, 2])                    # different order, slots differ
+    for i in range(4):
+        np.testing.assert_array_equal(a[i], b[i])
+        ref = session.generate(jnp.asarray(specs[i][0])[None], 5,
+                               seed=specs[i][1], temperature=1.0)
+        np.testing.assert_array_equal(a[i], np.asarray(ref)[0])
