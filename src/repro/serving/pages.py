@@ -278,6 +278,16 @@ def _copy_page(pool, src, dst):
                                   pool)
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_pages(pool, idx, values):
+    """Scatter revived page contents into the pool.  Donated like
+    :func:`_copy_page`, so only the ``idx`` pages are written in place
+    instead of materializing a full pool-sized copy per leaf."""
+    return jax.tree_util.tree_map(
+        lambda leaf, v: leaf.at[:, idx].set(v.astype(leaf.dtype)),
+        pool, values)
+
+
 @jax.jit
 def _set_row(tok, lengths, keys, temps, slot, tok0, length, key, temp):
     """Write one slot's decode-state row.  The slot index is traced — eager
@@ -339,6 +349,8 @@ class PagedPool:
                       "dequant_pages": 0, "admit_ms": 0.0}
         # benchmarks flip this on to charge prefill to admission wall time
         self.time_admits = False
+        # pages the in-flight admit alloc'd/retained (rollback journal)
+        self._acquired: List[int] = []
 
     # -- occupancy -----------------------------------------------------------
 
@@ -394,53 +406,95 @@ class PagedPool:
         total = self._need(req)
 
         entry = None
+        reserved = 0
         if self.prefix is not None:
             self.prefix.clock += 1
             entry = self.prefix.lookup(prompt)
             if entry is not None and entry.cold:
                 entry = self._revive(entry)
-            if entry is not None and not self._reserve(
-                    total - len(entry.full_pages)):
-                entry = None           # pressure: fall back to a miss
+            if entry is not None:
+                # Shield the entry from the LRU sweep _reserve may run:
+                # its last_used is otherwise bumped only by the hit
+                # handlers, so make_room could evict it out from under us
+                # and free the very pages the hit is about to retain.
+                entry.last_used = self.prefix.clock
+                reserved = total - len(entry.full_pages)
+                if not self._reserve(reserved):
+                    entry, reserved = None, 0  # pressure: fall back to miss
+                elif self.prefix.entries.get(entry.digest) is not entry:
+                    # make_room evicted it anyway (it was the only hot
+                    # entry); its cache-only pages are free again and the
+                    # hit is void — return the reservation, run as a miss
+                    self.alloc.uncommit(reserved)
+                    entry, reserved = None, 0
 
         if entry is None:
+            reserved = total
             if not self._reserve(total):
                 raise PagesExhausted(
                     f"admission needs {total} pages; "
                     f"{self.alloc.available()} available")
-            pages, first_tok, prompt_wire = self._admit_miss(
-                prompt, P0, slot, req)
-        elif entry.n_tok == T0:
-            pages, first_tok = self._admit_full_hit(entry, slot, req, T0)
-            prompt_wire = 0            # no prefill ran, nothing crossed wire
-        else:
-            pages, first_tok = self._admit_partial_hit(
-                entry, prompt, P0, slot, req)
-            prompt_wire = T0 - entry.n_tok
 
-        self.page_table[slot, :len(pages)] = pages
-        self.row_pages[slot] = pages
-        self.row_committed[slot] = total - P0
-        self.row_len[slot] = T0
-        wire = plan_wire_bytes(self.plan, self.session.cfg, 1, prompt_wire) \
-            if prompt_wire else 0
-        act = _Active(request=req, admitted_ts=now, exec_key=exec_key,
-                      extrapolated=extrapolated, first_tok=first_tok,
-                      codec=(self.plan.effective_codec if wire else ""),
-                      wire_bytes=wire)
-        self.slots[slot] = act
-        if self.time_admits:
-            jax.block_until_ready(self.tok)
-            self.stats["admit_ms"] += 1e3 * (time.perf_counter() - t0)
+        committed0 = self.alloc.committed
+        self._acquired = []
+        try:
+            if entry is None:
+                pages, first_tok, prompt_wire = self._admit_miss(
+                    prompt, P0, slot, req)
+            elif entry.n_tok == T0:
+                pages, first_tok = self._admit_full_hit(entry, slot, req, T0)
+                prompt_wire = 0        # no prefill ran, nothing crossed wire
+            else:
+                pages, first_tok = self._admit_partial_hit(
+                    entry, prompt, P0, slot, req)
+                prompt_wire = T0 - entry.n_tok
+
+            self.page_table[slot, :len(pages)] = pages
+            self.row_pages[slot] = pages
+            self.row_committed[slot] = total - P0
+            self.row_len[slot] = T0
+            wire = plan_wire_bytes(self.plan, self.session.cfg, 1,
+                                   prompt_wire) if prompt_wire else 0
+            act = _Active(request=req, admitted_ts=now, exec_key=exec_key,
+                          extrapolated=extrapolated, first_tok=first_tok,
+                          codec=(self.plan.effective_codec if wire else ""),
+                          wire_bytes=wire)
+            self.slots[slot] = act
+            if self.time_admits:
+                jax.block_until_ready(self.tok)
+                self.stats["admit_ms"] += 1e3 * (time.perf_counter() - t0)
+        except BaseException:
+            self._rollback_admit(slot, reserved, committed0)
+            raise
+        finally:
+            self._acquired = []
         if self.prefix is not None and self.cold_horizon is not None:
             self._sweep_cold()
         return act
+
+    def _rollback_admit(self, slot: int, reserved: int,
+                        committed0: int) -> None:
+        """Undo a failed admission: release every page it alloc'd or
+        retained, return the unspent part of its reservation, and clear
+        the row, so one bad admit cannot shrink the pool for everyone
+        after it.  References the prefix cache took for itself (via
+        ``insert``) are the cache's own and stay."""
+        drawn = committed0 - self.alloc.committed
+        for pid in self._acquired:
+            self.alloc.release(pid)
+        self.alloc.uncommit(reserved - drawn)
+        self.slots[slot] = None
+        self.row_pages[slot] = []
+        self.row_committed[slot] = 0
+        self.row_len[slot] = 0
+        self.page_table[slot, :] = self.trash
 
     def _admit_miss(self, prompt, P0: int, slot: int, req: Request):
         """Prefill at page-aligned length, scatter into fresh pages, and
         remember the prompt in the prefix cache."""
         ps = self.page_size
         ids = self.alloc.alloc(P0)
+        self._acquired.extend(ids)
         tok0, cache, key, logits = self.session.prime_slot(
             jnp.asarray(prompt[None]), total_len=P0 * ps, plan=self.plan,
             seed=req.seed, temperature=req.temperature, with_logits=True)
@@ -460,6 +514,7 @@ class PagedPool:
         request writes at its frontier inside this page, so it gets a
         private copy (sharers keep reading the original)."""
         dst = self.alloc.alloc(1)[0]
+        self._acquired.append(dst)
         self.pool = _copy_page(self.pool, entry.tail, dst)
         self.stats["cow_splits"] += 1
         return dst
@@ -473,6 +528,7 @@ class PagedPool:
         pages = []
         for pid in entry.full_pages:
             self.alloc.retain(pid)
+            self._acquired.append(pid)
             pages.append(pid)
         if entry.tail is not None:
             pages.append(self._cow_tail(entry))
@@ -497,10 +553,13 @@ class PagedPool:
         pages = []
         for pid in entry.full_pages:
             self.alloc.retain(pid)
+            self._acquired.append(pid)
             pages.append(pid)
         if entry.tail is not None:
             pages.append(self._cow_tail(entry))
-        pages.extend(self.alloc.alloc(P0 - len(pages)))
+        grown = self.alloc.alloc(P0 - len(pages))
+        self._acquired.extend(grown)
+        pages.extend(grown)
         self.page_table[slot, :P0] = pages
         tok0, self.pool, key, logits = self.session.suffix_paged(
             self.pool, jnp.asarray(self.page_table[slot:slot + 1]),
@@ -624,10 +683,10 @@ class PagedPool:
         ids = self.alloc.alloc(n, committed=False)
         idx = jnp.asarray(ids, jnp.int32)
         leaves, treedef = jax.tree_util.tree_flatten(self.pool)
-        self.pool = jax.tree_util.tree_unflatten(treedef, [
-            leaf.at[:, idx].set(
-                codec.decode(p, spec, dtype=leaf.dtype).astype(leaf.dtype))
+        values = jax.tree_util.tree_unflatten(treedef, [
+            codec.decode(p, spec, dtype=leaf.dtype)
             for leaf, p in zip(leaves, e.payloads)])
+        self.pool = _write_pages(self.pool, idx, values)
         e.full_pages = list(ids[:e.n_full])
         e.tail = ids[e.n_full] if e.had_tail else None
         e.cold, e.payloads = False, None

@@ -208,6 +208,81 @@ def test_paged_pool_rejects_oversized_and_occupied(session):
         PagedPool(session, plan, 2, n_pages=2, page_size=4, max_pages=4)
 
 
+def test_hit_under_eviction_pressure_falls_back_to_miss(session):
+    """Regression: a prefix hit whose page reservation forces make_room to
+    evict the very entry it just matched (cache-only pages ARE the
+    reclaimable headroom counted by can_admit) must fall back to the miss
+    path — not retain freed pages or COW-copy from a recycled one."""
+    base = list(_prompt(13, seed=21))          # 2 pages @ ps=8 (tail=5)
+    rt = ServingRuntime(session, chunk=4, max_len=24, page_size=8,
+                        n_pages=3, n_rows=2)
+    r0 = rt.submit(base, 4, seed=0)
+    _served(rt, [r0])
+    pool = next(iter(rt.pools.values()))
+    assert len(pool.prefix.entries) == 1
+    # extends the cached prefix, but reserving its non-shared pages (2)
+    # exceeds the 1 free page, so _reserve must evict the entry itself
+    r1 = rt.submit(base + [7, 3, 9], 4, seed=1)
+    out = _served(rt, [r1])[0]
+    ref = session.generate(jnp.asarray([base + [7, 3, 9]]), 4, seed=1)
+    np.testing.assert_array_equal(out, np.asarray(ref)[0])
+    assert pool.prefix.evictions >= 1          # the hit really was voided
+    assert pool.stats["prefix_misses"] == 2
+    pool.alloc.check()
+    assert pool.alloc.committed == 0
+
+
+def test_failed_miss_admission_rolls_back_commitments(session, monkeypatch):
+    """Regression: an exception after _reserve (device failure mid-prefill)
+    must return the reservation and every alloc'd page, leaving the pool
+    as admissible as before the attempt."""
+    from repro.serving import Request
+    plan = session.plans["local"]
+    pool = PagedPool(session, plan, 2, n_pages=8, page_size=4, max_pages=8)
+    monkeypatch.setattr(pool.session, "prime_slot",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            RuntimeError("device fell over")))
+    req = Request(_prompt(5, seed=1), n_new=4, arrival_ts=0.0)
+    with pytest.raises(RuntimeError, match="device fell over"):
+        pool.admit(req, 0, "local", False, 0.0)
+    pool.alloc.check()
+    assert pool.alloc.committed == 0 and not pool.alloc.refs
+    assert pool.slots[0] is None
+    assert (pool.page_table == pool.trash).all()
+    # the pool still serves after the failed attempt (nothing leaked)
+    monkeypatch.undo()
+    act = pool.admit(req, 0, "local", False, 0.0)
+    assert act is pool.slots[0]
+    pool.evict(0)
+    pool.alloc.check()
+    assert pool.alloc.committed == 0
+
+
+def test_failed_hit_admission_keeps_cache_consistent(session, monkeypatch):
+    """Regression: when a partial-hit admission dies after retaining shared
+    pages and COW-splitting the tail, rollback must drop only the request's
+    references — the cached entry (and its refcounts) stay intact."""
+    from repro.serving import Request
+    base = list(_prompt(13, seed=33))
+    rt = ServingRuntime(session, chunk=4, max_len=32, page_size=8,
+                        n_pages=16, n_rows=4)
+    r0 = rt.submit(base, 4, seed=0)
+    _served(rt, [r0])
+    pool = next(iter(rt.pools.values()))
+    entry = next(iter(pool.prefix.entries.values()))
+    refs0 = dict(pool.alloc.refs)
+    monkeypatch.setattr(pool.session, "suffix_paged",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            RuntimeError("boom")))
+    req = Request(np.asarray(base + [5], np.int32), n_new=4, arrival_ts=0.0)
+    with pytest.raises(RuntimeError, match="boom"):
+        pool.admit(req, pool.free_slots()[0], "local", False, 0.0)
+    pool.alloc.check()
+    assert pool.alloc.refs == refs0            # request refs rolled back
+    assert pool.alloc.committed == 0
+    assert pool.prefix.entries.get(entry.digest) is entry
+
+
 def test_evicting_all_requests_frees_every_page(session):
     """Serve → drain → drop prefix entries: the pool must return to fully
     free with zero refcounts and zero commitments (no leak across the
