@@ -26,8 +26,11 @@ worker mid-run (``--kill``) to exercise drain + re-route, and writes
 
 ``--rpc`` swaps the virtual fleet for two real subprocess workers
 (``repro.rpc``) under a short real-clock Poisson load, gated on zero
-lost/shed requests, and writes ``BENCH_fleet_rpc.json`` with per-worker
-``measured: true`` codec-bandwidth provenance (CI runs this too).
+lost/shed requests, and writes ``BENCH_fleet_rpc.json`` with per-METRIC
+codec-bandwidth provenance (each (worker, codec) entry carries its own
+``modeled|estimated|measured`` label, read back from the unified
+``codec.decode_bw_bytes_per_s`` gauge; the gate requires every subprocess
+worker's entries to be ``measured``).  CI runs this too.
 
     PYTHONPATH=src python benchmarks/fleet_throughput.py \
         [--smoke] [--kill] [--rpc]
@@ -42,6 +45,29 @@ import numpy as np
 
 # eff-FLOP/s scale factors of the three boards (heterogeneous fleet)
 FLEET_FACTORS = {"edge-a": 1.0, "edge-b": 0.6, "edge-c": 0.35}
+
+
+def codec_bw_provenance(*registries):
+    """Per-metric codec-bandwidth provenance, read back from the unified
+    ``codec.decode_bw_bytes_per_s`` gauge: each (worker, codec) entry
+    carries its own ``modeled|estimated|measured`` label instead of the
+    old per-file ``measured: true/false`` flag."""
+    rank = {"modeled": 0, "estimated": 1, "measured": 2}
+    out = {}
+    for reg in registries:
+        for m in reg.metrics():
+            if m.name != "codec.decode_bw_bytes_per_s":
+                continue
+            lab = dict(m.labels)
+            worker = lab.get("worker", "?")
+            codec = lab.get("codec", "?")
+            prov = lab.get("provenance", "modeled")
+            cur = out.setdefault(worker, {}).get(codec)
+            # a later, better-grounded number wins (measured > estimated)
+            if cur is None or rank[prov] >= rank[cur["provenance"]]:
+                out[worker][codec] = {"bytes_per_s": float(m.value),
+                                      "provenance": prov}
+    return out
 
 
 def make_trace(rng, n_req: int, rate_hz: float, prompt_len: int,
@@ -139,13 +165,11 @@ def run(smoke: bool = True, kill: bool = False,
         "fleet_factors": FLEET_FACTORS,
         "kernel_backend": backend_info(),
         "codec_decode_bw_measured": reg.codec_bws,
-        # per-worker calibration provenance: sim workers carry eff_inf-
-        # scaled host estimates (measured: false); process-backed workers
-        # (--rpc) measure on their own process (measured: true)
-        "codec_bw_provenance": {
-            w.name: {"bws": dict(w.codec_bws),
-                     "measured": bool(w.codec_bws_measured)}
-            for w in reg},
+        # per-METRIC calibration provenance from the unified gauge: the
+        # host's own calibration is "measured", sim workers carry
+        # eff_inf-scaled host numbers ("estimated"); process-backed
+        # workers (--rpc) measure on their own process ("measured")
+        "codec_bw_provenance": codec_bw_provenance(reg.metrics),
         "fleet": fleet,
         "single": singles, "best_single": best_name,
         "speedup_tok_s": speedup,
@@ -206,16 +230,14 @@ def run_rpc(smoke: bool = True, out_path: str = "BENCH_fleet_rpc.json"):
                                 timeout_s=300.0)
         lats = [c.latency_ms for c in out["completions"]]
         snap = router.stats_snapshot()
-        provenance = {
-            w.name: {"bws": dict(w.codec_bws),
-                     "measured": bool(w.codec_bws_measured),
-                     "pid": w.proc.pid if w.proc else None}
-            for w in workers}
+        provenance = codec_bw_provenance(reg.metrics)
+        pids = {w.name: (w.proc.pid if w.proc else None) for w in workers}
         results = {
             "smoke": smoke, "rpc": True, "n_requests": n_req,
             "n_new": n_new, "arrival_rate_hz": 4.0,
             "kernel_backend": backend_info(),
             "codec_bw_provenance": provenance,
+            "worker_pids": pids,
             "served": len(out["completions"]), "shed": len(out["shed"]),
             "lost": snap["lost"], "served_tokens": out["served_tokens"],
             "makespan_s": out["makespan_s"],
@@ -245,9 +267,15 @@ def run_rpc(smoke: bool = True, out_path: str = "BENCH_fleet_rpc.json"):
     with open(out_path, "w") as f:
         json.dump(results, f, indent=1)
     print(f"wrote {out_path}")
+    # per-metric gate: every (worker, codec) entry for the subprocess
+    # workers must be "measured" — calibrated on the worker's own process
+    worker_names = {w.name for w in workers}
     ok = (results["served"] == n_req and results["shed"] == 0
           and results["lost"] == 0
-          and all(p["measured"] for p in provenance.values()))
+          and all(e["provenance"] == "measured"
+                  for wn, codecs in provenance.items()
+                  if wn in worker_names for e in codecs.values())
+          and all(wn in provenance for wn in worker_names))
     if not ok:
         print("FAIL: rpc fleet lost or shed requests, or calibration "
               "was not measured")

@@ -36,6 +36,7 @@ from repro.api.plan import ExecutionPlan
 from repro.core.perfmap import PerfEntry, PerfKey, PerfMap
 from repro.core.policy import (AdaptivePolicy, Decision, Objective,
                                ObjectiveLike, resolve_objective)
+from repro.obs import MetricsRegistry
 from repro.utils.bandwidth import BandwidthEstimator
 
 
@@ -44,13 +45,37 @@ class DispatchRecord:
     """One routed batch: what the policy decided and what actually ran."""
     batch: int
     bandwidth_mbps: float
-    decision: Decision
+    decision: Optional[Decision]   # None when rebuilt from a trace
     wall_ms: float
     exec_key: str = ""          # executable that actually ran
     substituted: bool = False   # True when the decided key had no executable
     extrapolated: bool = False  # batch was outside the profiled grid
     codec: str = ""             # exchange codec that ran ("" = no exchange)
     wire_bytes: int = 0         # modeled bytes-on-wire this dispatch moved
+
+
+def from_trace(spans) -> List[DispatchRecord]:
+    """Rebuild :class:`DispatchRecord` rows from ``dispatch`` spans, so a
+    span file (or a live tracer buffer) can feed
+    ``session.calibrate(records=from_trace(spans))`` — the trace becomes
+    the recalibration stream the ROADMAP's drift item consumes."""
+    out: List[DispatchRecord] = []
+    for sp in spans:
+        if sp.name != "dispatch" or sp.kind != "session" or sp.open:
+            continue
+        a = sp.attrs
+        if "exec_key" not in a or "batch" not in a:
+            continue
+        out.append(DispatchRecord(
+            batch=int(a["batch"]),
+            bandwidth_mbps=float(a.get("bandwidth_mbps", 0.0)),
+            decision=None, wall_ms=sp.duration_ms,
+            exec_key=str(a["exec_key"]),
+            substituted=bool(a.get("substituted", False)),
+            extrapolated=bool(a.get("extrapolated", False)),
+            codec=str(a.get("codec", "")),
+            wire_bytes=int(a.get("wire_bytes", 0))))
+    return out
 
 
 @dataclasses.dataclass
@@ -130,8 +155,13 @@ class InferenceSession:
         self.temperature = temperature
         self._allow = allow_modes
         self._policy: Optional[AdaptivePolicy] = None
+        # observability: the session owns a registry (link-bandwidth
+        # provenance gauges land here); a tracer is attached opt-in
+        self.metrics = MetricsRegistry()
+        self.tracer = None
         self._bwest = BandwidthEstimator(initial_bandwidth_mbps,
-                                         bandwidth_alpha)
+                                         bandwidth_alpha,
+                                         metrics=self.metrics)
         # plan → {(kind, *shape): compiled slot-pool executable}
         self._serve_execs: Dict[Any, Dict] = {}
         self._admit_fn = None
@@ -347,17 +377,55 @@ class InferenceSession:
         wall = (time.perf_counter() - t0) * 1e3
         wire = plan_wire_bytes(plan, self.cfg, batch_size,
                                self._input_tokens(batch_inputs))
+        codec = plan.effective_codec if wire else ""
         self.history.append(DispatchRecord(
             batch_size, self._bw, d, wall, exec_key=key,
             substituted=substituted, extrapolated=d.extrapolated,
-            codec=plan.effective_codec if wire else "", wire_bytes=wire))
+            codec=codec, wire_bytes=wire))
+        self.metrics.histogram("session.dispatch_ms").observe(wall)
+        if self.tracer is not None:
+            self._trace_dispatch(d, key, batch_size, wall, wire, codec,
+                                 substituted)
         return out
+
+    def _trace_dispatch(self, d: Decision, key: str, batch: int,
+                        wall_ms: float, wire: int, codec: str,
+                        substituted: bool) -> None:
+        """Record one closed ``dispatch`` span (carrying everything
+        :func:`from_trace` needs to rebuild a :class:`DispatchRecord`) plus
+        the decision's *modeled* staging/wire children — per-stage link
+        costs with ``modeled`` provenance, distinguishable from measured
+        spans by the ``modeled=True`` attr."""
+        tr = self.tracer
+        end = tr.clock()
+        start = end - wall_ms / 1e3
+        sp = tr.record("dispatch", start=start, end=end, kind="session",
+                       batch=batch, exec_key=key, codec=codec,
+                       wire_bytes=wire, bandwidth_mbps=self._bw,
+                       extrapolated=d.extrapolated, substituted=substituted)
+        exp = d.expected
+        if exp is not None and wire:
+            t = start
+            for name, ms in (("staging", exp.staging_ms),
+                             ("wire", exp.comm_ms)):
+                if ms and ms > 0:
+                    tr.record(name, start=t, end=t + ms / 1e3,
+                              kind="transport", trace_id=sp.trace_id,
+                              parent_id=sp.span_id, modeled=True)
+                    t += ms / 1e3
 
     # -- closed-loop recalibration -------------------------------------------
 
-    def calibrate(self, alpha: float = 0.3) -> CalibrationReport:
+    def calibrate(self, alpha: float = 0.3,
+                  records: Optional[Sequence[DispatchRecord]] = None
+                  ) -> CalibrationReport:
         """Fold observed dispatch wall times back into the performance map
         (EWMA per profiled entry) so the profile tracks runtime drift.
+
+        ``records`` overrides the consumption of ``self.history``: pass
+        ``from_trace(spans)`` to calibrate from a span stream (live tracer
+        or a reloaded ``--trace`` JSONL file) instead of this session's own
+        dispatch history; the history cursor is left untouched.
 
         Each uncalibrated :class:`DispatchRecord` whose batch size sits
         **exactly on the profiled grid** updates the entry of the executable
@@ -380,7 +448,10 @@ class InferenceSession:
         from repro.api.plan import split_key
         rep = CalibrationReport()
         table = self.policy.table(self.objective)
-        for rec in self.history[self._calibrated_upto:]:
+        own_history = records is None
+        if own_history:
+            records = self.history[self._calibrated_upto:]
+        for rec in records:
             rep.records += 1
             if rec.extrapolated:
                 rep.skipped_extrapolated += 1
@@ -432,7 +503,8 @@ class InferenceSession:
                 meta=dict(entry.meta,
                           calibrations=entry.meta.get("calibrations", 0) + 1)))
             rep.updated += 1
-        self._calibrated_upto = len(self.history)
+        if own_history:
+            self._calibrated_upto = len(self.history)
         if rep.updated:
             self._policy = None        # recompile tables against new costs
         return rep
@@ -455,15 +527,19 @@ class InferenceSession:
         (or the first registered one).
         """
         from repro.api import generation as gen
+        from repro.obs import maybe_span
         plan = self._plan_or_default(plan)
         T = self.temperature if temperature is None else temperature
         # cache by the full plan, not plan.key: distinct plans (e.g. two
         # prism_sim L values) can share a key but need distinct executables
-        return gen.generate(self.params, prompt_tokens, n_new, self.cfg,
-                            plan.to_exchange_config(),
-                            batch_extras=batch_extras, seed=seed,
-                            temperature=T, prefill_mode=prefill_mode,
-                            _cache=self._decode_execs.setdefault(plan, {}))
+        with maybe_span(self.tracer, "generate", kind="session",
+                        plan=plan.key, n_new=n_new):
+            return gen.generate(self.params, prompt_tokens, n_new, self.cfg,
+                                plan.to_exchange_config(),
+                                batch_extras=batch_extras, seed=seed,
+                                temperature=T, prefill_mode=prefill_mode,
+                                _cache=self._decode_execs.setdefault(plan,
+                                                                     {}))
 
     # -- slot-pool serving primitives (used by repro.serving) ----------------
 

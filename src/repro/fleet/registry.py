@@ -33,6 +33,7 @@ import time
 from typing import Callable, Dict, Iterator, List, Optional
 
 from repro.chaos.schedule import DispatchFault
+from repro.obs import MetricsRegistry, StatsDict, request_trace_id
 from repro.profiling.hardware import (JETSON_ORIN_NANO, WIFI_GLOO,
                                       HardwareProfile, LinkProfile)
 from repro.runtime.fault import HeartbeatMonitor, RetryPolicy
@@ -155,7 +156,8 @@ class WorkerHandle(Worker):
                  hardware: HardwareProfile = JETSON_ORIN_NANO,
                  link: LinkProfile = WIFI_GLOO,
                  runtime=None, n_slots: int = 4, chunk: int = 8,
-                 max_len: int = 256, queue_size: int = 64, sweep=None):
+                 max_len: int = 256, queue_size: int = 64, sweep=None,
+                 metrics: Optional[MetricsRegistry] = None, tracer=None):
         from repro.serving.engine import ServingRuntime
         self.name = name
         self.session = session
@@ -166,10 +168,25 @@ class WorkerHandle(Worker):
         self.profiled_count = 1 if session.perfmap is not None else 0
         self.runtime = runtime or ServingRuntime(
             session, n_slots=n_slots, chunk=chunk, max_len=max_len,
-            queue_size=queue_size)
+            queue_size=queue_size, metrics=metrics, tracer=tracer,
+            worker=name)
         self.queue = self.runtime.queue
         self.n_slots = self.runtime.n_slots
         self.runtime.chaos_name = name
+        if runtime is not None:
+            self.runtime.trace_worker = self.runtime.trace_worker or name
+
+    @property
+    def tracer(self):
+        return self.runtime.tracer
+
+    @tracer.setter
+    def tracer(self, tr) -> None:
+        self.runtime.tracer = tr
+
+    @property
+    def metrics(self):
+        return self.runtime.metrics
 
     @property
     def bandwidth(self) -> float:
@@ -268,7 +285,8 @@ class SimWorker(Worker):
                  allow_modes=("local", "prism"), sweep=None,
                  adaptive: bool = True, shed_expired: bool = False,
                  dispatch_timeout_s: Optional[float] = None,
-                 retry: Optional[RetryPolicy] = None):
+                 retry: Optional[RetryPolicy] = None,
+                 metrics: Optional[MetricsRegistry] = None, tracer=None):
         from repro.core.policy import AdaptivePolicy, resolve_objective
         self.name = name
         self.hardware = hardware
@@ -305,10 +323,15 @@ class SimWorker(Worker):
         self._busy_until = 0.0
         self._service_key = "local"
         self.completions: List[SimCompletion] = []
-        self.stats = {"steps": 0, "admitted": 0, "served": 0, "tokens": 0,
-                      "max_concurrent": 0, "busy_s": 0.0, "retries": 0,
-                      "timeouts": 0, "transport_errors": 0, "straggled": 0,
-                      "gave_up": 0}
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer              # spans get virtual timestamps
+        self.stats = StatsDict(
+            self.metrics, "fleet.worker",
+            {"steps": 0, "admitted": 0, "served": 0, "tokens": 0,
+             "max_concurrent": 0, "busy_s": 0.0, "retries": 0,
+             "timeouts": 0, "transport_errors": 0, "straggled": 0,
+             "gave_up": 0},
+            labels={"worker": name})
 
     def _sweep_perfmap(self):
         from repro.profiling import ProfileContext, SweepSpec, get_backend
@@ -370,6 +393,8 @@ class SimWorker(Worker):
                     self.stats["served"] += 1
                     self.stats["tokens"] += req.n_new
                     self._attempts.pop(req.id, None)
+                    if self.tracer is not None:
+                        self._trace_served(req, fin)
                 self.completions.extend(done)
                 self._in_service = []
                 self._consec_failures = 0
@@ -416,6 +441,29 @@ class SimWorker(Worker):
         self.stats["max_concurrent"] = max(self.stats["max_concurrent"],
                                            len(reqs))
 
+    def _trace_served(self, req: Request, fin: float) -> None:
+        """Record one served request's tree with *virtual* timestamps:
+        root ``request`` (arrival → fin), ``queue_wait`` (arrival or last
+        requeue → service start) and ``decode`` (modeled service).  Spans
+        are recorded only at completion, so a killed worker contributes
+        nothing and the re-serving worker owns the request's tree."""
+        if not req.trace_id:
+            req.trace_id = request_trace_id(req.id)
+        root = self.tracer.record(
+            "request", start=req.arrival_ts, end=fin, kind="fleet",
+            trace_id=req.trace_id, parent_id=req.parent_span or None,
+            worker=self.name, n_new=req.n_new)
+        qw0 = getattr(req, "requeued_at", req.arrival_ts)
+        self.tracer.record("queue_wait", start=qw0,
+                           end=self._service_start, kind="fleet",
+                           trace_id=req.trace_id, parent_id=root.span_id,
+                           worker=self.name)
+        self.tracer.record("decode", start=self._service_start, end=fin,
+                           kind="fleet", trace_id=req.trace_id,
+                           parent_id=root.span_id, worker=self.name,
+                           plan=self._service_key, tokens=req.n_new,
+                           modeled=True)
+
     def _charged_ms(self, table, bp) -> float:
         """Modeled per-token service: the planned decision's cost at the
         TRUE bandwidth (identical to ``expected.total_ms`` for an adaptive
@@ -445,8 +493,18 @@ class SimWorker(Worker):
                 self.stats["gave_up"] += 1
             else:
                 self.queue.put(req, force=True)
+                req.requeued_at = fin
                 retried.append(req.id)
                 self.stats["retries"] += 1
+            if self.tracer is not None:
+                if not req.trace_id:
+                    req.trace_id = request_trace_id(req.id)
+                self.tracer.record(
+                    "retry", start=fin, end=fin, kind="fleet",
+                    trace_id=req.trace_id,
+                    parent_id=req.parent_span or None, worker=self.name,
+                    reason=kind, attempt=n,
+                    gave_up=n > self.retry.max_retries)
         self._in_service = []
         self._fail_kind = None
         self._consec_failures += 1
@@ -527,16 +585,22 @@ class DeviceRegistry:
     def __init__(self, *, heartbeat_timeout_s: float = 10.0,
                  clock: Callable[[], float] = time.monotonic,
                  calibrate_codecs: bool = False,
-                 host_hardware: HardwareProfile = JETSON_ORIN_NANO):
+                 host_hardware: HardwareProfile = JETSON_ORIN_NANO,
+                 metrics: Optional[MetricsRegistry] = None):
         self.monitor = HeartbeatMonitor([], timeout_s=heartbeat_timeout_s,
                                         clock=clock)
         self.workers: Dict[str, Worker] = {}
         self._dead: set = set()
         self.host_hardware = host_hardware
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.codec_bws: Dict[str, float] = {}
         if calibrate_codecs:
             from repro.transport.codecs import calibrate_codec_bws
             self.codec_bws = calibrate_codec_bws()
+            for cname, bw in self.codec_bws.items():
+                self.metrics.observe_bandwidth(
+                    "codec.decode_bw_bytes_per_s", bw, "measured",
+                    codec=cname, worker="host")
 
     # -- membership ----------------------------------------------------------
 
@@ -571,6 +635,17 @@ class DeviceRegistry:
                 return dict(bws), True
         return self.device_codec_bws(worker), False
 
+    def _gauge_codec_bws(self, worker: Worker, bws: Dict[str, float],
+                         measured: bool) -> None:
+        """Per-device codec throughputs land in one provenance-labelled
+        gauge — ``measured`` when the worker benchmarked its own process
+        (RPC boundary), ``estimated`` for eff_inf-scaled host numbers."""
+        prov = "measured" if measured else "estimated"
+        for cname, bw in bws.items():
+            self.metrics.observe_bandwidth(
+                "codec.decode_bw_bytes_per_s", bw, prov,
+                codec=cname, worker=worker.name)
+
     def calibrate_worker(self, worker: Worker) -> Dict[str, float]:
         """Install the per-device codec calibration and re-profile the
         worker under it (no-op dict if neither the worker nor the host can
@@ -578,6 +653,7 @@ class DeviceRegistry:
         bws, measured = self._codec_bws_for(worker)
         worker.codec_bws_measured = measured
         if bws:
+            self._gauge_codec_bws(worker, bws, measured)
             worker.reprofile(codec_bws=bws)
         return bws
 
@@ -637,6 +713,9 @@ class DeviceRegistry:
                             or hasattr(worker, "measure_codec_bws")):
             worker.codec_bws, worker.codec_bws_measured = \
                 self._codec_bws_for(worker)
+            if worker.codec_bws:
+                self._gauge_codec_bws(worker, worker.codec_bws,
+                                      worker.codec_bws_measured)
         if reprofile:
             worker.reprofile(codec_bws=worker.codec_bws or None)
         return worker

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core.policy import resolve_objective
 from repro.fleet.registry import DeviceRegistry, Worker
+from repro.obs import MetricsRegistry, StatsDict, request_trace_id
 from repro.runtime.fault import CircuitBreaker, RetryPolicy
 from repro.serving.queue import QueueFull, Request
 from repro.serving.scheduler import FailoverEvent
@@ -130,7 +131,8 @@ class FleetRouter:
     def __init__(self, registry: DeviceRegistry, *, objective=None,
                  retry: Optional[RetryPolicy] = None,
                  breaker_threshold: int = 3, breaker_reset_s: float = 1.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 metrics: Optional[MetricsRegistry] = None, tracer=None):
         self.registry = registry
         self.objective = (resolve_objective(objective)
                           if objective is not None else None)
@@ -143,12 +145,23 @@ class FleetRouter:
         self.breakers: Dict[str, CircuitBreaker] = {}
         self.placements: List[PlacementRecord] = []
         self.events: List = []               # Failover + Readmission events
-        self.stats = {"routed": 0, "rejected": 0, "rerouted": 0,
-                      "lost": 0, "fanout": 0, "retries": 0,
-                      "timeouts": 0, "transport_errors": 0, "gave_up": 0,
-                      "placement_retries": 0, "breaker_opened": 0,
-                      "readmitted": 0,
-                      "rejections": {}}      # shed counts by reason
+        # observability: the router shares the registry's metrics registry
+        # by default, so one dump covers router + workers + codec gauges
+        self.metrics = (metrics if metrics is not None
+                        else registry.metrics)
+        self.tracer = tracer
+        self._trace_roots: Dict[int, object] = {}   # request id → route span
+        # virtual drivers stash their clock here so spans recorded inside
+        # _check_faults get virtual, deterministic timestamps
+        self._now_hint: Optional[float] = None
+        self.stats = StatsDict(
+            self.metrics, "fleet.router",
+            {"routed": 0, "rejected": 0, "rerouted": 0,
+             "lost": 0, "fanout": 0, "retries": 0,
+             "timeouts": 0, "transport_errors": 0, "gave_up": 0,
+             "placement_retries": 0, "breaker_opened": 0,
+             "readmitted": 0,
+             "rejections": {}})      # shed counts by reason
 
     def breaker(self, name: str) -> CircuitBreaker:
         """This worker's circuit breaker (created closed on first use)."""
@@ -158,6 +171,15 @@ class FleetRouter:
             br = self.breakers[name] = CircuitBreaker(
                 fail_threshold=thresh, reset_timeout_s=reset)
         return br
+
+    def attach_tracer(self, tracer) -> None:
+        """One tracer for the whole fleet: router placement spans plus
+        every registered worker's serving spans land in the same buffer
+        (RPC workers additionally merge their subprocess's spans into
+        it)."""
+        self.tracer = tracer
+        for w in self.registry:
+            w.tracer = tracer
 
     # -- scoring -------------------------------------------------------------
 
@@ -249,7 +271,34 @@ class FleetRouter:
             rec = PlacementRecord(req.id, placed, ranked, reason=reason)
         self.placements.append(rec)
         self.stats["routed"] += 1
+        if self.tracer is not None:
+            self._trace_route(req, rec, now)
         return rec
+
+    def _trace_route(self, req: Request, rec: PlacementRecord,
+                     now: float) -> None:
+        """First placement opens the request's ``route`` root span and
+        hands its id to the worker via ``req.parent_span`` — every
+        downstream span (worker-side ``request`` tree, RPC dispatch, a
+        subprocess's shipped spans) parents under it, so kill → retry →
+        re-serve stays ONE tree.  Re-routes add a ``retry`` leaf."""
+        tr = self.tracer
+        if not req.trace_id:
+            req.trace_id = request_trace_id(req.id)
+        root = self._trace_roots.get(req.id)
+        if root is None:
+            root = tr.start("route", kind="fleet", trace_id=req.trace_id,
+                            parent_id=req.parent_span or None,
+                            at=req.arrival_ts, worker=rec.worker,
+                            reason=rec.reason)
+            self._trace_roots[req.id] = root
+            req.parent_span = root.span_id
+        else:
+            req.parent_span = root.span_id
+            tr.record("retry", start=now, end=now, kind="fleet",
+                      trace_id=req.trace_id, parent_id=root.span_id,
+                      worker=rec.worker, reason=rec.reason)
+            req.requeued_at = now
 
     def _shed(self, reason: str, msg: str):
         self.stats["rejected"] += 1
@@ -307,6 +356,12 @@ class FleetRouter:
             self._on_fault(w, fault, now)
         if done:
             self.breaker(w.name).record_success(now)
+            if self.tracer is not None:
+                for c in done:
+                    root = self._trace_roots.pop(c.request_id, None)
+                    if root is not None:
+                        self.tracer.finish(
+                            root, at=getattr(c, "finished_ts", now))
         return done
 
     def _on_fault(self, w: Worker, fault, now: float) -> None:
@@ -402,6 +457,7 @@ class FleetRouter:
             if t == float("inf"):
                 break
             now = max(now, t)
+            self._now_hint = now      # virtual stamps for failover spans
             while evs and evs[0][0] <= now:
                 evs.pop(0)[1]()
             self._check_faults()
@@ -411,6 +467,7 @@ class FleetRouter:
                 offer(heapq.heappop(retry_q)[2])
             for w in self.registry.alive():
                 done.extend(self._step_worker(w, now))
+        self._now_hint = None
         shed.extend(req for _, _, req in sorted(retry_q))
         return {"completions": done, "shed": shed, "makespan_s": now,
                 "served_tokens": sum(c.n_tokens for c in done)}
@@ -492,6 +549,7 @@ class FleetRouter:
         newly = self.registry.check_dead()
         if not newly:
             return []
+        now = self._now_hint if self._now_hint is not None else self.clock()
         orphans: List[Request] = []
         for name in newly:
             orphans.extend(self.registry.get(name).drain_requests())
@@ -500,7 +558,7 @@ class FleetRouter:
                                                   r.arrival_ts)):
             try:
                 self.route(req, force=True, exclude=newly,
-                           reason="rerouted")
+                           reason="rerouted", now=now)
                 rerouted += 1
             except FleetRejected:
                 self.stats["lost"] += 1
@@ -508,6 +566,11 @@ class FleetRouter:
         self.events.append(FailoverEvent(
             dead=list(newly), survivors=len(self.registry.alive()),
             requeued=rerouted))
+        if self.tracer is not None:
+            self.tracer.record("failover", start=now, end=now, kind="fleet",
+                               trace_id="runtime:router",
+                               dead=",".join(sorted(newly)),
+                               requeued=rerouted)
         return newly
 
     def readmit(self, name: str, *, now: Optional[float] = None) -> Worker:

@@ -29,6 +29,39 @@ SIGINT.
 import argparse
 
 
+def _make_tracer(args):
+    if not (args.trace or args.metrics):
+        return None
+    from repro.obs import Tracer
+    return Tracer(name="fleet")
+
+
+def _dump_obs(args, tracer, registries, wall_ms=None):
+    """Exit-time observability dump shared by all three fleet modes:
+    JSONL span file (--trace), per-stage breakdown line, Prometheus text
+    (--metrics)."""
+    if tracer is None:
+        return
+    from repro.obs.export import (format_breakdown, prometheus_text,
+                                  write_spans_jsonl)
+    spans = tracer.spans
+    if args.trace:
+        write_spans_jsonl(spans, args.trace)
+        print(f"trace: {len(spans)} spans "
+              f"({len(tracer.trace_ids())} traces) -> {args.trace}")
+    # breakdown over request trees only: runtime-level traces
+    # (decode_chunk, failover) overlap decode residency and would
+    # double-count against the summed request wall
+    req_spans = [s for s in spans if s.trace_id.startswith("req:")]
+    print(format_breakdown(req_spans, wall_ms=wall_ms))
+    if args.metrics:
+        uniq = []
+        for r in registries:
+            if r is not None and all(r is not u for u in uniq):
+                uniq.append(r)
+        print(prometheus_text(*uniq), end="")
+
+
 def _sim_main(args):
     import numpy as np
 
@@ -66,6 +99,9 @@ def _sim_main(args):
     router = FleetRouter(reg, objective=args.objective,
                          retry=RetryPolicy(max_retries=args.retries),
                          clock=lambda: 0.0)
+    tracer = _make_tracer(args)
+    if tracer is not None:
+        router.attach_tracer(tracer)
     events = []
     chaos = None
     if args.chaos:
@@ -111,6 +147,9 @@ def _sim_main(args):
     if chaos is not None:
         print(f"chaos log: {len(chaos.log)} applied events, "
               f"{chaos.pending_faults} never consumed")
+    _dump_obs(args, tracer,
+              [router.metrics] + [w.metrics for w in reg],
+              wall_ms=sum(lats))
     print("FLEET OK")
 
 
@@ -135,6 +174,9 @@ def _real_main(args):
     reg.add(WorkerHandle("w1", s1, n_slots=4, max_len=64))
     reg.add(WorkerHandle("w2", s2, n_slots=4, max_len=64))
     router = FleetRouter(reg)
+    tracer = _make_tracer(args)
+    if tracer is not None:
+        router.attach_tracer(tracer)
 
     rng = np.random.RandomState(args.seed)
     prompts = [rng.randint(0, 64, args.prompt_len) for _ in range(6)]
@@ -162,6 +204,8 @@ def _real_main(args):
           f"dead {snap['dead']}")
     if ok != len(placed):
         raise SystemExit("FAIL: failover was not token-exact")
+    _dump_obs(args, tracer,
+              [router.metrics] + [w.metrics for w in reg])
     print("FLEET OK (real workers, token-exact failover)")
 
 
@@ -220,6 +264,9 @@ def _rpc_main(args):
 
         router = FleetRouter(reg, objective=args.objective,
                              retry=RetryPolicy(max_retries=args.retries))
+        tracer = _make_tracer(args)
+        if tracer is not None:
+            router.attach_tracer(tracer)
         rng = np.random.RandomState(args.seed)
         n_req = min(args.requests, 24)
         arrivals = np.cumsum(rng.exponential(1.0 / min(args.arrival_rate,
@@ -261,6 +308,9 @@ def _rpc_main(args):
         if chaos is not None:
             print(f"chaos log: {len(chaos.log)} applied events, "
                   f"{chaos.pending_faults} never consumed")
+        _dump_obs(args, tracer,
+                  [router.metrics] + [w.metrics for w in workers],
+                  wall_ms=sum(lats))
         print("RPC FLEET OK")
     finally:
         signal.signal(signal.SIGINT, old_handler)
@@ -310,6 +360,13 @@ def main():
                          "are realized on the wire")
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="write the request span trace as JSONL to PATH "
+                         "and print a per-stage breakdown at exit "
+                         "(works in sim, --real and --rpc modes)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="dump the unified metrics registries "
+                         "(Prometheus text format) at exit")
     args = ap.parse_args()
     if args.rpc:
         _rpc_main(args)

@@ -1,0 +1,27 @@
+"""repro.obs — end-to-end observability for the serving stack.
+
+* :mod:`repro.obs.trace` — span tracing with deterministic virtual-clock
+  support and cross-process (RPC) trace propagation.
+* :mod:`repro.obs.metrics` — typed counter/gauge/histogram registry
+  behind every tier's ``stats``/``stats_snapshot()``.
+* :mod:`repro.obs.export` — JSONL span files, Prometheus text dumps,
+  and the Table-2-style stage-breakdown line.
+
+See ``docs/api.md`` → "Observability" for the span taxonomy, the
+metric naming scheme and usage examples.
+"""
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      PROVENANCES, StatsDict)
+from .trace import (STAGES, Span, Tracer, breakdown, build_tree,
+                    maybe_span, request_breakdown, request_trace_id,
+                    span_from_dict, span_to_dict, tree_lines)
+from .export import (format_breakdown, prometheus_text, read_spans_jsonl,
+                     write_spans_jsonl)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "PROVENANCES",
+    "StatsDict", "STAGES", "Span", "Tracer", "breakdown", "build_tree",
+    "maybe_span", "request_breakdown", "request_trace_id", "span_from_dict",
+    "span_to_dict", "tree_lines", "format_breakdown", "prometheus_text",
+    "read_spans_jsonl", "write_spans_jsonl",
+]

@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.chaos.schedule import DispatchFault
 from repro.core.perfmap import PerfMap
+from repro.obs import MetricsRegistry, StatsDict, request_trace_id
 from repro.core.policy import AdaptivePolicy, resolve_objective
 from repro.fleet.registry import Worker, scaled_hardware
 from repro.profiling.hardware import (JETSON_ORIN_NANO, WIFI_GLOO,
@@ -88,7 +89,9 @@ class RpcWorker(Worker):
                  connect_timeout_s: float = 300.0,
                  profile_timeout_s: float = 600.0,
                  poll_s: float = 0.002,
-                 spawn: bool = True, shed_expired: bool = False):
+                 spawn: bool = True, shed_expired: bool = False,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer=None):
         self.name = name
         self.arch = arch
         self._spawn_args = dict(arch=arch, vocab=vocab, seed=seed,
@@ -135,12 +138,22 @@ class RpcWorker(Worker):
         self._last_ping = 0.0
         self._last_rx = time.monotonic()
         self.remote_stats: Dict[str, Any] = {}
-        self.stats = {"submitted": 0, "served": 0, "tokens": 0,
-                      "streamed_tokens": 0, "retries": 0, "reconnects": 0,
-                      "timeouts": 0, "transport_errors": 0, "straggled": 0,
-                      "stale_completions": 0, "remote_errors": 0,
-                      "frames_in": 0, "frames_out": 0,
-                      "bytes_in": 0, "bytes_out": 0}
+        self.metrics = metrics or MetricsRegistry()
+        # per-request client-side "dispatch" span: opened when the request
+        # goes over the wire, its span id rides SubmitRequest.parent_span
+        # so the subprocess worker's spans land under it, finished when the
+        # completion surfaces (or the request drains away)
+        self.tracer = tracer
+        self._dispatch_spans: Dict[int, Any] = {}
+        self.stats = StatsDict(
+            self.metrics, "rpc.client",
+            {"submitted": 0, "served": 0, "tokens": 0,
+             "streamed_tokens": 0, "retries": 0, "reconnects": 0,
+             "timeouts": 0, "transport_errors": 0, "straggled": 0,
+             "stale_completions": 0, "remote_errors": 0,
+             "frames_in": 0, "frames_out": 0,
+             "bytes_in": 0, "bytes_out": 0},
+            labels={"worker": name})
         if address is None and spawn:
             self._spawn()
         self._connect()
@@ -324,8 +337,18 @@ class RpcWorker(Worker):
             self.completions.append(comp)
             self.stats["served"] += 1
             self.stats["tokens"] += len(comp.tokens)
+            if self.tracer is not None:
+                # re-parenting is implicit: the worker stamped its spans
+                # with SubmitRequest.parent_span, so ingest lands them
+                # under this client's dispatch span
+                self.tracer.ingest(msg.spans)
+                d = self._dispatch_spans.pop(msg.request_id, None)
+                if d is not None:
+                    self.tracer.finish(d, at=comp.finished_ts)
         elif isinstance(msg, TokenChunk):
             self.stats["streamed_tokens"] += int(np.asarray(msg.tokens).size)
+            if self.tracer is not None and msg.spans:
+                self.tracer.ingest(msg.spans)
         elif isinstance(msg, Heartbeat):
             self.remote_stats = dict(msg.stats)
         elif isinstance(msg, ErrorMsg):
@@ -335,6 +358,7 @@ class RpcWorker(Worker):
                 self._faults.append(DispatchFault(    # re-place it
                     worker=self.name, kind="error", t=time.monotonic(),
                     retried=(), gave_up=(req,)))
+                self._close_dispatch_span(msg.request_id, "remote_error")
 
     # -- Worker interface: placement inputs ----------------------------------
 
@@ -370,11 +394,24 @@ class RpcWorker(Worker):
         return self.queue.put(req, force=force)
 
     def _submit_msg(self, req: Request) -> SubmitRequest:
-        return SubmitRequest(
+        msg = SubmitRequest(
             request_id=req.id, n_new=req.n_new, seed=req.seed,
             temperature=req.temperature, slo_ms=req.slo_ms,
             arrival_ts=req.arrival_ts,
             prompt=np.asarray(req.prompt, np.int32))
+        if self.tracer is not None:
+            if not req.trace_id:
+                req.trace_id = request_trace_id(req.id)
+            d = self._dispatch_spans.get(req.id)
+            if d is None:
+                d = self.tracer.start(
+                    "dispatch", kind="rpc", trace_id=req.trace_id,
+                    parent_id=req.parent_span or None, worker=self.name,
+                    request_id=req.id)
+                self._dispatch_spans[req.id] = d
+            msg.trace_id = req.trace_id
+            msg.parent_span = d.span_id
+        return msg
 
     def step(self, now: Optional[float] = None) -> List[Completion]:
         """One client round: realize armed chaos, flush the outbox, keep
@@ -447,6 +484,14 @@ class RpcWorker(Worker):
 
     # -- failure handling ----------------------------------------------------
 
+    def _close_dispatch_span(self, request_id: int, reason: str) -> None:
+        if self.tracer is None:
+            return
+        d = self._dispatch_spans.pop(request_id, None)
+        if d is not None and d.open:
+            d.attrs["outcome"] = reason
+            self.tracer.finish(d)
+
     def _on_wire_error(self, err: TransportError, mono: float) -> None:
         self._drop_sock()
         self._consec += 1
@@ -456,6 +501,16 @@ class RpcWorker(Worker):
         self._faults.append(DispatchFault(
             worker=self.name, kind=kind, t=mono,
             retried=tuple(self._owned), gave_up=()))
+        if self.tracer is not None:
+            # the reconnect will re-submit these under the same dispatch
+            # span; the retry leaf marks the wire fault in the request tree
+            for rid, req in self._owned.items():
+                d = self._dispatch_spans.get(rid)
+                self.tracer.record(
+                    "retry", start=mono, end=mono, kind="rpc",
+                    trace_id=req.trace_id or request_trace_id(rid),
+                    parent_id=d.span_id if d is not None else None,
+                    worker=self.name, reason=kind, attempt=self._consec)
         # no dead-process short-circuit: a killed worker is discovered the
         # way a crashed remote one would be — reconnects genuinely fail,
         # each failure feeds the breaker, and only an exhausted retry
@@ -480,6 +535,8 @@ class RpcWorker(Worker):
         reqs = self.queue.drain()
         reqs.extend(self._owned.values())
         self._owned.clear()
+        for req in reqs:
+            self._close_dispatch_span(req.id, "drained")
         return reqs
 
     def pop_faults(self) -> List[DispatchFault]:

@@ -290,6 +290,13 @@ class SubmitRequest(Message):
     codec: str = "identity"
     codec_l: int = 0
     codec_param: int = 0
+    # trace context (added post-v1; unknown header fields are ignored by
+    # older builds, so the version stays 1): the worker stamps its spans
+    # with trace_id and parents them under parent_span — the client-side
+    # dispatch span — so one request yields one tree across the process
+    # boundary.
+    trace_id: str = ""
+    parent_span: str = ""
     prompt: Optional[np.ndarray] = None
     TENSORS = {"prompt": "@codec"}
 
@@ -300,6 +307,10 @@ class TokenChunk(Message):
     KIND = 4
     request_id: int = 0
     start: int = 0
+    # spans the worker finished since the last chunk for this request
+    # (span_to_dict docs); empty for untraced runs and ignored by old
+    # clients.
+    spans: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
     tokens: Optional[np.ndarray] = None
     TENSORS = {"tokens": "identity"}
 
@@ -314,6 +325,9 @@ class CompletionMsg(Message):
     codec: str = ""
     wire_bytes: int = 0
     extrapolated: bool = False
+    # remaining finished spans for this request (those not already shipped
+    # on TokenChunk frames)
+    spans: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
     tokens: Optional[np.ndarray] = None
     TENSORS = {"tokens": "identity"}
 

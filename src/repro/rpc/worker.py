@@ -31,6 +31,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.obs import MetricsRegistry, StatsDict, Tracer, span_to_dict
 from repro.rpc import wire
 from repro.rpc.wire import (
     Calibrate, CalibrateResult, CompletionMsg, Drain, DrainResult, ErrorMsg,
@@ -59,8 +60,10 @@ class WorkerServer:
         self.hardware = hardware
         self.link = link
         self.sweep = sweep or SweepSpec()
+        self.metrics = MetricsRegistry()
         self.runtime = ServingRuntime(session, n_slots=n_slots, chunk=chunk,
-                                      max_len=max_len, queue_size=queue_size)
+                                      max_len=max_len, queue_size=queue_size,
+                                      metrics=self.metrics, worker=name)
         self.runtime.on_progress = self._on_progress
         # exactly-once bookkeeping: id -> cached CompletionMsg (None while
         # the request is still queued/in flight)
@@ -68,10 +71,19 @@ class WorkerServer:
         self._streamed: Dict[int, int] = {}    # id -> chunk tokens sent
         self._conn: Optional[socket.socket] = None
         self._shutdown = False
-        self.stats = {"frames_in": 0, "frames_out": 0, "bytes_in": 0,
-                      "bytes_out": 0, "submits": 0, "dup_submits": 0,
-                      "calibrations": 0, "profiles": 0, "reconnects": 0,
-                      "frame_errors": 0}
+        # tracing is demand-driven: stays None (zero cost) until a traced
+        # SubmitRequest arrives, then spans ship back on TokenChunk /
+        # CompletionMsg frames exactly once each
+        self.tracer: Optional[Tracer] = None
+        self._trace_ids: Dict[int, str] = {}     # id -> trace id
+        self._shipped: Dict[int, set] = {}       # id -> span ids sent
+        self.stats = StatsDict(
+            self.metrics, "rpc.server",
+            {"frames_in": 0, "frames_out": 0, "bytes_in": 0,
+             "bytes_out": 0, "submits": 0, "dup_submits": 0,
+             "calibrations": 0, "profiles": 0, "reconnects": 0,
+             "frame_errors": 0},
+            labels={"worker": name})
 
     # -- streaming -----------------------------------------------------------
 
@@ -87,7 +99,25 @@ class WorkerServer:
             return
         self._streamed[request_id] = sent + len(fresh)
         self._send(TokenChunk(request_id=request_id, start=1 + sent,
+                              spans=self._fresh_spans(request_id),
                               tokens=np.asarray(fresh, np.int32)))
+
+    def _fresh_spans(self, request_id: int):
+        """Finished spans of this request's trace not yet shipped — each
+        span rides exactly one frame (the client ingest dedups anyway)."""
+        if self.tracer is None:
+            return []
+        tid = self._trace_ids.get(request_id)
+        if not tid:
+            return []
+        shipped = self._shipped.setdefault(request_id, set())
+        out = []
+        for sp in self.tracer.trace(tid):
+            if sp.open or sp.span_id in shipped:
+                continue
+            shipped.add(sp.span_id)
+            out.append(span_to_dict(sp))
+        return out
 
     # -- plumbing ------------------------------------------------------------
 
@@ -172,9 +202,12 @@ class WorkerServer:
                         finished_ts=comp.finished_ts, codec=comp.codec,
                         wire_bytes=comp.wire_bytes,
                         extrapolated=comp.extrapolated,
+                        spans=self._fresh_spans(comp.request_id),
                         tokens=np.asarray(comp.tokens, np.int32))
                     self._seen[comp.request_id] = done
                     self._streamed.pop(comp.request_id, None)
+                    self._shipped.pop(comp.request_id, None)
+                    self._trace_ids.pop(comp.request_id, None)
                     self._send(done)
 
     # -- message handlers ----------------------------------------------------
@@ -214,6 +247,15 @@ class WorkerServer:
                       temperature=msg.temperature,
                       arrival_ts=msg.arrival_ts or self.runtime.clock(),
                       id=msg.request_id)     # preserve the fleet-wide id
+        if msg.trace_id:
+            # the client is tracing: adopt its trace context so this
+            # process's spans re-parent under the client dispatch span
+            if self.tracer is None:
+                self.tracer = Tracer(name=f"rpc:{self.name}")
+                self.runtime.tracer = self.tracer
+            req.trace_id = msg.trace_id
+            req.parent_span = msg.parent_span
+            self._trace_ids[msg.request_id] = msg.trace_id
         self.runtime.submit_request(req)
 
     def _on_Heartbeat(self, msg: Heartbeat) -> None:
@@ -245,6 +287,8 @@ class WorkerServer:
         for r in reqs:
             self._seen.pop(r.id, None)     # re-routes elsewhere; forget it
             self._streamed.pop(r.id, None)
+            self._shipped.pop(r.id, None)
+            self._trace_ids.pop(r.id, None)
         self._send(DrainResult(request_ids=[r.id for r in reqs]))
 
     def _on_SetBandwidth(self, msg: SetBandwidth) -> None:

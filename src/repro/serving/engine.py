@@ -24,6 +24,7 @@ batches) or :class:`ServingRuntime` (request traffic).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import time
@@ -37,6 +38,7 @@ from repro.configs.base import ModelConfig
 from repro.core.exchange import ExchangeConfig
 from repro.models import registry
 from repro.models import transformer as tfm
+from repro.obs import MetricsRegistry, StatsDict, maybe_span, request_trace_id
 from repro.serving.queue import Request, RequestQueue
 from repro.serving.scheduler import (AdaptiveScheduler, FaultHook,
                                      MicroBatch, StragglerHook)
@@ -66,6 +68,8 @@ def build_decode_step(cfg: ModelConfig, xcfg: ExchangeConfig) -> Callable:
 
 # canonical home is repro.api.generation; re-exported for legacy imports
 from repro.api.generation import sample_token  # noqa: E402,F401
+
+_NULL_CTX = contextlib.nullcontext()
 
 
 @functools.lru_cache(maxsize=None)
@@ -131,6 +135,7 @@ class _Active:
     tokens: List[int] = dataclasses.field(default_factory=list)
     codec: str = ""                        # exchange codec of the plan
     wire_bytes: int = 0                    # modeled per-request wire bytes
+    decode_start: float = 0.0              # tracer stamp: admission done
 
     @property
     def emitted(self) -> int:
@@ -159,6 +164,8 @@ class SlotPool:
         self.plan = plan
         self.n_slots = n_slots
         self.max_len = max_len
+        self.tracer = None                 # set by ServingRuntime._pool
+        self.trace_worker = ""
         self.cache = session.init_slot_pool(n_slots, max_len)
         self.tok = jnp.zeros((n_slots,), jnp.int32)
         self.lengths = jnp.zeros((n_slots,), jnp.int32)
@@ -188,14 +195,19 @@ class SlotPool:
                 f"request needs {req.total_len} positions but the pool is "
                 f"sized for {self.max_len}; raise ServingRuntime(max_len=)")
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-        tok0, cache, key = self.session.prime_slot(
-            prompt, total_len=self.max_len, plan=self.plan, seed=req.seed,
-            temperature=req.temperature)
-        (self.cache, self.tok, self.lengths, self.keys, self.temps) = \
-            self.session.admit_slot(self.cache, self.tok, self.lengths,
-                                    self.keys, self.temps, cache, slot,
-                                    tok0, req.prompt_len, key,
-                                    req.temperature)
+        with maybe_span(self.tracer, "prefill", kind="serving",
+                        worker=self.trace_worker,
+                        prompt_len=req.prompt_len):
+            tok0, cache, key = self.session.prime_slot(
+                prompt, total_len=self.max_len, plan=self.plan,
+                seed=req.seed, temperature=req.temperature)
+        with maybe_span(self.tracer, "admit", kind="serving",
+                        worker=self.trace_worker, slot=slot):
+            (self.cache, self.tok, self.lengths, self.keys, self.temps) = \
+                self.session.admit_slot(self.cache, self.tok, self.lengths,
+                                        self.keys, self.temps, cache, slot,
+                                        tok0, req.prompt_len, key,
+                                        req.temperature)
         from repro.transport import plan_wire_bytes
         wire = plan_wire_bytes(self.plan, self.session.cfg, 1,
                                req.prompt_len)
@@ -275,7 +287,9 @@ class ServingRuntime:
                  n_rows: Optional[int] = None,
                  prefix_cache: bool = True,
                  cold_horizon: Optional[int] = None,
-                 cold_codec: str = "int8"):
+                 cold_codec: str = "int8",
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer=None, worker: str = ""):
         if n_slots <= 0 or chunk <= 0:
             raise ValueError("n_slots and chunk must be >= 1")
         self.paged = page_size is not None or n_pages is not None
@@ -309,10 +323,24 @@ class ServingRuntime:
         self.clock = clock
         self.pools: Dict[str, Union[SlotPool, "PagedPool"]] = {}
         self.completions: List[Completion] = []
-        self.stats = {"steps": 0, "chunks": 0, "admitted": 0,
-                      "requeued": 0, "max_concurrent": 0, "retries": 0,
-                      "straggled": 0,
-                      "wire_bytes": 0}      # modeled bytes-on-wire admitted
+        # observability: every scalar counter lives in the registry under
+        # serving.<key>; the tracer is opt-in (None = zero-cost guards)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer
+        self.trace_worker = worker
+        self._req_spans: Dict[int, Any] = {}   # open per-request root spans
+        self._requeue_ts: Dict[int, float] = {}
+        # hot-path handles: resolved once, not per chunk/completion
+        self._chunk_hist = self.metrics.histogram("serving.chunk_ms")
+        self._latency_hist = self.metrics.histogram(
+            "serving.request_latency_ms")
+        self.stats = StatsDict(
+            self.metrics, "serving",
+            {"steps": 0, "chunks": 0, "admitted": 0,
+             "requeued": 0, "max_concurrent": 0, "retries": 0,
+             "straggled": 0,
+             "wire_bytes": 0},      # modeled bytes-on-wire admitted
+            labels={"worker": worker} if worker else None)
 
     # -- request intake ------------------------------------------------------
 
@@ -349,7 +377,14 @@ class ServingRuntime:
                 pool = SlotPool(self.session, plan, self.n_slots,
                                 self.max_len)
             self.pools[key] = pool
+        pool.tracer = self.tracer        # may be attached after pools exist
+        pool.trace_worker = self.trace_worker
         return pool
+
+    def _run_trace(self) -> str:
+        """Trace id for runtime-level spans (decode chunks, failovers) that
+        belong to no single request."""
+        return f"runtime:{self.trace_worker or 'serving'}"
 
     def _free_slots(self) -> int:
         used = sum(p.n_active for p in self.pools.values())
@@ -422,9 +457,10 @@ class ServingRuntime:
         """One scheduling + decode round; returns completions it produced."""
         self.stats["steps"] += 1
         now = self.clock()
-        self._check_faults()
+        self._check_faults(now)
         self._admit(now)
         done: List[Completion] = []
+        tr = self.tracer
         for key, pool in self.pools.items():
             if pool.n_active == 0:
                 continue
@@ -435,10 +471,16 @@ class ServingRuntime:
                     # the chunk's exchange failed before any token was
                     # committed: nothing to roll back, retry next step
                     self.stats["retries"] += 1
+                    if tr is not None:
+                        tr.record("retry", start=now, end=now,
+                                  kind="serving", trace_id=self._run_trace(),
+                                  worker=self.trace_worker, plan=key,
+                                  reason="chaos_error")
                     continue
                 if fault is not None and fault.kind == "straggle":
                     straggle = max(fault.value, 1.0)
                     self.stats["straggled"] += 1
+            t0 = self.clock()
             wall_ms = pool.decode_chunk(self.chunk)
             self.stats["chunks"] += 1
             self._observe_stragglers(pool, wall_ms * straggle)
@@ -447,6 +489,12 @@ class ServingRuntime:
                     if act is not None:
                         self.on_progress(act.request.id, act.tokens)
             fin = self.clock()
+            if tr is not None:
+                tr.record("decode_chunk", start=t0, end=fin, kind="serving",
+                          trace_id=self._run_trace(),
+                          worker=self.trace_worker, plan=key,
+                          active=pool.n_active, steps=self.chunk)
+                self._chunk_hist.observe(wall_ms)
             for i, act in enumerate(pool.slots):
                 if act is not None and act.done:
                     pool.evict(i)
@@ -458,8 +506,25 @@ class ServingRuntime:
                         slo_ms=act.request.slo_ms,
                         extrapolated=act.extrapolated,
                         codec=act.codec, wire_bytes=act.wire_bytes))
+                    if tr is not None:
+                        self._finish_request(act, fin)
         self.completions.extend(done)
         return done
+
+    def _finish_request(self, act: _Active, fin: float) -> None:
+        """Close a finished request's trace: one ``decode`` residency leaf
+        (admission-complete → finished) plus the root ``request`` span."""
+        req = act.request
+        root = self._req_spans.pop(req.id, None)
+        tid = req.trace_id or request_trace_id(req.id)
+        self.tracer.record(
+            "decode", start=act.decode_start or act.admitted_ts,
+            end=fin, kind="serving", trace_id=tid,
+            parent_id=root.span_id if root is not None else None,
+            worker=self.trace_worker, tokens=req.n_new)
+        if root is not None:
+            self.tracer.finish(root, at=fin)
+        self._latency_hist.observe(1e3 * (fin - req.arrival_ts))
 
     def run(self, max_steps: int = 100_000) -> List[Completion]:
         """Serve until the queue and every pool are empty."""
@@ -508,6 +573,23 @@ class ServingRuntime:
 
     # -- admission -----------------------------------------------------------
 
+    def _request_root(self, req: Request):
+        """Open (or reuse, on re-admission after a fault) the per-request
+        root span.  ``req.parent_span`` — set by a fleet router or carried
+        over the RPC wire — parents the whole tree under the client's
+        dispatch span."""
+        if not req.trace_id:
+            req.trace_id = request_trace_id(req.id)
+        root = self._req_spans.get(req.id)
+        if root is None:
+            root = self.tracer.start(
+                "request", kind="serving", trace_id=req.trace_id,
+                parent_id=req.parent_span or None,
+                worker=self.trace_worker, at=req.arrival_ts,
+                n_new=req.n_new, prompt_len=req.prompt_len)
+            self._req_spans[req.id] = root
+        return root
+
     def _page_feasible(self) -> int:
         """How many queue-head requests (EDF order) the paged pool could
         commit pages for right now — the admission bound the scheduler
@@ -539,19 +621,38 @@ class ServingRuntime:
             return None
         pool = self._pool(mb.exec_key)
         free_ids = pool.free_slots()
+        tr = self.tracer
         for req, slot in zip(mb.requests, free_ids):
             if self.paged and not pool.can_admit(req):
                 # feasibility was estimated across pools / before this
                 # micro-batch's own commitments — recheck per request
                 self.queue.put(req, force=True)
+                self._requeue_ts[req.id] = now
                 self.stats["requeued"] += 1
                 continue
-            act = pool.admit(req, slot, mb.exec_key, mb.extrapolated, now)
+            root = None
+            if tr is not None:
+                root = self._request_root(req)
+                # end at *this* request's admission start, not the admit
+                # pass entry: earlier requests' prefills in the same pass
+                # are still queueing time for this one
+                tr.record("queue_wait",
+                          start=self._requeue_ts.pop(req.id,
+                                                     req.arrival_ts),
+                          end=tr.clock(), kind="serving",
+                          trace_id=req.trace_id,
+                          parent_id=root.span_id, worker=self.trace_worker)
+            with tr.active(root) if tr is not None else _NULL_CTX:
+                act = pool.admit(req, slot, mb.exec_key, mb.extrapolated,
+                                 now)
+            if tr is not None:
+                act.decode_start = tr.clock()
             self.stats["admitted"] += 1
             self.stats["wire_bytes"] += act.wire_bytes
         overflow = mb.requests[len(free_ids):]
         for req in overflow:               # should not happen; be safe
             self.queue.put(req, force=True)
+            self._requeue_ts[req.id] = now
         self.stats["max_concurrent"] = max(
             self.stats["max_concurrent"],
             sum(p.n_active for p in self.pools.values()))
@@ -563,20 +664,28 @@ class ServingRuntime:
         if self.fault_hook is not None:
             self.fault_hook.beat(node)
 
-    def _check_faults(self) -> None:
+    def _check_faults(self, now: Optional[float] = None) -> None:
         if self.fault_hook is None:
             return
         dead = self.fault_hook.check()
         if not dead:
             return
+        now = self.clock() if now is None else now
         requeued = 0
         for pool in self.pools.values():
             for req in pool.drain():       # re-admit from scratch; these
                 # were already admitted once — the bound must not drop them
                 self.queue.put(req, force=True)
+                self._requeue_ts[req.id] = now
                 requeued += 1
         self.stats["requeued"] += requeued
         self.fault_hook.record(dead, requeued)
+        if self.tracer is not None:
+            self.tracer.record("failover", start=now, end=now,
+                               kind="serving", trace_id=self._run_trace(),
+                               worker=self.trace_worker,
+                               dead=",".join(sorted(dead)),
+                               requeued=requeued)
 
     def _observe_stragglers(self, pool: SlotPool, wall_ms: float) -> None:
         if self.straggler_hook is None:

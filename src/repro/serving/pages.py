@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import maybe_span
 from repro.serving.queue import Request
 
 
@@ -344,6 +345,8 @@ class PagedPool:
         self.keys = _placeholder_keys(n_rows)
         self.temps = jnp.zeros((n_rows,), jnp.float32)
         self.slots: List[Optional[Any]] = [None] * n_rows
+        self.tracer = None                 # set by ServingRuntime._pool
+        self.trace_worker = ""
         self.stats = {"prefix_hits": 0, "prefix_misses": 0, "full_hits": 0,
                       "partial_hits": 0, "cow_splits": 0, "cold_pages": 0,
                       "dequant_pages": 0, "admit_ms": 0.0}
@@ -495,15 +498,21 @@ class PagedPool:
         ps = self.page_size
         ids = self.alloc.alloc(P0)
         self._acquired.extend(ids)
-        tok0, cache, key, logits = self.session.prime_slot(
-            jnp.asarray(prompt[None]), total_len=P0 * ps, plan=self.plan,
-            seed=req.seed, temperature=req.temperature, with_logits=True)
-        (self.pool, self.tok, self.lengths, self.keys, self.temps) = \
-            self.session.admit_paged(self.pool, self.tok, self.lengths,
-                                     self.keys, self.temps, cache,
-                                     jnp.asarray(ids, jnp.int32), slot,
-                                     tok0, len(prompt), key,
-                                     req.temperature)
+        with maybe_span(self.tracer, "prefill", kind="serving",
+                        worker=self.trace_worker,
+                        prompt_len=int(prompt.shape[0]), hit="miss"):
+            tok0, cache, key, logits = self.session.prime_slot(
+                jnp.asarray(prompt[None]), total_len=P0 * ps,
+                plan=self.plan, seed=req.seed,
+                temperature=req.temperature, with_logits=True)
+        with maybe_span(self.tracer, "admit", kind="serving",
+                        worker=self.trace_worker, slot=slot, pages=P0):
+            (self.pool, self.tok, self.lengths, self.keys, self.temps) = \
+                self.session.admit_paged(self.pool, self.tok, self.lengths,
+                                         self.keys, self.temps, cache,
+                                         jnp.asarray(ids, jnp.int32), slot,
+                                         tok0, len(prompt), key,
+                                         req.temperature)
         if self.prefix is not None:
             self.stats["prefix_misses"] += 1
             self.prefix.insert(prompt, ids, logits, ps)
@@ -515,7 +524,10 @@ class PagedPool:
         private copy (sharers keep reading the original)."""
         dst = self.alloc.alloc(1)[0]
         self._acquired.append(dst)
-        self.pool = _copy_page(self.pool, entry.tail, dst)
+        with maybe_span(self.tracer, "cow_split", kind="serving",
+                        worker=self.trace_worker, src=int(entry.tail),
+                        dst=int(dst)):
+            self.pool = _copy_page(self.pool, entry.tail, dst)
         self.stats["cow_splits"] += 1
         return dst
 
@@ -532,11 +544,13 @@ class PagedPool:
             pages.append(pid)
         if entry.tail is not None:
             pages.append(self._cow_tail(entry))
-        (self.tok, self.lengths, self.keys, self.temps) = \
-            self.session.hit_paged(self.tok, self.lengths, self.keys,
-                                   self.temps, slot, entry.logits, T0,
-                                   jax.random.key(req.seed),
-                                   req.temperature)
+        with maybe_span(self.tracer, "admit", kind="serving",
+                        worker=self.trace_worker, slot=slot, hit="full"):
+            (self.tok, self.lengths, self.keys, self.temps) = \
+                self.session.hit_paged(self.tok, self.lengths, self.keys,
+                                       self.temps, slot, entry.logits, T0,
+                                       jax.random.key(req.seed),
+                                       req.temperature)
         entry.hits += 1
         entry.last_used = self.prefix.clock
         self.stats["prefix_hits"] += 1
@@ -561,10 +575,14 @@ class PagedPool:
         self._acquired.extend(grown)
         pages.extend(grown)
         self.page_table[slot, :P0] = pages
-        tok0, self.pool, key, logits = self.session.suffix_paged(
-            self.pool, jnp.asarray(self.page_table[slot:slot + 1]),
-            jnp.asarray(prompt[None, n:]), jnp.asarray([n], jnp.int32),
-            jax.random.key(req.seed), req.temperature, plan=self.plan)
+        with maybe_span(self.tracer, "prefill", kind="serving",
+                        worker=self.trace_worker, hit="partial",
+                        cached=int(n),
+                        prompt_len=int(prompt.shape[0])):
+            tok0, self.pool, key, logits = self.session.suffix_paged(
+                self.pool, jnp.asarray(self.page_table[slot:slot + 1]),
+                jnp.asarray(prompt[None, n:]), jnp.asarray([n], jnp.int32),
+                jax.random.key(req.seed), req.temperature, plan=self.plan)
         (self.tok, self.lengths, self.keys, self.temps) = _set_row(
             self.tok, self.lengths, self.keys, self.temps, slot, tok0[0, 0],
             len(prompt), key, float(req.temperature))
@@ -659,9 +677,13 @@ class PagedPool:
                 continue
             codec, spec = self._codec()
             idx = jnp.asarray(e.pages(), jnp.int32)
-            leaves, _ = jax.tree_util.tree_flatten(self.pool)
-            e.payloads = [codec.encode(leaf[:, idx].astype(jnp.float32),
-                                       spec) for leaf in leaves]
+            with maybe_span(self.tracer, "codec_encode", kind="serving",
+                            worker=self.trace_worker,
+                            codec=self.cold_codec,
+                            pages=int(idx.shape[0]), cold=True):
+                leaves, _ = jax.tree_util.tree_flatten(self.pool)
+                e.payloads = [codec.encode(leaf[:, idx].astype(jnp.float32),
+                                           spec) for leaf in leaves]
             e.n_full = len(e.full_pages)
             e.had_tail = e.tail is not None
             for pid in e.pages():
@@ -682,11 +704,14 @@ class PagedPool:
         codec, spec = self._codec()
         ids = self.alloc.alloc(n, committed=False)
         idx = jnp.asarray(ids, jnp.int32)
-        leaves, treedef = jax.tree_util.tree_flatten(self.pool)
-        values = jax.tree_util.tree_unflatten(treedef, [
-            codec.decode(p, spec, dtype=leaf.dtype)
-            for leaf, p in zip(leaves, e.payloads)])
-        self.pool = _write_pages(self.pool, idx, values)
+        with maybe_span(self.tracer, "codec_decode", kind="serving",
+                        worker=self.trace_worker, codec=self.cold_codec,
+                        pages=int(n), cold=True):
+            leaves, treedef = jax.tree_util.tree_flatten(self.pool)
+            values = jax.tree_util.tree_unflatten(treedef, [
+                codec.decode(p, spec, dtype=leaf.dtype)
+                for leaf, p in zip(leaves, e.payloads)])
+            self.pool = _write_pages(self.pool, idx, values)
         e.full_pages = list(ids[:e.n_full])
         e.tail = ids[e.n_full] if e.had_tail else None
         e.cold, e.payloads = False, None

@@ -49,6 +49,11 @@ class Request:
     temperature: float = 0.0
     arrival_ts: float = dataclasses.field(default_factory=time.monotonic)
     id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    # trace context: set by whichever tier first sees the request (router
+    # or runtime) and carried across the RPC wire so the subprocess
+    # worker's spans land in the same tree
+    trace_id: str = ""
+    parent_span: str = ""
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt)

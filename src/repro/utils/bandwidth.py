@@ -20,10 +20,20 @@ import numpy as np
 
 @dataclasses.dataclass
 class BandwidthEstimator:
-    """EWMA link-bandwidth estimate: ``bw ← α·obs + (1-α)·bw``."""
+    """EWMA link-bandwidth estimate: ``bw ← α·obs + (1-α)·bw``.
+
+    With a ``metrics`` registry attached, every observation also lands in
+    the ``link.bandwidth_mbps`` gauge with an explicit provenance label:
+    probe observations are ``estimated`` (someone's external estimate of
+    the link), transfer-derived ones are ``measured`` (bytes actually
+    moved over a measured wall), and ``reset`` pins are ``modeled``.
+    This replaces the old per-call-site unit/provenance ambiguity — the
+    label, not the file a number landed in, says where it came from.
+    """
 
     initial_mbps: float = 400.0
     alpha: float = 0.3
+    metrics: object = None             # Optional[MetricsRegistry]
 
     def __post_init__(self):
         if not 0.0 < self.alpha <= 1.0:
@@ -31,10 +41,17 @@ class BandwidthEstimator:
         self._mbps = float(self.initial_mbps)
         self._n = 0
 
-    def observe(self, mbps: float) -> float:
+    def _gauge(self, obs_mbps: float, provenance: str) -> None:
+        if self.metrics is not None:
+            self.metrics.observe_bandwidth("link.bandwidth_mbps", obs_mbps,
+                                           provenance)
+            self.metrics.gauge("link.bandwidth_ewma_mbps").set(self._mbps)
+
+    def observe(self, mbps: float, provenance: str = "estimated") -> float:
         """Fold one observation in; returns the updated estimate."""
         self._mbps = self.alpha * float(mbps) + (1 - self.alpha) * self._mbps
         self._n += 1
+        self._gauge(float(mbps), provenance)
         return self._mbps
 
     def observe_transfer(self, n_bytes: float, wall_ms: float) -> float:
@@ -46,12 +63,13 @@ class BandwidthEstimator:
             raise ValueError(f"transfer needs positive bytes and wall "
                              f"(got {n_bytes} B / {wall_ms} ms)")
         mbps = n_bytes * 8e-3 / wall_ms        # bytes/ms → Mbit/s
-        self.observe(mbps)
+        self.observe(mbps, provenance="measured")
         return mbps
 
     def reset(self, mbps: float) -> None:
         """Pin the estimate (e.g. a fresh probe after a re-mesh)."""
         self._mbps = float(mbps)
+        self._gauge(float(mbps), "modeled")
 
     @property
     def mbps(self) -> float:

@@ -1,0 +1,481 @@
+"""Observability tier: span tracing, the unified metrics registry, and
+the cross-process trace contract.
+
+The determinism tests drive a seeded chaos fleet on the virtual clock
+twice and compare the rendered span trees byte for byte — span ids are
+counters and every virtual driver stamps explicit timestamps, so any
+wall-clock or RNG leak into the trace path fails here.  The RPC tests
+prove the wire contract both ways: a pre-trace build ignores the new
+header fields (protocol version stays 1), and a traced client merges a
+worker's shipped spans into one request tree spanning the process
+boundary — including exactly-once span ingestion across a duplicate
+submit.
+"""
+import json
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api.session import from_trace
+from repro.chaos import ChaosController, FaultSchedule
+from repro.fleet import DeviceRegistry, FleetRouter, SimWorker, scaled_hardware
+from repro.obs import (MetricsRegistry, STAGES, StatsDict, Tracer,
+                       breakdown, build_tree, maybe_span, prometheus_text,
+                       read_spans_jsonl, request_breakdown,
+                       request_trace_id, span_to_dict, tree_lines,
+                       write_spans_jsonl)
+from repro.profiling import ProfileContext, SweepSpec, get_backend
+from repro.profiling.hardware import JETSON_ORIN_NANO
+from repro.rpc import FRAME_OVERHEAD, PROTOCOL_VERSION, recv_message, send_message
+from repro.rpc import wire
+from repro.rpc.wire import (_FRAME, CompletionMsg, Hello, HelloAck, Message,
+                            SubmitRequest, TokenChunk)
+from repro.runtime.fault import RetryPolicy
+from repro.serving.queue import Request
+
+
+def _prompt(T0, seed=0):
+    return np.random.RandomState(seed).randint(0, 64, T0)
+
+
+# one simulated sweep per hardware speed grade, shared across tests
+_PM_CACHE = {}
+
+
+def _sim_worker(name, factor=1.0, **kw):
+    if factor not in _PM_CACHE:
+        hw = scaled_hardware(JETSON_ORIN_NANO, factor)
+        pm = get_backend("simulated").profile(ProfileContext(hardware=hw),
+                                              SweepSpec())
+        _PM_CACHE[factor] = (hw, pm)
+    hw, pm = _PM_CACHE[factor]
+    return SimWorker(name, perfmap=pm, hardware=hw, **kw)
+
+
+def _fleet(names, **kw):
+    reg = DeviceRegistry(heartbeat_timeout_s=1e9)
+    for n in names:
+        reg.add(_sim_worker(n, **kw))
+    return reg
+
+
+# ---------------------------------------------------------------------------
+# tracer core
+# ---------------------------------------------------------------------------
+
+def test_span_ids_are_namespaced_counters():
+    tr = Tracer(name="t", clock=lambda: 0.0)
+    with tr.span("route", kind="fleet") as root:
+        with tr.span("queue_wait") as kid:
+            pass
+    assert root.span_id == "t:2" and kid.span_id == "t:3"  # t:1 = trace id
+    assert kid.parent_id == root.span_id
+    assert kid.trace_id == root.trace_id
+    assert not root.open and not kid.open
+
+
+def test_explicit_stamps_beat_the_clock():
+    tr = Tracer(name="t", clock=lambda: 99.0)
+    sp = tr.record("decode", start=1.0, end=1.5, kind="fleet",
+                   trace_id="req:0", worker="a", tokens=4)
+    assert sp.duration_ms == pytest.approx(500.0)
+    opened = tr.start("prefill", at=2.0, trace_id="req:0")
+    assert opened.open
+    tr.finish(opened, at=2.25)
+    assert opened.end == 2.25
+
+
+def test_maybe_span_is_nullcontext_when_disabled():
+    with maybe_span(None, "prefill") as sp:
+        assert sp is None
+    tr = Tracer(name="t", clock=lambda: 0.0)
+    with maybe_span(tr, "prefill") as sp:
+        assert sp is not None and sp.name == "prefill"
+
+
+def test_breakdown_counts_only_closed_leaf_stage_spans():
+    tr = Tracer(name="t", clock=lambda: 0.0)
+    root = tr.record("request", start=0.0, end=1.0, trace_id="req:0")
+    tr.record("queue_wait", start=0.0, end=0.2, trace_id="req:0",
+              parent_id=root.span_id)
+    # non-leaf decode (has a chunk child) must not double-count
+    dec = tr.record("decode", start=0.2, end=1.0, trace_id="req:0",
+                    parent_id=root.span_id)
+    tr.record("decode_chunk", start=0.2, end=0.6, trace_id="req:0",
+              parent_id=dec.span_id)
+    tr.start("prefill", at=0.0, trace_id="req:0",
+             parent_id=root.span_id)                       # open: skipped
+    bd = breakdown(tr.spans)
+    assert bd == {"queue_wait": pytest.approx(200.0),
+                  "decode_chunk": pytest.approx(400.0)}
+    assert list(bd) == [s for s in STAGES if s in bd]       # taxonomy order
+
+
+def test_build_tree_localizes_foreign_parents():
+    tr = Tracer(name="t", clock=lambda: 0.0)
+    sp = tr.record("request", start=0.0, end=1.0, trace_id="req:0",
+                   parent_id="elsewhere:1")
+    tree = build_tree([sp])
+    assert tree[None] == [sp]                # parent outside the view
+    lines = tree_lines([sp])
+    assert lines == ["request [serving] 1000.000ms"]
+
+
+def test_ingest_dedups_by_trace_and_span_id():
+    src = Tracer(name="w", clock=lambda: 0.0)
+    doc = span_to_dict(src.record("decode", start=0.0, end=0.1,
+                                  trace_id="req:1", worker="w"))
+    dst = Tracer(name="c", clock=lambda: 0.0)
+    assert dst.ingest([doc]) == 1
+    assert dst.ingest([doc]) == 0            # duplicate dropped
+    assert len(dst.trace("req:1")) == 1
+
+
+def test_spans_jsonl_roundtrip(tmp_path):
+    tr = Tracer(name="t", clock=lambda: 0.0)
+    tr.record("decode", start=0.5, end=1.0, trace_id="req:2", worker="a",
+              kind="fleet", tokens=3)
+    tr.start("prefill", at=2.0, trace_id="req:3")    # still open (end NaN)
+    path = str(tmp_path / "spans.jsonl")
+    assert write_spans_jsonl(tr.spans, path) == 2
+    back = read_spans_jsonl(path)
+    assert [s.trace_id for s in back] == ["req:2", "req:3"]
+    assert back[0].attrs == {"tokens": 3}
+    assert back[0].duration_ms == pytest.approx(500.0)
+    assert back[1].open
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + StatsDict compatibility
+# ---------------------------------------------------------------------------
+
+def test_registry_types_and_snapshot():
+    reg = MetricsRegistry()
+    c = reg.counter("serving.steps")
+    c.inc()
+    c.inc(2)
+    reg.gauge("fleet.queue_depth", {"worker": "a"}).set(7)
+    h = reg.histogram("serving.chunk_ms")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    assert reg.counter("serving.steps") is c       # get-or-create
+    with pytest.raises(TypeError, match="already registered"):
+        reg.gauge("serving.steps")
+    snap = reg.snapshot()
+    assert snap["serving.steps"] == 3.0
+    assert snap['fleet.queue_depth{worker="a"}'] == 7.0
+    assert snap["serving.chunk_ms/count"] == 4
+    assert snap["serving.chunk_ms/p50"] == pytest.approx(2.5)
+
+
+def test_observe_bandwidth_requires_known_provenance():
+    reg = MetricsRegistry()
+    g = reg.observe_bandwidth("codec.decode_bw_bytes_per_s", 1e9,
+                              "measured", codec="int8", worker="w0")
+    assert dict(g.labels)["provenance"] == "measured"
+    assert g.value == 1e9
+    with pytest.raises(ValueError, match="provenance"):
+        reg.observe_bandwidth("link.bw_mbps", 100.0, "guessed")
+
+
+def test_stats_dict_is_a_drop_in_dict():
+    reg = MetricsRegistry()
+    stats = StatsDict(reg, "fleet.router",
+                      {"routed": 0, "rejections": {}},
+                      labels={"worker": "r0"})
+    stats["routed"] += 2
+    stats["rejections"]["full"] = 1          # non-scalar stays plain
+    assert dict(stats) == {"routed": 2, "rejections": {"full": 1}}
+    assert isinstance(stats["routed"], int)
+    # the scalar is registry-backed under the unified naming scheme
+    m = reg.counter("fleet.router.routed", {"worker": "r0"})
+    assert m.value == 2.0
+    assert m.full_name == 'fleet.router.routed{worker="r0"}'
+
+
+def test_prometheus_text_merges_registries():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("rpc.client.frames_in", {"worker": "w0"}).inc(5)
+    b.histogram("serving.chunk_ms").observe(2.0)
+    text = prometheus_text(a, b)
+    assert '# TYPE rpc_client_frames_in counter' in text
+    assert 'rpc_client_frames_in{worker="w0"} 5' in text
+    assert "serving_chunk_ms_count 1" in text
+    assert "serving_chunk_ms_p99 2" in text
+
+
+# ---------------------------------------------------------------------------
+# virtual-clock fleet traces: structure, reconciliation, determinism
+# ---------------------------------------------------------------------------
+
+def test_fleet_virtual_request_tree_reconciles():
+    reg = _fleet(["a"])
+    tracer = Tracer(name="fleet", clock=lambda: 0.0)
+    router = FleetRouter(reg, clock=lambda: 0.0)
+    router.attach_tracer(tracer)
+    reqs = [Request(prompt=_prompt(8), n_new=2, arrival_ts=0.1 * i)
+            for i in range(3)]
+    out = router.drive_virtual(reqs)
+    assert len(out["completions"]) == 3
+    for c in out["completions"]:
+        tid = request_trace_id(c.request_id)
+        tree = build_tree(tracer.trace(tid))
+        [root] = tree[None]
+        assert root.name == "route" and not root.open
+        assert root.end == pytest.approx(c.finished_ts)
+        kids = [s.name for s in tree[root.span_id]]
+        assert "request" in kids
+        # queue_wait + decode leaves partition arrival -> finished exactly
+        bd = request_breakdown(tracer.spans, tid)
+        want_ms = 1e3 * (c.finished_ts - c.arrival_ts)
+        assert sum(bd.values()) == pytest.approx(want_ms, rel=1e-9)
+
+
+def test_kill_retry_reserve_is_one_tree_per_request():
+    reg = _fleet(["a", "b"])
+    tracer = Tracer(name="fleet", clock=lambda: 0.0)
+    router = FleetRouter(reg, clock=lambda: 0.0,
+                         retry=RetryPolicy(max_retries=3,
+                                           backoff_base_s=0.01))
+    router.attach_tracer(tracer)
+    reqs = [Request(prompt=_prompt(8, seed=i), n_new=2, arrival_ts=0.0)
+            for i in range(6)]
+    chaos = ChaosController(
+        reg, FaultSchedule([FaultSchedule.kill("b", 0.01)]))
+    out = router.drive_virtual(reqs, events=chaos.events())
+    assert len(out["completions"]) == 6 and not out["shed"]
+    snap = router.stats_snapshot()
+    assert snap["failovers"] >= 1 and "b" in snap["dead"]
+    # failover drained b's requests and re-routed them under the SAME
+    # route root: each request keeps exactly one tree with one root and
+    # exactly one served `request` subtree (exactly-once, in the trace)
+    for req in reqs:
+        spans = tracer.trace(req.trace_id)
+        assert spans, f"request {req.id} left no trace"
+        roots = build_tree(spans)[None]
+        assert len(roots) == 1 and roots[0].name == "route"
+        assert not roots[0].open
+        assert sum(s.name == "request" for s in spans) == 1
+    retries = [s for s in tracer.spans if s.name == "retry"]
+    assert retries and all(s.parent_id for s in retries)
+    # the router's counters surface in the shared registry too
+    [m] = [m for m in router.metrics.find("fleet.router.routed")]
+    assert m.value == snap["routed"]
+
+
+def _chaos_trace(seed):
+    """One seeded chaos drive on the virtual clock; returns the rendered
+    forest (ids excluded — they differ run-to-run with the global request
+    counter, the *structure and timing* must not)."""
+    reg = _fleet(["a", "b"])
+    tracer = Tracer(name="fleet", clock=lambda: 0.0)
+    router = FleetRouter(reg, clock=lambda: 0.0,
+                         retry=RetryPolicy(max_retries=3,
+                                           backoff_base_s=0.01))
+    router.attach_tracer(tracer)
+    rng = np.random.RandomState(seed)
+    arrivals = np.cumsum(rng.exponential(1 / 25.0, 10))
+    reqs = [Request(prompt=rng.randint(0, 64, 8), n_new=2,
+                    arrival_ts=float(arrivals[i])) for i in range(10)]
+    chaos = ChaosController(reg, FaultSchedule.parse(
+        "kill:b@0.05; revive:b@0.40; straggle:a@0.10:2.5"))
+    out = router.drive_virtual(reqs, events=chaos.events())
+    assert len(out["completions"]) + len(out["shed"]) == 10
+    return "\n\n".join("\n".join(tree_lines(tracer.trace(tid)))
+                       for tid in tracer.trace_ids())
+
+
+def test_chaos_trace_deterministic():
+    """Same seed, same schedule -> byte-identical span forest.  This is
+    the regression the virtual clock + counter span ids buy: any
+    wall-clock or RNG leak into the trace path breaks it."""
+    a, b = _chaos_trace(seed=3), _chaos_trace(seed=3)
+    assert a == b
+    assert a != _chaos_trace(seed=4)        # and it is not vacuous
+
+
+# ---------------------------------------------------------------------------
+# RPC wire contract: forward/backward compatibility of trace fields
+# ---------------------------------------------------------------------------
+
+def test_trace_fields_ride_the_frame_at_version_1():
+    sub = SubmitRequest(request_id=3, n_new=2, trace_id="req:3",
+                        parent_span="cli:1",
+                        prompt=np.arange(4, dtype=np.int32))
+    frame = sub.encode_frame()
+    head = _FRAME.unpack(frame[:FRAME_OVERHEAD])
+    assert head[1] == PROTOCOL_VERSION == 1        # no version bump
+    hlen = head[3]
+    back = Message.decode_frame(SubmitRequest.KIND,
+                                frame[FRAME_OVERHEAD:FRAME_OVERHEAD + hlen],
+                                frame[FRAME_OVERHEAD + hlen:])
+    assert back.trace_id == "req:3" and back.parent_span == "cli:1"
+    np.testing.assert_array_equal(np.asarray(back.prompt), sub.prompt)
+
+
+def test_unknown_header_fields_are_ignored():
+    """A peer from the future can add fields without breaking us — the
+    same mechanism that lets trace_id/parent_span ride to old builds."""
+    sub = SubmitRequest(request_id=3, n_new=2,
+                        prompt=np.arange(4, dtype=np.int32))
+    frame = sub.encode_frame()
+    hlen = _FRAME.unpack(frame[:FRAME_OVERHEAD])[3]
+    doc = json.loads(frame[FRAME_OVERHEAD:FRAME_OVERHEAD + hlen])
+    doc["f"]["from_the_future"] = {"x": 1}
+    back = Message.decode_frame(SubmitRequest.KIND,
+                                json.dumps(doc).encode(),
+                                frame[FRAME_OVERHEAD + hlen:])
+    assert back.request_id == 3
+    assert not hasattr(back, "from_the_future")
+
+
+def test_pre_trace_build_drops_trace_fields():
+    """Decode a traced submit with a message class shaped like the
+    pre-trace protocol: the unknown trace fields are dropped, the rest
+    decodes — an old worker just serves the request untraced."""
+    @wire.message
+    class LegacySubmit(wire.Message):
+        KIND = 99
+        request_id: int = 0
+        n_new: int = 0
+    try:
+        doc = {"f": {"request_id": 4, "n_new": 2,
+                     "trace_id": "req:4", "parent_span": "cli:7"}, "t": []}
+        msg = Message.decode_frame(99, json.dumps(doc).encode(), b"")
+        assert (msg.request_id, msg.n_new) == (4, 2)
+        assert not hasattr(msg, "trace_id")
+    finally:
+        wire._KINDS.pop(99, None)
+
+
+def test_old_worker_completion_defaults_to_no_spans():
+    # a pre-trace worker's CompletionMsg header has no `spans` key
+    doc = {"f": {"request_id": 9, "plan_key": "local"}, "t": []}
+    msg = Message.decode_frame(CompletionMsg.KIND,
+                               json.dumps(doc).encode(), b"")
+    assert msg.spans == [] and msg.request_id == 9
+
+
+# ---------------------------------------------------------------------------
+# cross-process re-parenting (in-process WorkerServer over a socketpair)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def traced_rig():
+    from repro.rpc.worker import WorkerServer, build_session
+    session, hardware, link = build_session("llama3.2-1b", vocab=64, seed=0)
+    session.profile(backend="simulated", hardware=hardware, link=link)
+    server = WorkerServer(session, name="inproc", arch="llama3.2-1b",
+                          n_slots=2, chunk=3, max_len=24,
+                          hardware=hardware, link=link)
+    client, conn = socket.socketpair()
+    client.settimeout(30.0)
+    t = threading.Thread(target=server.serve_conn, args=(conn,), daemon=True)
+    t.start()
+    yield client, server
+    server._shutdown = True
+    client.close()
+    conn.close()
+    t.join(timeout=5.0)
+
+
+def _ask(client, msg, want, deadline_s=60.0):
+    send_message(client, msg)
+    others = []
+    end = time.monotonic() + deadline_s
+    while time.monotonic() < end:
+        got, _ = recv_message(client, timeout=deadline_s)
+        if isinstance(got, want):
+            return got, others
+        others.append(got)
+    raise AssertionError(f"no {want.__name__} within {deadline_s}s")
+
+
+def test_worker_ships_spans_that_reparent_under_dispatch(traced_rig):
+    client, server = traced_rig
+    _ask(client, Hello(name="t"), HelloAck)
+    assert server.tracer is None             # demand-driven: off until asked
+    tracer = Tracer(name="cli")
+    d = tracer.start("dispatch", kind="rpc", trace_id="req:7",
+                     worker="inproc", request_id=7)
+    sub = SubmitRequest(request_id=7, n_new=6, seed=3, trace_id="req:7",
+                        parent_span=d.span_id,
+                        prompt=np.arange(1, 6, dtype=np.int32))
+    done, others = _ask(client, sub, CompletionMsg)
+    for m in others:
+        if isinstance(m, TokenChunk):
+            tracer.ingest(m.spans)
+    tracer.ingest(done.spans)
+    tracer.finish(d, at=done.finished_ts)
+    assert server.tracer is not None         # first traced submit armed it
+
+    spans = tracer.trace("req:7")
+    shipped = [s for s in spans if s.span_id.startswith("rpc:inproc:")]
+    assert shipped and all(s.worker == "inproc" for s in shipped)
+    names = {s.name for s in shipped}
+    assert {"request", "queue_wait", "prefill", "admit", "decode"} <= names
+    # one tree: client dispatch at the root, the worker's request tree
+    # grafted under it via the propagated parent_span
+    tree = build_tree(spans)
+    assert [s.name for s in tree[None]] == ["dispatch"]
+    assert "request" in [s.name for s in tree[d.span_id]]
+    # stage leaves partition the worker-side request wall
+    bd = request_breakdown(spans, "req:7")
+    req_root = next(s for s in shipped if s.name == "request")
+    assert sum(bd.values()) == pytest.approx(req_root.duration_ms, rel=0.10)
+
+
+def test_duplicate_submit_does_not_duplicate_spans(traced_rig):
+    """Exactly-once tracing: the cached completion re-ships its spans,
+    the client's ingest drops them by (trace, span) id."""
+    client, _ = traced_rig
+    tracer = Tracer(name="cli")
+    d = tracer.start("dispatch", kind="rpc", trace_id="req:8",
+                     worker="inproc")
+    sub = SubmitRequest(request_id=8, n_new=6, seed=4, trace_id="req:8",
+                        parent_span=d.span_id,
+                        prompt=np.arange(2, 7, dtype=np.int32))
+    done, others = _ask(client, sub, CompletionMsg)
+    for m in others:
+        if isinstance(m, TokenChunk):
+            tracer.ingest(m.spans)
+    tracer.ingest(done.spans)
+    before = len(tracer.trace("req:8"))
+    # retry after a (simulated) reconnect: same id, same trace context
+    done2, others2 = _ask(client, sub, CompletionMsg)
+    for m in others2:
+        if isinstance(m, TokenChunk):
+            tracer.ingest(m.spans)
+    assert tracer.ingest(done2.spans) == 0
+    assert len(tracer.trace("req:8")) == before
+    np.testing.assert_array_equal(np.asarray(done2.tokens),
+                                  np.asarray(done.tokens))
+
+
+# ---------------------------------------------------------------------------
+# trace -> calibration adapter
+# ---------------------------------------------------------------------------
+
+def test_from_trace_rebuilds_dispatch_records():
+    tr = Tracer(name="s", clock=lambda: 0.0)
+    tr.record("dispatch", start=1.0, end=1.1, kind="session",
+              trace_id="t", exec_key="prism4", batch=4,
+              bandwidth_mbps=200.0, codec="int8", wire_bytes=123,
+              substituted=True)
+    tr.record("dispatch", start=0.0, end=0.5, kind="serving",
+              trace_id="t")                       # wrong kind: skipped
+    tr.start("dispatch", kind="session", trace_id="t",
+             exec_key="local", batch=1)           # open: skipped
+    tr.record("dispatch", start=0.0, end=0.5, kind="session",
+              trace_id="t")                       # no exec_key: skipped
+    recs = from_trace(tr.spans)
+    assert len(recs) == 1
+    r = recs[0]
+    assert r.exec_key == "prism4" and r.batch == 4
+    assert r.wall_ms == pytest.approx(100.0)
+    assert r.decision is None and r.substituted
+    assert r.codec == "int8" and r.wire_bytes == 123
+    assert r.bandwidth_mbps == pytest.approx(200.0)
